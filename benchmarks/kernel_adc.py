@@ -1,0 +1,51 @@
+"""Kernel microbenchmarks: ADC scan + pairwise table (CPU wall time of the
+jitted XLA paths; the Pallas kernels target TPU and are validated in
+interpret mode by the tests — their roofline lives in EXPERIMENTS §Roofline).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, repeats=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    n, m, k, q = 200_000, 16, 256, 64
+    codes = jnp.asarray(rng.integers(0, k, (n, m)), jnp.uint8)
+    lut = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    luts = jnp.asarray(rng.normal(size=(q, m, k)).astype(np.float32))
+
+    f1 = jax.jit(lambda c, l: ops.adc_scan(c, l, backend="ref"))
+    t = _time(f1, codes, lut)
+    rows.append(("kernel/adc_scan_1q_200k", t * 1e6,
+                 f"gcodes_per_s={n / t / 1e9:.2f}"))
+
+    f2 = jax.jit(lambda c, l: ops.adc_scan_batch(c, l, backend="ref"))
+    t = _time(f2, codes, luts)
+    rows.append(("kernel/adc_scan_batch64_200k", t * 1e6,
+                 f"gscores_per_s={n * q / t / 1e9:.2f}"))
+
+    x = jnp.asarray(rng.normal(size=(8192, m, 8)).astype(np.float32))
+    cb = jnp.asarray(rng.normal(size=(m, k, 8)).astype(np.float32))
+    f3 = jax.jit(lambda a, b: ops.pq_pairwise(a, b, backend="ref"))
+    t = _time(f3, x, cb)
+    rows.append(("kernel/pq_pairwise_8k", t * 1e6,
+                 f"gflops={2 * 8192 * m * k * 8 / t / 1e9:.2f}"))
+    return rows

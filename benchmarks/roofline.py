@@ -1,0 +1,186 @@
+"""Roofline analysis from the dry-run report (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch × shape × mesh), all PER-DEVICE (cost_analysis and
+the partitioned-HLO collective shapes are already per-device):
+
+  compute    = flops_analytic / PEAK_FLOPS_BF16
+  memory     = hlo_bytes      / HBM_BW
+  collective = collective_bytes / ICI_BW
+
+FLOPs source: XLA's cost_analysis counts scan/while bodies ONCE (loop trip
+counts are not multiplied in), so for scanned models it under-reports by
+~n_layers×microbatches. We therefore use ANALYTIC model FLOPs as the
+primary compute term (6·N·D train / 2·N·D decode/serve conventions, per
+family below) and report the raw HLO number alongside as `flops_hlo`.
+Bytes: cost_analysis "bytes accessed" has the same scan caveat; we take
+max(bytes_accessed, 2×param_bytes/device + activation estimate) — and
+report both. The MODEL_FLOPS/HLO ratio column in EXPERIMENTS.md uses the
+corrected analytic values.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW  # noqa: E402
+
+
+def _mesh_devices(mesh_name: str) -> int:
+    return 512 if "2pod" in mesh_name else 256
+
+
+def analytic_flops(rec: dict) -> float:
+    """Global model FLOPs per step for the cell (then divided per device)."""
+    arch, shape, meta = rec["arch"], rec["shape"], rec.get("meta", {})
+    mode = meta.get("mode", "")
+    if "params" in meta:  # LM family
+        n_active = meta.get("active_params", meta["params"])
+        toks = meta.get("tokens", 0)
+        if mode == "train":
+            return 6.0 * n_active * toks
+        if mode == "prefill":
+            return 2.0 * n_active * toks
+        if mode == "decode":
+            # 2·N per token + attention over the KV cache
+            kv = meta.get("kv_len", 0)
+            attn = 0.0
+            if kv:
+                attn = 4.0 * toks * kv * _lm_attn_dims(arch)
+            return 2.0 * n_active * toks + attn
+    if arch == "gat-cora":
+        e = meta.get("edges", 0)
+        n = meta.get("nodes", 0)
+        # 2 layers: SDDMM + SpMM per edge on (heads·d) + dense projections
+        per_edge = 2 * 2 * 64 * 3
+        per_node = 2 * 2 * 1433 * 64
+        f = e * per_edge + n * per_node
+        return 3.0 * f if mode == "train" else f
+    if arch in ("dlrm-mlperf", "deepfm", "din", "bert4rec"):
+        batch = meta.get("batch", meta.get("n_candidates", 0))
+        per_ex = {"dlrm-mlperf": 2 * (13 * 512 + 512 * 256 + 256 * 128
+                                      + 479 * 1024 + 1024 * 1024
+                                      + 1024 * 512 + 512 * 256 + 256
+                                      + 27 * 27 * 128),
+                  "deepfm": 2 * (390 * 400 + 400 * 400 + 400 * 400 + 400
+                                 + 39 * 10 * 2),
+                  "din": 2 * (100 * (4 * 18 * 80 + 80 * 40 + 40)
+                              + 54 * 200 + 200 * 80 + 80),
+                  "bert4rec": 2 * (200 * (64 * 64 * 4 + 64 * 256 * 2)
+                                   + 200 * 200 * 64 * 2) * 2}[arch]
+        if meta.get("mode") == "retrieval":
+            d = meta.get("d_emb", 64)
+            per_ex = 2 * d
+            batch = meta.get("n_candidates", 10 ** 6)
+        f = per_ex * batch
+        return 3.0 * f if mode == "train" else f
+    if arch == "rpq":
+        if rec["shape"] == "quant_train":
+            b = meta.get("batch", 8192)
+            # pairwise tables for 3 triplet legs + h routing candidates
+            per_vec = 2 * 16 * 256 * 8 + 2 * 128 * 128  # pq_pairwise + rotate
+            return 3.0 * (3 * b + 4096 * 17) * per_vec
+        if rec["shape"] in ("adc_bulk", "serve_1m"):
+            n = meta.get("n_codes", meta.get("n_base", 10 ** 6))
+            q = meta.get("queries", 1024)
+            return q * n * 16.0  # M adds per code per query
+        if rec["shape"] == "encode_bulk":
+            return meta.get("n", 10 ** 6) * (2 * 16 * 256 * 8 + 2 * 128 * 128)
+    return 0.0
+
+
+def _lm_attn_dims(arch: str) -> float:
+    dims = {"granite-3-8b": 32 * 128, "llama3-405b": 128 * 128,
+            "starcoder2-3b": 24 * 128, "granite-moe-1b-a400m": 16 * 64,
+            "olmoe-1b-7b": 16 * 128}
+    return float(dims.get(arch, 4096))
+
+
+def analyze(report_path: str):
+    recs = json.load(open(report_path))
+    rows = []
+    for r in recs:
+        if not r.get("ok"):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "ok": False,
+                         "error": r.get("error", "")[:100]})
+            continue
+        ndev = _mesh_devices(r["mesh"])
+        f_analytic = analytic_flops(r) / ndev       # per device
+        f_hlo = r["cost"]["flops"]
+        bytes_hlo = r["cost"]["bytes_accessed"]
+        mem = r["memory"]
+        # memory floor: every live byte (args+temp) touched at least once
+        bytes_floor = mem["argument_bytes"] + mem["temp_bytes"]
+        coll = r["collectives"].get("total", 0)
+        t_compute = f_analytic / PEAK_FLOPS_BF16
+        t_memory = max(bytes_hlo, bytes_floor) / HBM_BW
+        t_coll = coll / ICI_BW
+        dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                       (t_coll, "collective"))[1]
+        step_time = max(t_compute, t_memory, t_coll)
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "ok": True,
+            "flops_analytic_perdev": f_analytic, "flops_hlo": f_hlo,
+            "bytes_hlo": bytes_hlo, "bytes_floor": bytes_floor,
+            "collective_bytes": coll,
+            "t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dominant,
+            "bound_step_s": step_time,
+            "model_flop_frac": (t_compute / step_time) if step_time else 0.0,
+            "useful_vs_hlo": (f_analytic / f_hlo) if f_hlo else float("nan"),
+            "mem_gb_perdev": (mem["argument_bytes"] + mem["temp_bytes"]) / 1e9,
+            "fits_16g": (mem["argument_bytes"] + mem["temp_bytes"]) < 16e9,
+            "collectives": {k: v for k, v in r["collectives"].items()
+                            if not k.startswith("count_") and k != "total"},
+        })
+    return rows
+
+
+def to_markdown(rows, mesh_filter="1pod_16x16") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "roofline-frac | mem GB/dev | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if not r.get("ok") or r["mesh"] != mesh_filter:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} | "
+            f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+            f"{r['dominant']} | {r['model_flop_frac']:.2f} | "
+            f"{r['mem_gb_perdev']:.2f} | {'Y' if r['fits_16g'] else 'N'} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report", default="reports/dryrun.json")
+    ap.add_argument("--out", default="reports/roofline.json")
+    ap.add_argument("--markdown", default="reports/roofline.md")
+    args = ap.parse_args()
+    rows = analyze(args.report)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    json.dump(rows, open(args.out, "w"), indent=1)
+    md = ["# Roofline (single-pod 16×16, per-device)\n",
+          to_markdown(rows, "1pod_16x16"),
+          "\n\n# Roofline (multi-pod 2×16×16, per-device)\n",
+          to_markdown(rows, "2pod_2x16x16")]
+    open(args.markdown, "w").write("\n".join(md))
+    ok = [r for r in rows if r.get("ok")]
+    print(f"analyzed {len(ok)} cells → {args.out}, {args.markdown}")
+    for r in ok:
+        if r["mesh"] == "1pod_16x16":
+            print(f"{r['arch']:22s} {r['shape']:14s} dom={r['dominant']:10s} "
+                  f"frac={r['model_flop_frac']:.2f} mem={r['mem_gb_perdev']:.1f}G")
+
+
+if __name__ == "__main__":
+    main()

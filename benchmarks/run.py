@@ -1,0 +1,66 @@
+"""Benchmark driver — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,table67] [--list]
+
+Prints ``name,us_per_call,derived`` CSV rows (brief's contract). Scale via
+REPRO_BENCH_SCALE=quick|full (default quick: single-core-CPU sized).
+Roofline terms come from the separate dry-run pipeline:
+    python -m repro.launch.dryrun && python -m benchmarks.roofline
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def sections():
+    from benchmarks import kernel_adc, paper_tables as pt
+
+    return {
+        "kernels": kernel_adc.run,
+        "table2": pt.table2_features,
+        "fig5": pt.fig5_hybrid,
+        "fig67": pt.fig6_memory,
+        "table45": pt.table45_cost,
+        "table67": pt.table67_ablation,
+        "fig8": pt.fig8_kposneg,
+        "fig9": pt.fig9_km,
+        "fig11": pt.fig11_scale,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section names")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    secs = sections()
+    if args.list:
+        print("\n".join(secs))
+        return
+    chosen = (args.only.split(",") if args.only else list(secs))
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in chosen:
+        t0 = time.time()
+        try:
+            rows = secs[name]()
+            for r in rows:
+                print(f"{r[0]},{r[1]:.2f},{r[2]}", flush=True)
+            print(f"_section/{name},{(time.time()-t0)*1e6:.0f},wall_s="
+                  f"{time.time()-t0:.1f}", flush=True)
+        except Exception:
+            failures += 1
+            print(f"_section/{name},0,FAILED", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

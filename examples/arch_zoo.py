@@ -1,0 +1,102 @@
+"""Architecture-zoo tour: one reduced-config step of every assigned arch.
+
+    PYTHONPATH=src python examples/arch_zoo.py [--arch granite-3-8b]
+
+Instantiates each --arch's REDUCED config, runs one train step (and a
+decode step for the LMs) on CPU, printing loss/shape/params — the same
+models the 512-chip dry-run lowers at full scale (launch/dryrun.py).
+"""
+
+import argparse
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, list_archs
+
+
+def run_lm(arch):
+    from repro.models import transformer as tf
+
+    cfg = get_arch(arch).make_reduced()
+    key = jax.random.PRNGKey(0)
+    init, step, opt_init = tf.make_train_step(cfg, lr=1e-3)
+    params = init(key)
+    opt = opt_init(params)
+    toks = jax.random.randint(key, (4, 16), 0, cfg.vocab)
+    params, opt, loss = jax.jit(step)(params, opt, toks, toks)
+    logits, cache = tf.prefill(cfg, params, toks, max_len=24)
+    logits, cache = tf.decode_step(cfg, params, cache, jnp.argmax(logits, -1))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{arch:24s} loss={float(loss):7.3f} decode_logits={logits.shape} "
+          f"params={n/1e6:.2f}M")
+
+
+def run_gnn(arch):
+    from repro.models import gnn
+
+    cfg = get_arch(arch).make_reduced()
+    key = jax.random.PRNGKey(0)
+    n, e = 128, 512
+    x = jax.random.normal(key, (n, cfg.d_in))
+    src = jax.random.randint(key, (e,), 0, n)
+    dst = jax.random.randint(jax.random.PRNGKey(1), (e,), 0, n)
+    y = jax.random.randint(key, (n,), 0, cfg.n_classes)
+    init, step, opt_init = gnn.make_train_step(cfg)
+    params = init(key)
+    opt = opt_init(params)
+    params, opt, loss = jax.jit(step)(params, opt, x, src, dst, y,
+                                      jnp.ones((n,), bool))
+    print(f"{arch:24s} loss={float(loss):7.3f} nodes={n} edges={e}")
+
+
+def run_recsys(arch):
+    from repro.models import recsys as rs
+
+    cfg = get_arch(arch).make_reduced()
+    key = jax.random.PRNGKey(0)
+    b = 32
+    if arch == "dlrm-mlperf":
+        params = rs.init_dlrm(key, cfg)
+        out = rs.dlrm_forward(cfg, params, jax.random.normal(key, (b, cfg.n_dense)),
+                              jax.random.randint(key, (b, cfg.n_sparse), 0, 50))
+    elif arch == "deepfm":
+        params = rs.init_deepfm(key, cfg)
+        out = rs.deepfm_forward(cfg, params,
+                                jax.random.randint(key, (b, cfg.n_fields), 0, 40))
+    elif arch == "din":
+        params = rs.init_din(key, cfg)
+        hist = jax.random.randint(key, (b, cfg.seq_len), 0, cfg.n_items)
+        out = rs.din_forward(cfg, params, hist, jnp.ones_like(hist, bool),
+                             jax.random.randint(key, (b,), 0, cfg.n_items))
+    else:  # bert4rec
+        params = rs.init_bert4rec(key, cfg)
+        items = jax.random.randint(key, (b, cfg.seq_len), 0, cfg.n_items)
+        out = rs.bert4rec_encode(cfg, params, items,
+                                 jnp.ones_like(items, bool))[:, -1, 0]
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{arch:24s} out_mean={float(jnp.mean(out)):7.3f} "
+          f"params={n/1e6:.2f}M")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list_archs() + [None])
+    args = ap.parse_args()
+    for arch in ([args.arch] if args.arch else list_archs()):
+        spec = get_arch(arch)
+        if spec.family == "lm":
+            run_lm(arch)
+        elif spec.family == "gnn":
+            run_gnn(arch)
+        elif spec.family == "recsys":
+            run_recsys(arch)
+        else:
+            print(f"{arch:24s} (RPQ itself — see quickstart.py)")
+
+
+if __name__ == "__main__":
+    main()

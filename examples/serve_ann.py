@@ -1,0 +1,68 @@
+"""Batched ANN serving demo: both paper scenarios + QPS measurement.
+
+    PYTHONPATH=src python examples/serve_ann.py [--n 20000] [--h 16 32 64]
+
+Builds an index (Vamana + trained RPQ codes) and serves query batches via
+ (a) the in-memory engine (PQ distances only — paper §7 scenario 2) and
+ (b) the DiskANN hybrid engine (ADC routing + exact rerank, modeled SSD IO).
+Reports a QPS / recall@10 operating curve — the paper's Fig. 5/6 axes.
+"""
+
+import argparse
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+
+from repro.core import RPQConfig, TrainConfig, train_rpq
+from repro.data.synth import DatasetSpec, synth
+from repro.graphs import build_vamana
+from repro.graphs.knn import knn_ids
+from repro.pq import base
+from repro.search.engine import HybridEngine, InMemoryEngine
+from repro.search.metrics import measure_qps, recall_at_k
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--h", type=int, nargs="+", default=[8, 16, 32, 64])
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+
+    ds = synth(DatasetSpec("serve", args.dim, args.n, args.queries, 96,
+                           0.35, 0.1, seed=3))
+    graph = build_vamana(jax.random.PRNGKey(0), ds.base, r=24, l=48)
+    gt, _ = knn_ids(ds.base, ds.queries, 10)
+
+    cfg = RPQConfig(dim=args.dim, m=8, k=64)
+    tcfg = TrainConfig(steps=args.steps, refresh_every=args.steps // 3,
+                       triplet_batch=512, routing_batch=512,
+                       routing_pool_queries=96, log_every=args.steps // 3)
+    rpq = train_rpq(jax.random.PRNGKey(1), ds.train, graph, cfg=cfg,
+                    tcfg=tcfg)
+    codes = rpq.encode(ds.base)
+    lut_fn = rpq.lut_fn()
+
+    mem = InMemoryEngine(graph, codes, lut_fn)
+    hyb = HybridEngine(graph, codes, lut_fn, vectors=ds.base)
+    print(f"index: n={args.n} codes={codes.shape[1]}B/vec "
+          f"resident={mem.memory_bytes()/1e6:.1f}MB "
+          f"(full vectors would be {ds.base.size*4/1e6:.1f}MB)")
+    print(f"{'engine':8s} {'h':>4s} {'recall@10':>10s} {'QPS':>9s} "
+          f"{'hops':>6s} {'SSD ms/q':>9s}")
+    for h in args.h:
+        qps, res = measure_qps(lambda q: mem.search(q, k=10, h=h), ds.queries)
+        print(f"{'inmem':8s} {h:4d} {recall_at_k(res.ids, gt, 10):10.3f} "
+              f"{qps:9.1f} {float(res.hops.mean()):6.1f} {'—':>9s}")
+        qps, res = measure_qps(lambda q: hyb.search(q, k=10, h=h), ds.queries)
+        io_ms = float(np.mean(np.asarray(hyb.io_time(res)))) * 1e3
+        print(f"{'hybrid':8s} {h:4d} {recall_at_k(res.ids, gt, 10):10.3f} "
+              f"{qps:9.1f} {float(res.hops.mean()):6.1f} {io_ms:9.2f}")
+
+
+if __name__ == "__main__":
+    main()

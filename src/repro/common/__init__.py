@@ -1,0 +1,28 @@
+"""Shared substrate: optimizers, schedules, RNG and pytree helpers.
+
+Nothing in here depends on the rest of the package; everything else depends
+on this. No optax/flax in the environment — the optimizer stack is our own
+(and is what the 405B FSDP path shards, so owning it is a feature: we control
+the dtype/sharding of every slot).
+"""
+
+from repro.common.optim import (  # noqa: F401
+    adam,
+    sgd,
+    OptState,
+    Optimizer,
+    one_cycle,
+    constant_schedule,
+    cosine_schedule,
+    warmup_cosine,
+    clip_by_global_norm,
+)
+from repro.common.treeutil import (  # noqa: F401
+    tree_size,
+    tree_bytes,
+    tree_zeros_like,
+    tree_cast,
+    tree_add,
+    tree_scale,
+    global_norm,
+)

@@ -1,0 +1,185 @@
+"""Functional optimizers + LR schedules (optax-free, shardable pytrees).
+
+Design notes
+------------
+* An :class:`Optimizer` is a pair of pure functions ``init`` / ``update``.
+  State is a plain pytree, so under ``jax.jit`` it inherits the params'
+  sharding (FSDP shards optimizer slots for free).
+* ``slot_dtype`` lets large models (llama3-405b on a 256-chip pod) keep the
+  Adam moments in bf16 — the difference between fitting in 16 GB HBM/chip or
+  not (see EXPERIMENTS.md §Perf).
+* ``one_cycle`` is the schedule prescribed by the RPQ paper (§6: Adam,
+  lr=1e-3, one-cycle, decay rate 0.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.treeutil import global_norm
+
+Schedule = Callable[[jax.Array], jax.Array]  # step -> lr multiplier/value
+
+
+# --------------------------------------------------------------------------
+# Schedules
+# --------------------------------------------------------------------------
+
+def constant_schedule(lr: float) -> Schedule:
+    def sched(step):
+        return jnp.asarray(lr, jnp.float32)
+    return sched
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.0) -> Schedule:
+    def sched(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return sched
+
+
+def warmup_cosine(lr: float, total_steps: int, warmup_steps: int,
+                  final_frac: float = 0.0) -> Schedule:
+    def sched(step):
+        warm = lr * step / max(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return sched
+
+
+def one_cycle(lr: float, total_steps: int, pct_start: float = 0.3,
+              div_factor: float = 25.0, final_div_factor: float = 1e4) -> Schedule:
+    """One-cycle LR: linear ramp to `lr`, cosine anneal to lr/final_div_factor.
+
+    Matches the paper's training recipe (§6). `div_factor` sets the starting
+    lr = lr / div_factor.
+    """
+    up_steps = max(int(total_steps * pct_start), 1)
+    down_steps = max(total_steps - up_steps, 1)
+    lo0 = lr / div_factor
+    lo1 = lr / final_div_factor
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        up = lo0 + (lr - lo0) * jnp.clip(step / up_steps, 0.0, 1.0)
+        t = jnp.clip((step - up_steps) / down_steps, 0.0, 1.0)
+        down = lo1 + (lr - lo1) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < up_steps, up, down)
+    return sched
+
+
+# --------------------------------------------------------------------------
+# Optimizers
+# --------------------------------------------------------------------------
+
+class OptState(NamedTuple):
+    step: jax.Array
+    inner: Any  # optimizer-specific slots (pytree)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any], tuple[Any, OptState]]
+    # update(grads, state, params) -> (new_params, new_state)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def sgd(schedule: Schedule, momentum: float = 0.0, nesterov: bool = False,
+        weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum:
+            m = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+        else:
+            m = None
+        return OptState(jnp.zeros((), jnp.int32), m)
+
+    def update(grads, state: OptState, params):
+        lr = schedule(state.step)
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p.astype(g.dtype),
+                                 grads, params)
+        if momentum:
+            m = jax.tree.map(lambda mm, g: momentum * mm + g, state.inner, grads)
+            eff = jax.tree.map(lambda mm, g: g + momentum * mm, m, grads) if nesterov else m
+        else:
+            m, eff = None, grads
+        new_params = jax.tree.map(
+            lambda p, g: (p - lr * g.astype(jnp.float32)).astype(p.dtype), params, eff)
+        return new_params, OptState(state.step + 1, m)
+
+    return Optimizer(init, update)
+
+
+def adam(schedule: Schedule, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0, slot_dtype: Optional[jnp.dtype] = None,
+         chunk_bytes: int = 1 << 62) -> Optimizer:
+    """AdamW. `slot_dtype=jnp.bfloat16` halves optimizer memory (405B option).
+
+    The update math always runs in fp32; only the *stored* moments are cast.
+    Leaves larger than `chunk_bytes` update under a lax.scan over their
+    leading axis. Disabled by default: measured WORSE on the 405B step (scan
+    outputs cannot alias their inputs → extra full-size buffers; the fused
+    elementwise chain needs no chunking — EXPERIMENTS.md §Perf iter 7).
+    """
+
+    def _slot(p):
+        dt = slot_dtype or (p.dtype if jnp.issubdtype(p.dtype, jnp.floating) else jnp.float32)
+        return jnp.zeros(p.shape, dt)
+
+    def init(params):
+        m = jax.tree.map(_slot, params)
+        v = jax.tree.map(_slot, params)
+        return OptState(jnp.zeros((), jnp.int32), (m, v))
+
+    def update(grads, state: OptState, params):
+        m0, v0 = state.inner
+        step = state.step + 1
+        lr = schedule(state.step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd_math(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return newp, m32.astype(m.dtype), v32.astype(v.dtype)
+
+        def upd(p, g, m, v):
+            big = (p.ndim >= 2 and p.shape[0] > 1
+                   and p.size * 4 > chunk_bytes)
+            if not big:
+                return upd_math(p, g, m, v)
+            def body(_, slices):
+                return None, upd_math(*slices)
+            _, (newp, nm, nv) = jax.lax.scan(body, None, (p, g, m, v))
+            return newp, nm, nv
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(m0)
+        flat_v = treedef.flatten_up_to(v0)
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_params, OptState(step, (new_m, new_v))
+
+    return Optimizer(init, update)

@@ -1,0 +1,43 @@
+"""Small pytree utilities used across the framework."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_size(tree) -> int:
+    """Total number of elements across all leaves."""
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes across all leaves (per logical array, unsharded)."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_zeros_like(tree, dtype=None):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree)
+
+
+def tree_cast(tree, dtype):
+    """Cast every inexact leaf to `dtype`; leave integer leaves alone."""
+    def cast(x):
+        if jnp.issubdtype(x.dtype, jnp.inexact):
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(cast, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def global_norm(tree) -> jax.Array:
+    """L2 norm over all leaves (computed in fp32 for stability)."""
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))

@@ -1,0 +1,2 @@
+"""Per-architecture configs + registry (--arch <id>)."""
+from repro.configs.base import ArchSpec, ShapeSpec, get_arch, list_archs  # noqa: F401

@@ -1,0 +1,48 @@
+"""rpq (the paper's own system) as an 11th selectable arch.
+
+train  : 500K×128 quantizer training step (paper §8.1 training subset)
+serve  : batched ADC beam-search serving over a 1M-code index
+The dry-run cells prove the RPQ data-parallel layout shards to 512 chips.
+"""
+import dataclasses
+
+from repro.configs import base
+from repro.core.quantizer import RPQConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class RPQArchConfig:
+    name: str
+    quant: RPQConfig
+    n_base: int
+    n_train: int
+    beam_h: int = 32
+    graph_degree: int = 64
+
+
+def make_config() -> RPQArchConfig:
+    return RPQArchConfig(name="rpq", quant=RPQConfig(dim=128, m=16, k=256),
+                         n_base=1_000_000, n_train=500_000)
+
+
+def make_reduced() -> RPQArchConfig:
+    return RPQArchConfig(name="rpq-reduced",
+                         quant=RPQConfig(dim=32, m=4, k=32),
+                         n_base=2000, n_train=1000, beam_h=8,
+                         graph_degree=8)
+
+
+RPQ_SHAPES = (
+    base.ShapeSpec("quant_train", "train",
+                   dict(batch=8192, routing_batch=4096, h=16)),
+    base.ShapeSpec("serve_1m", "serve",
+                   dict(n_base=1_000_000, query_batch=4096, k=10)),
+    base.ShapeSpec("encode_bulk", "serve", dict(batch=1_000_000)),
+    base.ShapeSpec("adc_bulk", "retrieval",
+                   dict(n_codes=1_000_000, query_batch=1024)),
+)
+
+base.register(base.ArchSpec(
+    arch_id="rpq", family="rpq", make_config=make_config,
+    make_reduced=make_reduced, shapes=RPQ_SHAPES,
+    source="this paper"))

@@ -1,0 +1,142 @@
+"""Sampling-based feature extractor (paper §5, Algorithms 1 and 2).
+
+Neighborhood features — `n-propagation sampling` (Alg. 1), batched:
+for each anchor vertex v, gather its ≤n-hop neighborhood from the padded
+adjacency (fixed fan-out ⇒ static shapes), rank by exact distance to x_v,
+and draw one positive from the top-k_pos and one negative from the next
+k_neg ("hard negatives"). Emitted as id-triples (v, v+, v−); the loss
+quantizes them with the *current* differentiable quantizer so gradients
+reach rotation + codebooks through all three legs.
+
+Routing features (Alg. 2), batched: run real beam searches with the current
+quantizer's ADC distances (`beam_search_trace` records the ranked global
+candidate set b_i at every hop — exactly Definition 6), then label each b_i
+with the candidate that is truly closest to the query in the ORIGINAL space.
+The paper's text says "learn how to select the correct next-hop"; labeling
+with the quantizer's own (possibly wrong) choice would make the loss
+degenerate, so the supervision is the exact-distance argmin over b_i
+(offline we have the full vectors — this is training-time only).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.adjacency import Graph
+from repro.search import beam
+
+
+class TripletBatch(NamedTuple):
+    v: jax.Array       # (B,) anchor ids
+    vpos: jax.Array    # (B,) positive ids
+    vneg: jax.Array    # (B,) negative ids
+    valid: jax.Array   # (B,) bool — neighborhood was large enough
+
+
+class RoutingBatch(NamedTuple):
+    q: jax.Array        # (B, D) query vectors
+    cand: jax.Array     # (B, h) ranked candidate ids (sentinel-padded)
+    label: jax.Array    # (B,) index of the true best candidate within cand
+    valid: jax.Array    # (B,) bool — hop happened and ≥2 candidates
+
+
+# --------------------------------------------------------------------------
+# Alg. 1 — n-propagation sampling
+# --------------------------------------------------------------------------
+
+def _gather_hops(neighbors: jax.Array, v: jax.Array, n_hops: int) -> jax.Array:
+    """(≤ R + R²+ ...,) candidate ids for one vertex (duplicates included)."""
+    n = neighbors.shape[0]
+    cand = [neighbors[v]]
+    frontier = neighbors[v]
+    for _ in range(n_hops - 1):
+        nxt = neighbors[jnp.where(frontier < n, frontier, 0)].reshape(-1)
+        nxt = jnp.where(frontier.repeat(neighbors.shape[1]) < n, nxt, n)
+        cand.append(nxt)
+        frontier = nxt
+    return jnp.concatenate(cand)
+
+
+def sample_triplets(key: jax.Array, graph: Graph, x: jax.Array,
+                    anchors: jax.Array, *, n_hops: int = 2, k_pos: int = 10,
+                    k_neg: int = 30) -> TripletBatch:
+    """Batched Alg. 1. anchors: (B,) vertex ids."""
+    n = graph.n
+    xp = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)])
+
+    def one(key, v):
+        cand = _gather_hops(graph.neighbors, v, n_hops)          # (C,)
+        cand = jnp.where(cand == v, n, cand)
+        # dedup: keep first occurrence (sort by id, mask repeats)
+        order = jnp.argsort(cand)
+        sc = cand[order]
+        dup = jnp.concatenate([jnp.array([False]), sc[1:] == sc[:-1]])
+        cand = jnp.where(dup, n, sc)
+        d = jnp.sum((xp[cand] - xp[v]) ** 2, axis=-1)
+        d = jnp.where(cand == n, jnp.inf, d)
+        rank = jnp.argsort(d)
+        ranked = cand[rank]                                      # distinct ids
+        n_valid = jnp.sum(d < jnp.inf)
+        kp, kn = jax.random.split(key)
+        pos_hi = jnp.minimum(k_pos, n_valid)
+        pos_idx = jax.random.randint(kp, (), 0, jnp.maximum(pos_hi, 1))
+        neg_lo = pos_hi
+        neg_hi = jnp.minimum(k_pos + k_neg, n_valid)
+        neg_idx = neg_lo + jax.random.randint(
+            kn, (), 0, jnp.maximum(neg_hi - neg_lo, 1))
+        valid = (n_valid >= 2) & (neg_hi > neg_lo)
+        return ranked[pos_idx], ranked[jnp.minimum(neg_idx, ranked.shape[0] - 1)], valid
+
+    keys = jax.random.split(key, anchors.shape[0])
+    vpos, vneg, valid = jax.vmap(one)(keys, anchors)
+    return TripletBatch(v=anchors, vpos=vpos, vneg=vneg, valid=valid)
+
+
+# --------------------------------------------------------------------------
+# Alg. 2 — routing features sampling
+# --------------------------------------------------------------------------
+
+def sample_routing(graph: Graph, x: jax.Array, queries: jax.Array,
+                   codes: jax.Array, lut_fn, *, h: int = 16,
+                   trace_len: int = 48, max_steps: int = 128) -> RoutingBatch:
+    """Batched Alg. 2 with exact-distance next-hop labels.
+
+    codes: (N, M) CURRENT compact codes of the base vectors (quantizer-
+    dependent — re-extract when the quantizer moves, paper Fig. 2 loop).
+    """
+    n = graph.n
+    codes_p = jnp.concatenate([codes, jnp.zeros((1, codes.shape[1]), codes.dtype)])
+    dist_fn = beam.make_adc_dist_fn(codes_p)
+    luts = lut_fn(queries)
+    tr = beam.beam_search_trace(graph.neighbors, graph.medoid, luts, dist_fn,
+                                h=h, max_steps=max_steps, trace_len=trace_len)
+    nq = queries.shape[0]
+    xp = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)])
+
+    cand = tr.beam_ids.reshape(nq * trace_len, h)                 # (B, h)
+    hop_valid = tr.hop_valid.reshape(nq * trace_len)
+    qrep = jnp.repeat(queries, trace_len, axis=0)                 # (B, D)
+
+    cv = xp[jnp.where(cand == n, 0, cand)]                        # (B, h, D)
+    dexact = jnp.sum((cv - qrep[:, None, :]) ** 2, axis=-1)
+    dexact = jnp.where(cand == n, jnp.inf, dexact)
+    label = jnp.argmin(dexact, axis=1)
+    n_cand = jnp.sum(cand != n, axis=1)
+    valid = hop_valid & (n_cand >= 2)
+    return RoutingBatch(q=qrep, cand=cand, label=label, valid=valid)
+
+
+def subsample_routing(key: jax.Array, batch: RoutingBatch, size: int) -> RoutingBatch:
+    """Uniformly pick `size` (preferring valid) examples from a RoutingBatch."""
+    b = batch.valid.shape[0]
+    # order: valid examples first (stable), then sample a prefix window
+    pri = jnp.argsort(~batch.valid)        # valid (False<True on ~) first
+    nvalid = jnp.sum(batch.valid)
+    idx = jax.random.randint(key, (size,), 0, jnp.maximum(nvalid, 1))
+    take = pri[idx]
+    return RoutingBatch(q=batch.q[take], cand=batch.cand[take],
+                        label=batch.label[take],
+                        valid=batch.valid[take] & (nvalid > 0))

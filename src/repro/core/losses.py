@@ -1,0 +1,97 @@
+"""Feature-aware losses + multi-feature joint loss (paper §6, Eq. 8–11).
+
+All three legs of a triplet and all candidates of a routing example pass
+through the differentiable quantizer (Gumbel straight-through), so the
+gradient reaches the rotation generator θ and the codebooks.
+
+Joint loss: the paper's Eq. 11 has a "learnable coefficient α". A naively
+learned multiplicative α on a non-negative loss collapses to 0; we use the
+principled homoscedastic-uncertainty weighting (Kendall et al., CVPR'18):
+``L = L_routing + exp(−s)·L_neighborhood + s`` with s = params.log_alpha —
+the stationary point sets exp(−s) = 1/L_neighborhood, i.e. α self-tunes to
+the scale of the neighborhood term. A fixed α is available via config.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizer as Q
+from repro.core.features import RoutingBatch, TripletBatch
+
+
+class LossReport(NamedTuple):
+    total: jax.Array
+    routing: jax.Array
+    neighborhood: jax.Array
+    alpha: jax.Array
+
+
+def neighborhood_loss(cfg: Q.RPQConfig, params: Q.RPQParams, x: jax.Array,
+                      batch: TripletBatch, key: jax.Array,
+                      margin: float = 1.0,
+                      anchor_quantized: bool = True) -> jax.Array:
+    """Eq. 8: max(0, σ + δ(x'_v, x'_{v+}) − δ(x'_v, x'_{v−})) ."""
+    ka, kp, kn = jax.random.split(key, 3)
+    xa = x[batch.v]
+    xq_p = Q.quantize_st(cfg, params, x[batch.vpos], kp)
+    xq_n = Q.quantize_st(cfg, params, x[batch.vneg], kn)
+    if anchor_quantized:
+        xq_a = Q.quantize_st(cfg, params, xa, ka)
+    else:  # asymmetric variant: anchor stays full-precision (rotated)
+        r = Q.rotation_matrix(cfg, params)
+        xq_a = xa @ r.T
+    dp = jnp.sum((xq_a - xq_p) ** 2, axis=-1)
+    dn = jnp.sum((xq_a - xq_n) ** 2, axis=-1)
+    # scale-free margin: normalize by the batch's positive-distance scale so
+    # σ means "fractions of a typical neighbor distance", not raw units
+    scale = jax.lax.stop_gradient(jnp.mean(dp) + 1e-9)
+    per = jnp.maximum(0.0, margin + (dp - dn) / scale)
+    w = batch.valid.astype(jnp.float32)
+    return jnp.sum(per * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def routing_loss(cfg: Q.RPQConfig, params: Q.RPQParams, x: jax.Array,
+                 batch: RoutingBatch, key: jax.Array) -> jax.Array:
+    """Eq. 9–10 (sign-fixed): −log softmax_{c ∈ b_i}(−δ(x'_c, x_q)/τ)[v*]."""
+    n = x.shape[0]
+    xp = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)])
+    b, h = batch.cand.shape
+    cv = xp[jnp.where(batch.cand == n, 0, batch.cand)]     # (B, h, D)
+    xq = Q.quantize_st(cfg, params, cv.reshape(b * h, -1), key).reshape(b, h, -1)
+    r = Q.rotation_matrix(cfg, params)
+    qrot = batch.q @ r.T                                   # ADC: query exact
+    d = jnp.sum((xq - qrot[:, None, :]) ** 2, axis=-1)     # (B, h)
+    # per-example scale (stop-grad) keeps the listwise softmax in a sane
+    # entropy regime for any data magnitude (cf. quantizer._temp_scale)
+    dmin = jnp.min(jnp.where(batch.cand == n, jnp.inf, d), axis=1, keepdims=True)
+    spread = jnp.mean(jnp.where(batch.cand == n, 0.0, d - dmin), axis=1,
+                      keepdims=True) + 1e-9
+    scale = jax.lax.stop_gradient(spread)
+    logits = jnp.where(batch.cand == n, -jnp.inf, -d / (scale * cfg.routing_tau))
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch.label[:, None], axis=1)[:, 0]
+    w = batch.valid.astype(jnp.float32)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def joint_loss(cfg: Q.RPQConfig, params: Q.RPQParams, x: jax.Array,
+               trip: TripletBatch, route: RoutingBatch, key: jax.Array,
+               *, margin: float = 1.0, fixed_alpha: Optional[float] = None
+               ) -> tuple[jax.Array, LossReport]:
+    """Eq. 11: L = L_routing + α·L_neighborhood (α learned, see module doc)."""
+    kt, kr = jax.random.split(key)
+    ln = neighborhood_loss(cfg, params, x, trip, kt, margin=margin)
+    lr = routing_loss(cfg, params, x, route, kr)
+    if fixed_alpha is not None:
+        alpha = jnp.asarray(fixed_alpha, jnp.float32)
+        total = lr + alpha * ln
+    else:
+        s = params.log_alpha
+        alpha = jnp.exp(-s)
+        total = lr + alpha * ln + s
+    return total, LossReport(total=total, routing=lr, neighborhood=ln,
+                             alpha=alpha)

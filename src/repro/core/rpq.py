@@ -1,0 +1,51 @@
+"""Top-level RPQ API — one import for the whole paper pipeline.
+
+    from repro.core.rpq import train_rpq
+    rpq = train_rpq(key, x, graph)          # paper Fig. 2, end to end
+    model = rpq.model                       # serving-side QuantizerModel
+    codes = pq.encode(model, x)
+    engine = InMemoryEngine(graph, codes, lut_fn=lambda q: pq.build_lut(model, q))
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from repro.core import quantizer as Q
+from repro.core import trainer as T
+from repro.graphs.adjacency import Graph
+from repro.pq import base as pqbase
+
+
+@dataclasses.dataclass
+class RPQ:
+    cfg: Q.RPQConfig
+    params: Q.RPQParams
+    history: list
+
+    @property
+    def model(self) -> pqbase.QuantizerModel:
+        return T.to_model(self.cfg, self.params)
+
+    def encode(self, x):
+        return pqbase.encode(self.model, x)
+
+    def lut_fn(self):
+        model = self.model
+        return lambda q: pqbase.build_lut(model, q)
+
+
+def train_rpq(key: jax.Array, x: jax.Array, graph: Graph, *,
+              m: int = 8, k: int = 256,
+              cfg: Optional[Q.RPQConfig] = None,
+              tcfg: Optional[T.TrainConfig] = None,
+              verbose: bool = True) -> RPQ:
+    if cfg is None:
+        cfg = Q.RPQConfig(dim=x.shape[1], m=m, k=k)
+    if tcfg is None:
+        tcfg = T.TrainConfig()
+    state = T.fit(key, cfg, tcfg, x, graph, verbose=verbose)
+    return RPQ(cfg=cfg, params=state.params, history=state.history)

@@ -1,0 +1,4 @@
+"""Datasets: synthetic stand-ins for the paper's benchmarks + pipeline."""
+from repro.data.synth import Dataset, DatasetSpec, SPECS, load_dataset, synth  # noqa: F401
+from repro.data.pipeline import IndexStream  # noqa: F401
+from repro.data.tokens import lm_batch, zipf_tokens  # noqa: F401

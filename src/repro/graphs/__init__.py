@@ -1,0 +1,7 @@
+"""Proximity-graph construction: kNN substrate, Vamana, HNSW, NSG."""
+from repro.graphs.adjacency import Graph, from_lists, find_medoid, degree_stats  # noqa: F401
+from repro.graphs.knn import knn_ids, knn_graph  # noqa: F401
+from repro.graphs.prune import robust_prune, prune_from_vectors  # noqa: F401
+from repro.graphs.vamana import build_vamana  # noqa: F401
+from repro.graphs.hnsw import build_hnsw, HNSW, descend  # noqa: F401
+from repro.graphs.nsg import build_nsg  # noqa: F401

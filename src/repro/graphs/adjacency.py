@@ -1,0 +1,74 @@
+"""Padded fixed-degree adjacency — the PG representation the JAX engine uses.
+
+Every proximity graph (Vamana/HNSW/NSG/kNN) is stored as an (N, R) int32
+array of neighbor ids, padded with the sentinel ``N`` (one past the last
+valid id). Fixed degree makes every gather shape static, which is what lets
+the whole beam search jit into a single XLA program.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Graph(NamedTuple):
+    neighbors: jax.Array   # (N, R) int32, sentinel = N for padding
+    medoid: jax.Array      # () int32 — entry vertex for routing
+
+    @property
+    def n(self) -> int:
+        return self.neighbors.shape[0]
+
+    @property
+    def degree(self) -> int:
+        return self.neighbors.shape[1]
+
+
+def from_lists(lists: list[np.ndarray], r: int, medoid: int) -> Graph:
+    """Ragged python neighbor lists → padded Graph."""
+    n = len(lists)
+    out = np.full((n, r), n, np.int32)
+    for i, lst in enumerate(lists):
+        lst = np.asarray(lst, np.int32)[:r]
+        out[i, : len(lst)] = lst
+    return Graph(neighbors=jnp.asarray(out), medoid=jnp.asarray(medoid, jnp.int32))
+
+
+def degree_stats(g: Graph) -> dict:
+    nb = np.asarray(g.neighbors)
+    valid = (nb < g.n).sum(1)
+    return {"mean": float(valid.mean()), "min": int(valid.min()),
+            "max": int(valid.max()), "R": g.degree, "n": g.n}
+
+
+def find_medoid(x: jax.Array, sample: int = 4096, key=None) -> jax.Array:
+    """Vector closest to the dataset centroid (DiskANN's entry point)."""
+    n = x.shape[0]
+    if key is not None and n > sample:
+        idx = jax.random.choice(key, n, (sample,), replace=False)
+        xs = x[idx]
+    else:
+        idx = jnp.arange(min(n, sample))
+        xs = x[: min(n, sample)]
+    c = jnp.mean(x, axis=0)
+    d = jnp.sum((xs - c) ** 2, axis=1)
+    return idx[jnp.argmin(d)].astype(jnp.int32)
+
+
+def symmetrize(neighbors: np.ndarray, r: int) -> np.ndarray:
+    """Add reverse edges (dropping overflow) — used by graph builders."""
+    n = neighbors.shape[0]
+    lists: list[list[int]] = [list(row[row < n]) for row in neighbors]
+    for i in range(n):
+        for j in neighbors[i]:
+            if j < n and i not in lists[j][:r]:
+                if len(lists[j]) < r:
+                    lists[j].append(i)
+    out = np.full((n, r), n, np.int32)
+    for i, lst in enumerate(lists):
+        out[i, : min(len(lst), r)] = np.asarray(lst[:r], np.int32)
+    return out

@@ -1,0 +1,93 @@
+"""HNSW (Malkov & Yashunin 2018) — hierarchical PG, batched construction.
+
+Construction deviation (documented): the reference implementation inserts
+points one-by-one; we build each layer's adjacency with batched exact-kNN +
+RobustPrune(α=1) over the layer members (the "select-neighbors heuristic" is
+precisely the MRNG rule), with geometric layer membership n·p^ℓ. Navigation
+semantics at search time are the standard ones: greedy descent through the
+upper layers to find the layer-0 entry, then beam search at layer 0.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.adjacency import Graph, find_medoid
+from repro.graphs.knn import knn_ids
+from repro.graphs.prune import prune_from_vectors
+from repro.search.beam import beam_search, make_exact_dist_fn
+
+
+class HNSW(NamedTuple):
+    base: Graph                 # layer-0 graph over ALL points
+    layers: tuple[Graph, ...]   # upper layers (local ids within the layer)
+    members: tuple[jax.Array, ...]  # layer local id -> global id
+    top_entry: jax.Array        # entry in the TOP layer's local ids
+
+
+def _layer_graph(key, x_layer: jax.Array, m: int) -> Graph:
+    n = x_layer.shape[0]
+    k = min(max(2 * m, 8), n - 1)
+    ids, _ = knn_ids(x_layer, x_layer, k, exclude_self=True)
+    xp = jnp.concatenate([x_layer, jnp.zeros((1, x_layer.shape[1]), x_layer.dtype)])
+    out = np.full((n, m), n, np.int32)
+    batch = 2048
+    for s in range(0, n, batch):
+        node = jnp.arange(s, min(s + batch, n), dtype=jnp.int32)
+        pruned = prune_from_vectors(xp, node, ids[s:s + batch], 1.0, m, n)
+        out[s:s + batch] = np.asarray(pruned)
+    return Graph(neighbors=jnp.asarray(out), medoid=find_medoid(x_layer))
+
+
+def build_hnsw(key: jax.Array, x: jax.Array, *, m: int = 16,
+               scale: int = 8, max_layers: int = 4) -> HNSW:
+    """Build layered HNSW. Layer ℓ>0 has ~n/scale^ℓ members."""
+    n = x.shape[0]
+    x = jnp.asarray(x, jnp.float32)
+    key, kperm = jax.random.split(key)
+    perm = jax.random.permutation(kperm, n)
+
+    base = _layer_graph(key, x, 2 * m)  # layer-0 uses 2M (HNSW convention)
+    layers, members = [], []
+    sz = n
+    while len(layers) < max_layers - 1:
+        sz = sz // scale
+        if sz < max(2 * m + 2, 16):
+            break
+        memb = jnp.sort(perm[:sz])
+        layers.append(_layer_graph(key, x[memb], m))
+        members.append(memb)
+    top = layers[-1].medoid if layers else base.medoid
+    return HNSW(base=base, layers=tuple(layers), members=tuple(members),
+                top_entry=top)
+
+
+def descend(h: HNSW, queries: jax.Array, x: jax.Array) -> jax.Array:
+    """Greedy h=1 descent through the upper layers → layer-0 entry ids.
+
+    Exact distances are used in the upper layers (they are small and, in the
+    paper's in-memory scenario, their vectors fit in RAM next to the codes).
+    """
+    nq = queries.shape[0]
+    if not h.layers:
+        return jnp.broadcast_to(h.base.medoid, (nq,))
+    entry_local = jnp.broadcast_to(h.top_entry, (nq,))
+    for li in range(len(h.layers) - 1, -1, -1):
+        g, memb = h.layers[li], h.members[li]
+        xl = x[memb]
+        xlp = jnp.concatenate([xl, jnp.zeros((1, x.shape[1]), x.dtype)])
+        res = beam_search(g.neighbors, entry_local, queries,
+                          make_exact_dist_fn(xlp), h=1, max_steps=64)
+        best_local = res.ids[:, 0]
+        glob = memb[jnp.clip(best_local, 0, memb.shape[0] - 1)]
+        if li == 0:
+            return glob.astype(jnp.int32)
+        # map global id into the next-lower layer's local id space
+        lower = h.members[li - 1]
+        entry_local = jnp.searchsorted(lower, glob).astype(jnp.int32)
+        entry_local = jnp.clip(entry_local, 0, lower.shape[0] - 1)
+    return glob.astype(jnp.int32)

@@ -1,0 +1,80 @@
+"""NSG (Fu et al. 2017) — monotonic-path PG from a kNN graph, batched.
+
+Faithful structure: candidates per node = exact kNN ∪ nodes visited by a
+medoid-rooted search; MRNG occlusion rule (RobustPrune with α=1); explicit
+connectivity repair via a BFS tree from the medoid (unreachable nodes get
+attached to their nearest reachable neighbor), which is NSG's spanning-tree
+step.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.adjacency import Graph, find_medoid
+from repro.graphs.knn import knn_ids
+from repro.graphs.prune import prune_from_vectors
+from repro.search.beam import beam_search, make_exact_dist_fn
+
+
+def build_nsg(key: jax.Array, x: jax.Array, *, r: int = 32, k: int = 64,
+              search_l: int = 32, batch: int = 1024) -> Graph:
+    n, d = x.shape
+    x = jnp.asarray(x, jnp.float32)
+    xp = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)])
+    medoid = find_medoid(x)
+
+    knn, _ = knn_ids(x, x, min(k, n - 1), exclude_self=True)
+    knn_g = Graph(neighbors=knn, medoid=medoid)     # degree-k navigation graph
+    dist_fn = make_exact_dist_fn(xp)
+
+    nbrs = np.full((n, r), n, np.int32)
+    n_pad = (-n) % batch
+    order = np.concatenate([np.arange(n, dtype=np.int32),
+                            np.zeros(n_pad, np.int32)])
+    for s in range(0, len(order), batch):
+        ids = order[s:s + batch]
+        res = beam_search(knn_g.neighbors, medoid, x[ids], dist_fn,
+                          h=search_l, max_steps=4 * search_l)
+        cand = jnp.concatenate([knn[ids], res.ids], axis=1)
+        cand = jnp.where(cand == jnp.asarray(ids)[:, None], n, cand)
+        pruned = prune_from_vectors(xp, jnp.asarray(ids), cand, 1.0, r, n)
+        nbrs[ids] = np.asarray(pruned)
+
+    nbrs = _repair_connectivity(np.asarray(x), nbrs, int(medoid), r)
+    return Graph(neighbors=jnp.asarray(nbrs), medoid=medoid)
+
+
+def _repair_connectivity(x: np.ndarray, nbrs: np.ndarray, medoid: int,
+                         r: int) -> np.ndarray:
+    """BFS from medoid; attach unreachable components (NSG spanning tree)."""
+    n = nbrs.shape[0]
+    seen = np.zeros(n, bool)
+    frontier = [medoid]
+    seen[medoid] = True
+    while frontier:
+        nxt = nbrs[frontier].reshape(-1)
+        nxt = nxt[nxt < n]
+        nxt = nxt[~seen[nxt]]
+        nxt = np.unique(nxt)
+        seen[nxt] = True
+        frontier = list(nxt)
+    missing = np.nonzero(~seen)[0]
+    if len(missing) == 0:
+        return nbrs
+    reach = np.nonzero(seen)[0]
+    # nearest reachable node adopts each unreachable node (add forward edge)
+    sub = reach[np.random.default_rng(0).permutation(len(reach))[:20000]]
+    for i in missing:
+        d = np.sum((x[sub] - x[i]) ** 2, axis=1)
+        parent = int(sub[np.argmin(d)])
+        row = nbrs[parent]
+        slot = np.nonzero(row == n)[0]
+        if len(slot):
+            nbrs[parent, slot[0]] = i
+        else:
+            nbrs[parent, r - 1] = i
+        seen[i] = True
+    return nbrs

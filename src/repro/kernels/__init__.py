@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot spots (PQ scan & training).
+
+Layout per kernel: <name>.py holds the pl.pallas_call + BlockSpec tiling,
+ops.py the jitted public wrapper with backend dispatch, ref.py the pure-jnp
+oracle used for validation and as the CPU fallback.
+"""
+from repro.kernels.ops import adc_scan, adc_scan_batch, pq_pairwise, kmeans_assign  # noqa: F401

@@ -1,0 +1,77 @@
+"""Public, jitted entry points for the PQ kernels with backend dispatch.
+
+Call these from library code. On TPU they run the Pallas kernels; on CPU
+(this container) they run the pure-jnp oracle, which XLA fuses well — the
+Pallas path is still exercised on CPU via interpret=True in the tests and
+can be forced with use_pallas="interpret".
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import adc_scan as _adc
+from repro.kernels import pq_pairwise as _pqp
+from repro.kernels import ref as _ref
+
+Backend = Literal["auto", "pallas", "interpret", "ref"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: Backend) -> str:
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return backend
+
+
+def adc_scan(codes, lut, *, backend: Backend = "auto", block_n: int = 1024):
+    """One-query ADC scan: (N, M) codes × (M, K) LUT → (N,) f32."""
+    mode = _resolve(backend)
+    if mode == "ref":
+        return _ref.adc_scan_ref(codes, lut)
+    return _adc.adc_scan(codes, lut, block_n=block_n,
+                         interpret=(mode == "interpret"))
+
+
+def adc_scan_batch(codes, luts, *, backend: Backend = "auto",
+                   block_n: int = 256, block_q: int = 128):
+    """Batched ADC scan: (N, M) codes × (Q, M, K) LUTs → (Q, N) f32."""
+    mode = _resolve(backend)
+    if mode == "ref":
+        return _ref.adc_scan_batch_ref(codes, luts)
+    return _adc.adc_scan_batch(codes, luts, block_n=block_n, block_q=block_q,
+                               interpret=(mode == "interpret"))
+
+
+def hop_gather(codes, luts, *, backend: Backend = "auto", block_q: int = 8):
+    """Per-hop beam ADC: (Q, R, M) codes × (Q, M, K) LUTs → (Q, R) f32."""
+    mode = _resolve(backend)
+    if mode == "ref":
+        return _ref.hop_gather_ref(codes, luts)
+    from repro.kernels import hop_gather as _hg
+    return _hg.hop_gather(codes, luts, block_q=block_q,
+                          interpret=(mode == "interpret"))
+
+
+def pq_pairwise(x, codebook, *, backend: Backend = "auto", block_n: int = 512):
+    """Sub-vector/codeword distance table: (N,M,dsub) × (M,K,dsub) → (N,M,K)."""
+    mode = _resolve(backend)
+    if mode == "ref":
+        return _ref.pq_pairwise_ref(x, codebook)
+    return _pqp.pq_pairwise(x, codebook, block_n=block_n,
+                            interpret=(mode == "interpret"))
+
+
+def kmeans_assign(x, centroids, *, backend: Backend = "auto"):
+    """Nearest centroid: (N, D) × (K, D) → (assign (N,) i32, sqdist (N,) f32)."""
+    d = pq_pairwise(x[:, None, :], centroids[None, :, :], backend=backend)[:, 0, :]
+    idx = jnp.argmin(d, axis=1).astype(jnp.int32)
+    best = jnp.take_along_axis(d, idx[:, None], axis=1)[:, 0]
+    return idx, best

@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: per-subspace pairwise squared distances (N, M, K).
+
+This is the training / k-means hot loop of RPQ: both the Lloyd assignment
+step and the differentiable soft-assignment (Eq. 6 of the paper) need the
+full table of ||x[n,j] - c[j,k]||^2 for every sub-vector and codeword.
+
+TPU formulation: the cross term is a per-subspace (bn, dsub) × (dsub, K)
+matmul on the MXU; the norms are rank-1 VPU broadcasts. Grid is
+(N / bn, M) so each grid step holds one subspace's codebook (K × dsub ≤
+256×128×4B = 128 KiB) and a (bn, dsub) slab of sub-vectors in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pq_pairwise_kernel(x_ref, cb_ref, out_ref):
+    x = x_ref[...][:, 0, :].astype(jnp.float32)      # (bn, dsub)
+    c = cb_ref[...][0].astype(jnp.float32)           # (K, dsub)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)      # (bn, 1)
+    c2 = jnp.sum(c * c, axis=-1)[None, :]            # (1, K)
+    xc = jax.lax.dot_general(                        # (bn, K) on the MXU
+        x, c.T, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    out_ref[...] = (x2 - 2.0 * xc + c2)[:, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def pq_pairwise(x: jax.Array, codebook: jax.Array, *, block_n: int = 512,
+                interpret: bool = True) -> jax.Array:
+    """(N, M, dsub) × (M, K, dsub) → (N, M, K) f32 squared distances."""
+    n, m, dsub = x.shape
+    _, k, _ = codebook.shape
+    n_pad = (-n) % block_n
+    xp = jnp.pad(x, ((0, n_pad), (0, 0), (0, 0))) if n_pad else x
+    grid = (xp.shape[0] // block_n, m)
+    out = pl.pallas_call(
+        _pq_pairwise_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, 1, dsub), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, k, dsub), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, 1, k), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], m, k), jnp.float32),
+        interpret=interpret,
+    )(xp, codebook)
+    return out[:n]

@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics contract: each kernel in adc_scan.py / pq_pairwise.py
+must match its oracle here (tests/test_kernels.py sweeps shapes & dtypes and
+asserts allclose). They are also the CPU fallback used by ops.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adc_scan_ref(codes: jax.Array, lut: jax.Array) -> jax.Array:
+    """Asymmetric-distance scan for ONE query.
+
+    Args:
+      codes: (N, M) integer compact codes, values in [0, K).
+      lut:   (M, K) float LUT; lut[j, k] = ||q_j - c_k^j||^2.
+
+    Returns:
+      (N,) float32 estimated squared distances: sum_j lut[j, codes[:, j]].
+    """
+    n, m = codes.shape
+    # take_along_axis over the K axis, one gather per subspace.
+    gathered = jnp.take_along_axis(
+        lut[None, :, :], codes[:, :, None].astype(jnp.int32), axis=2
+    )  # (N, M, 1)
+    return jnp.sum(gathered[..., 0].astype(jnp.float32), axis=1)
+
+
+def adc_scan_batch_ref(codes: jax.Array, luts: jax.Array) -> jax.Array:
+    """Batched-query ADC scan.
+
+    Args:
+      codes: (N, M) integer compact codes.
+      luts:  (Q, M, K) float LUTs, one per query.
+
+    Returns:
+      (Q, N) float32 estimated squared distances.
+    """
+    q, m, k = luts.shape
+    gathered = luts[:, jnp.arange(m)[None, :], codes.astype(jnp.int32)]  # (Q, N, M)
+    return jnp.sum(gathered.astype(jnp.float32), axis=-1)
+
+
+def hop_gather_ref(codes: jax.Array, luts: jax.Array) -> jax.Array:
+    """Per-hop beam ADC: (Q, R, M) codes × (Q, M, K) LUTs → (Q, R) f32."""
+    q, r, m = codes.shape
+    gathered = jnp.take_along_axis(
+        luts[:, None, :, :],                          # (Q, 1, M, K)
+        codes[:, :, :, None].astype(jnp.int32), axis=3)[..., 0]  # (Q, R, M)
+    return jnp.sum(gathered.astype(jnp.float32), axis=-1)
+
+
+def pq_pairwise_ref(x: jax.Array, codebook: jax.Array) -> jax.Array:
+    """Per-subspace squared distances between sub-vectors and codewords.
+
+    Args:
+      x:        (N, M, dsub) sub-vectors.
+      codebook: (M, K, dsub) codewords.
+
+    Returns:
+      (N, M, K) float32 squared distances ||x[n,j] - codebook[j,k]||^2.
+    """
+    x = x.astype(jnp.float32)
+    c = codebook.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=-1)[:, :, None]           # (N, M, 1)
+    c2 = jnp.sum(c * c, axis=-1)[None, :, :]           # (1, M, K)
+    xc = jnp.einsum("nmd,mkd->nmk", x, c)              # (N, M, K)
+    return x2 - 2.0 * xc + c2
+
+
+def kmeans_assign_ref(x: jax.Array, centroids: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Nearest-centroid assignment (flat, single space).
+
+    Args:
+      x:         (N, D)
+      centroids: (K, D)
+
+    Returns:
+      (assign (N,) int32, sqdist (N,) float32)
+    """
+    d = pq_pairwise_ref(x[:, None, :], centroids[None, :, :])[:, 0, :]  # (N, K)
+    idx = jnp.argmin(d, axis=1).astype(jnp.int32)
+    return idx, jnp.take_along_axis(d, idx[:, None], axis=1)[:, 0]

@@ -1,0 +1,1 @@
+"""Launchers: mesh builders, multi-pod dryrun, train/serve drivers."""

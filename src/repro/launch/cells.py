@@ -1,0 +1,553 @@
+"""Dry-run cell builders: (arch × input-shape × mesh) → lowerable closure.
+
+Each cell bundles a jittable step function, ShapeDtypeStruct inputs (the
+`input_specs()` of the brief — weak-type-correct, shardable, zero
+allocation), and in/out shardings from dist/sharding.py. launch/dryrun.py
+lowers+compiles every cell and captures memory/cost/collective numbers.
+
+Uneven-dimension note: mesh sharding requires divisible dims, so edge lists
+/ candidate pools are padded to multiples of 512 with mask inputs (the real
+data pipeline does the same padding), and LM vocabs use cfg.vocab_padded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common import adam, constant_schedule, sgd
+from repro.configs import get_arch
+from repro.dist import sharding as shd
+from repro.launch.mesh import data_axes
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def lower(self, mesh):
+        with mesh:
+            jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                             out_shardings=self.out_shardings,
+                             donate_argnums=self.donate)
+            return jitted.lower(*self.args)
+
+
+# ==========================================================================
+# LM family
+# ==========================================================================
+
+def _lm_cell(arch_id: str, shape, mesh) -> Cell:
+    from repro.models import transformer as tf
+
+    spec = get_arch(arch_id)
+    cfg = spec.make_config()
+    dims = shape.dims
+    dp = data_axes(mesh)
+    n_dp = _n_dp(mesh)
+    # pin activation batch-sharding; fit microbatch count to the mesh
+    # (per-microbatch batch must divide the dp axes)
+    if shape.kind == "train":
+        mb = cfg.microbatches
+        while mb > 1 and dims["global_batch"] % (mb * n_dp):
+            mb //= 2
+        cfg = dataclasses.replace(cfg, microbatches=max(mb, 1),
+                                  act_batch_axes=tuple(dp))
+    else:
+        cfg = dataclasses.replace(cfg, act_batch_axes=tuple(dp)
+                                  if dims["global_batch"] % n_dp == 0 else None)
+    bspec = shd.named(mesh, shd.lm_batch_spec(mesh))
+
+    params_shape = jax.eval_shape(lambda: tf.init_lm(jax.random.PRNGKey(0), cfg))
+    meta = {"params": int(cfg.param_count),
+            "active_params": int(cfg.active_param_count)}
+
+    if shape.kind == "train":
+        pspecs = shd.tree_pspecs(params_shape, shd.lm_param_rule(mesh))
+        fns = tf.make_train_step(cfg, param_pspecs=pspecs)
+        opt_shape = jax.eval_shape(fns.opt_init, params_shape)
+        p_sh, o_sh = shd.lm_shardings(mesh, cfg, params_shape, opt_shape)
+        b, s = dims["global_batch"], dims["seq_len"]
+        toks = _sds((b, s), jnp.int32)
+        fn = fns.train_step
+        return Cell(arch_id, shape.name, fn,
+                    (params_shape, opt_shape, toks, toks),
+                    (p_sh, o_sh, bspec, bspec),
+                    (p_sh, o_sh, shd.named(mesh, P())),
+                    donate=(0, 1),
+                    meta={**meta, "tokens": b * s, "mode": "train"})
+
+    p_sh, _ = shd.lm_shardings(mesh, cfg, params_shape,
+                               jax.eval_shape(lambda p: p, params_shape))
+
+    if shape.kind == "prefill":
+        b, s = dims["global_batch"], dims["seq_len"]
+        toks = _sds((b, s), jnp.int32)
+        cache_spec = shd.named(mesh, shd.lm_cache_spec(mesh, b, s))
+        fn = lambda params, tokens: tf.prefill(cfg, params, tokens, max_len=s)
+        out_sh = (shd.named(mesh, P(dp, "model")),
+                  tf.KVCache(k=cache_spec, v=cache_spec,
+                             length=shd.named(mesh, P())))
+        return Cell(arch_id, shape.name, fn, (params_shape, toks),
+                    (p_sh, bspec), out_sh,
+                    meta={**meta, "tokens": b * s, "mode": "prefill"})
+
+    # decode (decode_32k, long_500k): one token against a seq_len KV cache
+    b, s = dims["global_batch"], dims["seq_len"]
+    cache_p = shd.lm_cache_spec(mesh, b, s)
+    cache_spec = shd.named(mesh, cache_p)
+    cache_shape = tf.KVCache(
+        k=_sds((cfg.n_layers, b, s, cfg.n_kv_heads, cfg.d_head), cfg.dtype),
+        v=_sds((cfg.n_layers, b, s, cfg.n_kv_heads, cfg.d_head), cfg.dtype),
+        length=_sds((), jnp.int32))
+    cache_sh = tf.KVCache(k=cache_spec, v=cache_spec,
+                          length=shd.named(mesh, P()))
+    # pin decode attention's softmax to the cache's sequence sharding
+    # (single axis "model" for batched decode; all axes for long_500k)
+    cfg = dataclasses.replace(cfg, act_seq_axis=cache_p[2])
+    tok_spec = shd.named(mesh, P(dp) if b % _n_dp(mesh) == 0 else P())
+    toks = _sds((b,), jnp.int32)
+    fn = lambda params, cache, tokens: tf.decode_step(cfg, params, cache, tokens)
+    logit_sh = shd.named(mesh,
+                         P(dp, "model") if b % _n_dp(mesh) == 0 else P(None, "model"))
+    return Cell(arch_id, shape.name, fn, (params_shape, cache_shape, toks),
+                (p_sh, cache_sh, tok_spec), (logit_sh, cache_sh),
+                donate=(1,),
+                meta={**meta, "tokens": b, "kv_len": s, "mode": "decode"})
+
+
+def _n_dp(mesh) -> int:
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+# ==========================================================================
+# GNN family (gat-cora): 4 shapes with different graph regimes
+# ==========================================================================
+
+def _gnn_cell(arch_id: str, shape, mesh) -> Cell:
+    from repro.models import gnn
+
+    spec = get_arch(arch_id)
+    dims = shape.dims
+    dp = data_axes(mesh)
+    n_dev = _n_dp(mesh) * mesh.shape["model"]
+    edge_spec = shd.named(mesh, shd.gnn_edge_spec(mesh))
+    rep = shd.named(mesh, P())
+    optimizer = adam(constant_schedule(5e-3))
+
+    if shape.name in ("full_graph_sm", "ogb_products"):
+        n, e = dims["n_nodes"], dims["n_edges"]
+        d_feat = dims.get("d_feat", 1433)
+        cfg = dataclasses.replace(spec.make_config(), d_in=d_feat,
+                                  n_classes=47 if shape.name == "ogb_products" else 7)
+        e_pad = _pad_to(e, n_dev)
+        params_shape = jax.eval_shape(lambda: gnn.init_gat(jax.random.PRNGKey(0), cfg))
+        opt_shape = jax.eval_shape(optimizer.init, params_shape)
+
+        def fn(params, opt_state, x, src, dst, emask, labels, lmask):
+            loss, g = jax.value_and_grad(
+                lambda p: gnn.node_loss(cfg, p, x, src, dst, labels, lmask,
+                                        edge_mask=emask))(params)
+            params, opt_state = optimizer.update(g, opt_state, params)
+            return params, opt_state, loss
+
+        args = (params_shape, opt_shape, _sds((n, d_feat), jnp.float32),
+                _sds((e_pad,), jnp.int32), _sds((e_pad,), jnp.int32),
+                _sds((e_pad,), jnp.bool_), _sds((n,), jnp.int32),
+                _sds((n,), jnp.bool_))
+        p_sh = shd.tree_shardings(mesh, params_shape, lambda p, l: P())
+        o_sh = shd.tree_shardings(mesh, opt_shape, lambda p, l: P())
+        return Cell(arch_id, shape.name, fn, args,
+                    (p_sh, o_sh, rep, edge_spec, edge_spec, edge_spec, rep, rep),
+                    (p_sh, o_sh, rep), donate=(0, 1),
+                    meta={"mode": "train", "edges": e, "nodes": n})
+
+    if shape.name == "minibatch_lg":
+        # Reddit-scale fanout-sampled block (d_feat=602, fanout 15×10)
+        cfg = dataclasses.replace(spec.make_config(), d_in=602, n_classes=41)
+        b = dims["batch_nodes"]
+        f1, f2 = dims["fanout"]
+        n_slots = _pad_to(b * (1 + f1 + f1 * f2) * 2, n_dev)
+        e_slots = _pad_to(b * f1 + b * f1 * f2, n_dev)
+        params_shape = jax.eval_shape(lambda: gnn.init_gat(jax.random.PRNGKey(0), cfg))
+        opt_shape = jax.eval_shape(optimizer.init, params_shape)
+
+        def fn(params, opt_state, feats, src, dst, emask, seed_local, labels):
+            def loss_fn(p):
+                h = gnn.forward(cfg, p, feats, src, dst, edge_mask=emask)
+                sel = h[seed_local]
+                logp = jax.nn.log_softmax(sel.astype(jnp.float32), -1)
+                return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+            loss, g = jax.value_and_grad(loss_fn)(params)
+            params, opt_state = optimizer.update(g, opt_state, params)
+            return params, opt_state, loss
+
+        args = (params_shape, opt_shape, _sds((n_slots, 602), jnp.float32),
+                _sds((e_slots,), jnp.int32), _sds((e_slots,), jnp.int32),
+                _sds((e_slots,), jnp.bool_), _sds((b,), jnp.int32),
+                _sds((b,), jnp.int32))
+        p_sh = shd.tree_shardings(mesh, params_shape, lambda p, l: P())
+        o_sh = shd.tree_shardings(mesh, opt_shape, lambda p, l: P())
+        return Cell(arch_id, shape.name, fn, args,
+                    (p_sh, o_sh, rep, edge_spec, edge_spec, edge_spec, rep, rep),
+                    (p_sh, o_sh, rep), donate=(0, 1),
+                    meta={"mode": "train", "edges": e_slots, "nodes": n_slots})
+
+    # molecule: batched small graphs, graph-level prediction
+    cfg = dataclasses.replace(spec.make_config(), d_in=64, n_classes=2)
+    b, n_per, e_per = dims["batch"], dims["n_nodes"], dims["n_edges"]
+    n = _pad_to(b * n_per, n_dev)
+    e = _pad_to(b * e_per, n_dev)
+    params_shape = jax.eval_shape(lambda: gnn.init_gat(jax.random.PRNGKey(0), cfg))
+    opt_shape = jax.eval_shape(optimizer.init, params_shape)
+
+    def fn(params, opt_state, x, src, dst, emask, graph_id, y):
+        loss, g = jax.value_and_grad(
+            lambda p: gnn.graph_pool_loss(cfg, p, x, src, dst, graph_id, b, y,
+                                          edge_mask=emask))(params)
+        params, opt_state = optimizer.update(g, opt_state, params)
+        return params, opt_state, loss
+
+    args = (params_shape, opt_shape, _sds((n, 64), jnp.float32),
+            _sds((e,), jnp.int32), _sds((e,), jnp.int32), _sds((e,), jnp.bool_),
+            _sds((n,), jnp.int32), _sds((b,), jnp.int32))
+    p_sh = shd.tree_shardings(mesh, params_shape, lambda p, l: P())
+    o_sh = shd.tree_shardings(mesh, opt_shape, lambda p, l: P())
+    return Cell(arch_id, shape.name, fn, args,
+                (p_sh, o_sh, rep, edge_spec, edge_spec, edge_spec, rep, rep),
+                (p_sh, o_sh, rep), donate=(0, 1),
+                meta={"mode": "train", "edges": e, "nodes": n})
+
+
+# ==========================================================================
+# Recsys family
+# ==========================================================================
+
+def _recsys_batch_specs(arch_id: str, cfg, batch: int):
+    if arch_id == "dlrm-mlperf":
+        return {"dense": _sds((batch, cfg.n_dense), jnp.float32),
+                "sparse": _sds((batch, cfg.n_sparse), jnp.int32),
+                "label": _sds((batch,), jnp.float32)}
+    if arch_id == "deepfm":
+        return {"sparse": _sds((batch, cfg.n_fields), jnp.int32),
+                "label": _sds((batch,), jnp.float32)}
+    if arch_id == "din":
+        return {"hist": _sds((batch, cfg.seq_len), jnp.int32),
+                "hist_mask": _sds((batch, cfg.seq_len), jnp.bool_),
+                "target": _sds((batch,), jnp.int32),
+                "label": _sds((batch,), jnp.float32)}
+    # bert4rec: MLM batch (20 masked positions of 200)
+    return {"items": _sds((batch, cfg.seq_len), jnp.int32),
+            "pad_mask": _sds((batch, cfg.seq_len), jnp.bool_),
+            "mlm_positions": _sds((batch, 20), jnp.int32),
+            "mlm_labels": _sds((batch, 20), jnp.int32)}
+
+
+def _recsys_forward(arch_id: str, cfg):
+    from repro.models import recsys as rs
+
+    if arch_id == "dlrm-mlperf":
+        return lambda p, b: rs.dlrm_forward(cfg, p, b["dense"], b["sparse"])
+    if arch_id == "deepfm":
+        return lambda p, b: rs.deepfm_forward(cfg, p, b["sparse"])
+    if arch_id == "din":
+        return lambda p, b: rs.din_forward(cfg, p, b["hist"], b["hist_mask"],
+                                           b["target"])
+    return None  # bert4rec handled via MLM loss
+
+
+def _recsys_loss(arch_id: str, cfg, mesh=None):
+    from repro.models import recsys as rs
+
+    if arch_id == "bert4rec":
+        lspec = P(data_axes(mesh), None, "model") if mesh is not None else None
+        return lambda p, b: rs.bert4rec_mlm_loss(
+            cfg, p, b["items"], b["pad_mask"], b["mlm_positions"],
+            b["mlm_labels"], logit_pspec=lspec)
+    fwd = _recsys_forward(arch_id, cfg)
+    return lambda p, b: rs.bce_loss(fwd(p, b), b["label"])
+
+
+def _is_table(path: str) -> bool:
+    return "table" in path or "item_emb" in path
+
+
+def _recsys_cell(arch_id: str, shape, mesh) -> Cell:
+    from repro.models import recsys as rs
+
+    spec = get_arch(arch_id)
+    cfg = spec.make_config()
+    dims = shape.dims
+    dp = data_axes(mesh)
+    table_axes = "all" if arch_id == "dlrm-mlperf" else "model"
+    init_fn = {"dlrm-mlperf": rs.init_dlrm, "deepfm": rs.init_deepfm,
+               "din": rs.init_din, "bert4rec": rs.init_bert4rec}[arch_id]
+    params_shape = jax.eval_shape(
+        lambda: init_fn(jax.random.PRNGKey(0), cfg))
+    bsp = lambda leaf: shd.named(mesh, P(dp, *([None] * (leaf.ndim - 1))))
+
+    if shape.kind == "train":
+        batch = dims["batch"]
+        loss_fn = _recsys_loss(arch_id, cfg, mesh)
+        optimizer = adam(constant_schedule(1e-3))
+
+        def fn(params, opt_state, batch_in):
+            loss, g = jax.value_and_grad(lambda p: loss_fn(p, batch_in))(params)
+            params, opt_state = optimizer.update(g, opt_state, params)
+            return params, opt_state, loss
+
+        opt_shape = jax.eval_shape(optimizer.init, params_shape)
+        p_sh, o_sh = shd.recsys_shardings(mesh, params_shape, opt_shape,
+                                          table_axes=table_axes)
+        batch_specs = _recsys_batch_specs(arch_id, cfg, batch)
+        b_sh = {k: bsp(v) for k, v in batch_specs.items()}
+        return Cell(arch_id, shape.name, fn,
+                    (params_shape, opt_shape, batch_specs),
+                    (p_sh, o_sh, b_sh),
+                    (p_sh, o_sh, shd.named(mesh, P())), donate=(0, 1),
+                    meta={"mode": "train", "batch": batch})
+
+    if shape.kind == "serve":
+        batch = dims["batch"]
+        p_sh, _ = shd.recsys_shardings(mesh, params_shape, params_shape,
+                                       table_axes=table_axes)
+        if arch_id == "bert4rec":
+            def fn(params, b):
+                h = rs.bert4rec_encode(cfg, params, b["items"], b["pad_mask"])
+                return (h[:, -1] @ params["item_emb"].T).astype(jnp.float32)
+            batch_specs = {k: v for k, v in
+                           _recsys_batch_specs(arch_id, cfg, batch).items()
+                           if k in ("items", "pad_mask")}
+        else:
+            fwd = _recsys_forward(arch_id, cfg)
+            fn = lambda params, b: fwd(params, b)
+            batch_specs = {k: v for k, v in
+                           _recsys_batch_specs(arch_id, cfg, batch).items()
+                           if k != "label"}
+        b_sh = {k: bsp(v) for k, v in batch_specs.items()}
+        return Cell(arch_id, shape.name, fn, (params_shape, batch_specs),
+                    (p_sh, b_sh), None,
+                    meta={"mode": "serve", "batch": batch})
+
+    # retrieval_cand: 1 query × 1M candidates (exact-dot baseline path)
+    n_cand = _pad_to(dims["n_candidates"],
+                     _n_dp(mesh) * mesh.shape["model"])
+    d_emb = {"dlrm-mlperf": 128, "deepfm": 10, "din": 18,
+             "bert4rec": 64}[arch_id]
+
+    def fn(cand_emb, query):
+        return rs.score_candidates_exact(query, cand_emb, k=100)
+
+    cand = _sds((n_cand, d_emb), jnp.float32)
+    q = _sds((d_emb,), jnp.float32)
+    cand_sh = shd.named(mesh, shd.rpq_rows_spec(mesh))
+    return Cell(arch_id, shape.name, fn, (cand, q),
+                (cand_sh, shd.named(mesh, P())), None,
+                meta={"mode": "retrieval", "n_candidates": n_cand,
+                      "d_emb": d_emb})
+
+
+# ==========================================================================
+# RPQ (the paper's system)
+# ==========================================================================
+
+def _rpq_cell(arch_id: str, shape, mesh) -> Cell:
+    from repro.core import quantizer as Q
+    from repro.kernels import ref as kref
+
+    spec = get_arch(arch_id)
+    acfg = spec.make_config()
+    qcfg = acfg.quant
+    dp = data_axes(mesh)
+    dims = shape.dims
+    n_dev = _n_dp(mesh) * mesh.shape["model"]
+
+    params_shape = jax.eval_shape(
+        lambda: Q.init_params(qcfg, jnp.zeros((qcfg.m, qcfg.k, qcfg.dsub))))
+    p_sh = shd.rpq_param_spec(mesh, params_shape)
+    rep = shd.named(mesh, P())
+
+    if shape.name == "quant_train":
+        b, rb, h = dims["batch"], dims["routing_batch"], dims["h"]
+        optimizer = adam(constant_schedule(1e-3))
+        opt_shape = jax.eval_shape(optimizer.init, params_shape)
+        o_sh = shd.tree_shardings(mesh, opt_shape, lambda p, l: P())
+
+        def fn(params, opt_state, trip_x, route_q, route_cand, route_label, key):
+            def loss_fn(p):
+                kt, kr = jax.random.split(key)
+                xa = Q.quantize_st(qcfg, p, trip_x[:, 0], kt)
+                xp = Q.quantize_st(qcfg, p, trip_x[:, 1], kt)
+                xn = Q.quantize_st(qcfg, p, trip_x[:, 2], kt)
+                dpd = jnp.sum((xa - xp) ** 2, -1)
+                dnd = jnp.sum((xa - xn) ** 2, -1)
+                scale = jax.lax.stop_gradient(jnp.mean(dpd) + 1e-9)
+                ln = jnp.mean(jnp.maximum(0.0, 1.0 + (dpd - dnd) / scale))
+                bq, hh, d = route_cand.shape
+                xq = Q.quantize_st(qcfg, p, route_cand.reshape(bq * hh, d),
+                                   kr).reshape(bq, hh, d)
+                r = Q.rotation_matrix(qcfg, p)
+                qrot = route_q @ r.T
+                dd = jnp.sum((xq - qrot[:, None, :]) ** 2, -1)
+                logits = -dd / (jax.lax.stop_gradient(jnp.std(dd) + 1e-9))
+                logp = jax.nn.log_softmax(logits, -1)
+                lr_ = -jnp.mean(jnp.take_along_axis(
+                    logp, route_label[:, None], 1))
+                s = p.log_alpha
+                return lr_ + jnp.exp(-s) * ln + s
+            loss, g = jax.value_and_grad(loss_fn)(params)
+            params, opt_state = optimizer.update(g, opt_state, params)
+            return params, opt_state, loss
+
+        args = (params_shape, opt_shape,
+                _sds((b, 3, qcfg.dim), jnp.float32),
+                _sds((rb, qcfg.dim), jnp.float32),
+                _sds((rb, h, qcfg.dim), jnp.float32),
+                _sds((rb,), jnp.int32),
+                jax.eval_shape(lambda: jax.random.PRNGKey(0)))
+        bspec = lambda nd: shd.named(mesh, P(dp, *([None] * (nd - 1))))
+        return Cell(arch_id, shape.name, fn, args,
+                    (p_sh, o_sh, bspec(3), bspec(2), bspec(3), bspec(1), rep),
+                    (p_sh, o_sh, rep), donate=(0, 1),
+                    meta={"mode": "train", "batch": b})
+
+    if shape.name == "encode_bulk":
+        n = _pad_to(dims["batch"], n_dev)
+        fn = lambda params, x: Q.encode(qcfg, params, x, backend="ref")
+        rows = shd.named(mesh, shd.rpq_rows_spec(mesh))
+        return Cell(arch_id, shape.name, fn,
+                    (params_shape, _sds((n, qcfg.dim), jnp.float32)),
+                    (p_sh, rows), rows, meta={"mode": "serve", "n": n})
+
+    all_axes = tuple(list(dp) + ["model"])
+
+    def _flat_shard_index():
+        idx = jnp.zeros((), jnp.int32)
+        for a in all_axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        return idx
+
+    if shape.name == "adc_bulk":
+        # scatter-gather ADC: each shard scans its code rows and returns a
+        # LOCAL top-k; the merge concatenates per-shard candidates and
+        # re-top-ks — O(shards·k) instead of gathering the (Q, N) distance
+        # matrix (GSPMD's sharded top_k gathered it: 8.2 GB/dev → MBs).
+        n = _pad_to(dims["n_codes"], n_dev)
+        qb = dims["query_batch"]
+        kk = 10
+        n_local = n // n_dev
+
+        def local_scan(codes_l, luts):
+            d = kref.adc_scan_batch_ref(codes_l, luts)       # (Q, N_local)
+            neg, ids = jax.lax.top_k(-d, kk)
+            gids = ids + _flat_shard_index() * n_local
+            return gids[None], (-neg)[None]                  # (1, Q, k)
+
+        def fn(codes, luts):
+            gids, dists = jax.shard_map(
+                local_scan, mesh=mesh,
+                in_specs=(P(all_axes, None), P(None, None, None)),
+                out_specs=(P(all_axes, None, None), P(all_axes, None, None)),
+            )(codes, luts)
+            # (n_shards, Q, k) → global top-k per query
+            ds = dists.transpose(1, 0, 2).reshape(qb, -1)
+            is_ = gids.transpose(1, 0, 2).reshape(qb, -1)
+            neg, order = jax.lax.top_k(-ds, kk)
+            return jnp.take_along_axis(is_, order, axis=1), -neg
+
+        rows = shd.named(mesh, shd.rpq_rows_spec(mesh))
+        return Cell(arch_id, shape.name, fn,
+                    (_sds((n, qcfg.m), jnp.uint8),
+                     _sds((qb, qcfg.m, qcfg.k), jnp.float32)),
+                    (rows, shd.named(mesh, P())), None,
+                    meta={"mode": "retrieval", "n_codes": n, "queries": qb})
+
+    # serve_1m: scatter-gather ADC + LOCAL exact rerank per shard, then a
+    # global top-k merge (DiskANN-style shortlist, faiss-style distribution)
+    n = _pad_to(dims["n_base"], n_dev)
+    qb = dims["query_batch"]
+    kk = dims["k"]
+    n_local = n // n_dev
+
+    def local_serve(codes_l, vectors_l, luts, queries):
+        d = kref.adc_scan_batch_ref(codes_l, luts)           # (Q, N_local)
+        _, cand = jax.lax.top_k(-d, 4 * kk)                  # ADC shortlist
+        cv = vectors_l[cand]                                 # (Q, 4k, D)
+        exact = jnp.sum((cv - queries[:, None, :]) ** 2, -1)
+        neg, order = jax.lax.top_k(-exact, kk)
+        gids = jnp.take_along_axis(cand, order, axis=1) \
+            + _flat_shard_index() * n_local
+        return gids[None], (-neg)[None]
+
+    def fn(codes, vectors, luts, queries):
+        gids, dists = jax.shard_map(
+            local_serve, mesh=mesh,
+            in_specs=(P(all_axes, None), P(all_axes, None),
+                      P(None, None, None), P(None, None)),
+            out_specs=(P(all_axes, None, None), P(all_axes, None, None)),
+        )(codes, vectors, luts, queries)
+        ds = dists.transpose(1, 0, 2).reshape(qb, -1)
+        is_ = gids.transpose(1, 0, 2).reshape(qb, -1)
+        neg, order = jax.lax.top_k(-ds, kk)
+        return jnp.take_along_axis(is_, order, axis=1), -neg
+
+    rows = shd.named(mesh, shd.rpq_rows_spec(mesh))
+    return Cell(arch_id, shape.name, fn,
+                (_sds((n, qcfg.m), jnp.uint8),
+                 _sds((n, qcfg.dim), jnp.float32),
+                 _sds((qb, qcfg.m, qcfg.k), jnp.float32),
+                 _sds((qb, qcfg.dim), jnp.float32)),
+                (rows, rows, shd.named(mesh, P()), shd.named(mesh, P())),
+                None,
+                meta={"mode": "serve", "n_base": n, "queries": qb})
+
+
+# ==========================================================================
+# dispatcher
+# ==========================================================================
+
+def build_cell(arch_id: str, shape_name: str, mesh) -> Cell:
+    spec = get_arch(arch_id)
+    shape = next(s for s in spec.shapes if s.name == shape_name)
+    if spec.family == "lm":
+        return _lm_cell(arch_id, shape, mesh)
+    if spec.family == "gnn":
+        return _gnn_cell(arch_id, shape, mesh)
+    if spec.family == "recsys":
+        return _recsys_cell(arch_id, shape, mesh)
+    if spec.family == "rpq":
+        return _rpq_cell(arch_id, shape, mesh)
+    raise KeyError(spec.family)
+
+
+def all_cells() -> list[tuple[str, str]]:
+    from repro.configs import list_archs
+    out = []
+    for a in list_archs():
+        for s in get_arch(a).shapes:
+            out.append((a, s.name))
+    return out

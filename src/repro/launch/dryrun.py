@@ -1,0 +1,163 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile EVERY (arch × input-shape) cell on the
+16×16 single-pod mesh and the 2×16×16 multi-pod mesh, and capture
+
+  * compiled.memory_analysis()  — per-device bytes (proves it fits),
+  * compiled.cost_analysis()    — per-device FLOPs/bytes for §Roofline,
+  * collective bytes parsed from the partitioned HLO (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute),
+
+into a JSON report consumed by benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                    # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b
+  PYTHONPATH=src python -m repro.launch.dryrun --arch rpq --shape serve_1m \
+      --multi-pod-only --out reports/dryrun.json
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*=\s*"
+    r"((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]))", re.I)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in partitioned HLO.
+
+    Shapes in the partitioned module are PER-DEVICE shard shapes, so the
+    sum is per-device collective traffic (matches the roofline convention
+    collective_bytes / (chips × link_bw) when multiplied back by chips —
+    we report per-device directly).
+    """
+    out: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        kind = m.group(1).lower()
+        total = 0
+        for sm in _SHAPE_RE.finditer(m.group(2)):
+            dt, dims = sm.group(1), sm.group(2)
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0) + total
+        out["count_" + kind] = out.get("count_" + kind, 0) + 1
+    out["total"] = sum(v for k, v in out.items()
+                       if not k.startswith("count_"))
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh, mesh_name: str) -> dict:
+    from repro.launch.cells import build_cell
+
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name}
+    t0 = time.time()
+    try:
+        cell = build_cell(arch, shape, mesh)
+        lowered = cell.lower(mesh)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        rec.update(
+            ok=True,
+            compile_s=round(time.time() - t0, 2),
+            meta=cell.meta,
+            memory=dict(
+                argument_bytes=int(mem.argument_size_in_bytes),
+                output_bytes=int(mem.output_size_in_bytes),
+                temp_bytes=int(mem.temp_size_in_bytes),
+                alias_bytes=int(mem.alias_size_in_bytes),
+                code_bytes=int(mem.generated_code_size_in_bytes),
+            ),
+            cost=dict(
+                flops=float(cost.get("flops", 0.0)),
+                bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+            ),
+            collectives=collective_bytes(hlo),
+        )
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:],
+                   compile_s=round(time.time() - t0, 2))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun.json")
+    ap.add_argument("--append", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch.cells import all_cells
+    from repro.launch.mesh import make_production_mesh
+
+    cells = all_cells()
+    if args.arch:
+        cells = [c for c in cells if c[0] == args.arch]
+    if args.shape:
+        cells = [c for c in cells if c[1] == args.shape]
+
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(("1pod_16x16", make_production_mesh(multi_pod=False)))
+    if not args.single_pod_only:
+        meshes.append(("2pod_2x16x16", make_production_mesh(multi_pod=True)))
+
+    results = []
+    if args.append and os.path.exists(args.out):
+        results = json.load(open(args.out))
+        done = {(r["arch"], r["shape"], r["mesh"]) for r in results if r["ok"]}
+    else:
+        done = set()
+
+    for mesh_name, mesh in meshes:
+        for arch, shape in cells:
+            if (arch, shape, mesh_name) in done:
+                continue
+            rec = run_cell(arch, shape, mesh, mesh_name)
+            status = "OK " if rec["ok"] else "FAIL"
+            mem_gb = (rec.get("memory", {}).get("argument_bytes", 0)
+                      + rec.get("memory", {}).get("temp_bytes", 0)) / 1e9
+            print(f"[{status}] {mesh_name:13s} {arch:22s} {shape:14s} "
+                  f"compile={rec['compile_s']:7.2f}s perdev={mem_gb:7.2f}GB "
+                  f"{'' if rec['ok'] else rec.get('error', '')[:120]}",
+                  flush=True)
+            results = [r for r in results
+                       if not (r["arch"] == arch and r["shape"] == shape
+                               and r["mesh"] == mesh_name)]
+            results.append(rec)
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n{n_ok}/{len(results)} cells compiled; report → {args.out}")
+    return 0 if n_ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,40 @@
+"""Production mesh builders (dry-run + real-cluster entry point).
+
+FUNCTIONS, not module constants — importing this module never touches jax
+device state (the brief's requirement). Axis semantics:
+
+  pod    — inter-pod data parallelism (DCN-connected slices)
+  data   — intra-pod data / FSDP axis (batch, parameter shards)
+  model  — tensor/expert/table parallel axis
+
+Hardware constants for the roofline model (TPU v5e per chip).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+# TPU v5e (the assignment's target; used by benchmarks/roofline.py)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+HBM_BW = 819e9                # B/s per chip
+ICI_BW = 50e9                 # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Whatever devices exist locally (tests, examples): (1, n) mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """All batch-parallel axes present in `mesh` (pod included if any)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

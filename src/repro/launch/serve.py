@@ -1,0 +1,99 @@
+"""ANN serving driver: load a trained RPQ checkpoint and serve queries.
+
+    PYTHONPATH=src python -m repro.launch.serve --ckpt-dir runs/rpq \
+        --dataset sift-small [--scenario hybrid|memory] [--h 32] [--port-stdin]
+
+Loads the latest checkpoint written by launch/train.py, rebuilds the
+serving engine (codes are re-encoded from the checkpointed quantizer —
+deterministic), and either runs a one-shot evaluation batch or reads
+newline-delimited query vectors from stdin (toy request loop; a real
+deployment fronts this with an RPC layer and shards the codes per
+dist/sharding.rpq_rows_spec — see the rpq serve_1m dry-run cell).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import RPQConfig
+from repro.core.quantizer import RPQParams
+from repro.core.trainer import to_model
+from repro.data import load_dataset
+from repro.dist import checkpoint as ckpt
+from repro.graphs.knn import knn_ids
+from repro.launch.train import build_or_load_graph
+from repro.pq import base as pqbase
+from repro.search.engine import HybridEngine, InMemoryEngine
+from repro.search.metrics import measure_qps, recall_at_k
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt-dir", required=True)
+    ap.add_argument("--dataset", default="sift-small")
+    ap.add_argument("--scenario", choices=("hybrid", "memory"),
+                    default="hybrid")
+    ap.add_argument("--h", type=int, default=32)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--graph-r", type=int, default=24)
+    ap.add_argument("--graph-l", type=int, default=48)
+    ap.add_argument("--port-stdin", action="store_true",
+                    help="read whitespace-separated query vectors on stdin")
+    args = ap.parse_args()
+
+    state = ckpt.restore(args.ckpt_dir)
+    extra = state.get("extra") or {}
+    ds = load_dataset(extra.get("dataset", args.dataset))
+    m, k = extra.get("m", 8), extra.get("k", 64)
+    cfg = RPQConfig(dim=ds.dim, m=m, k=k)
+    flat = state["params"]
+    params = RPQParams(theta=jnp.asarray(flat["theta"]),
+                       codebooks=jnp.asarray(flat["codebooks"]),
+                       log_alpha=jnp.asarray(flat["log_alpha"]))
+    model = to_model(cfg, params)
+    print(f"[serve] restored step {state['step']} quantizer "
+          f"(M={m}, K={k}) from {args.ckpt_dir}")
+
+    graph = build_or_load_graph(jax.random.PRNGKey(0), ds.base,
+                                f"{args.ckpt_dir}/graph_base.npz",
+                                args.graph_r, args.graph_l)
+    codes = pqbase.encode(model, ds.base)
+    lut_fn = lambda q: pqbase.build_lut(model, q)
+    if args.scenario == "hybrid":
+        engine = HybridEngine(graph, codes, lut_fn, vectors=ds.base)
+    else:
+        engine = InMemoryEngine(graph, codes, lut_fn)
+
+    if args.port_stdin:
+        print(f"[serve] reading {ds.dim}-d queries from stdin "
+              f"(one per line; EOF to stop)")
+        for line in sys.stdin:
+            vals = np.fromstring(line, sep=" ", dtype=np.float32)
+            if vals.size != ds.dim:
+                print(f"!! expected {ds.dim} floats, got {vals.size}")
+                continue
+            t0 = time.perf_counter()
+            res = engine.search(jnp.asarray(vals)[None], k=args.k, h=args.h)
+            dt = (time.perf_counter() - t0) * 1e3
+            ids = np.asarray(res.ids[0]).tolist()
+            print(f"ids={ids} dists={np.asarray(res.dists[0]).round(3).tolist()} "
+                  f"({dt:.1f} ms, {int(res.hops[0])} hops)")
+        return
+
+    gt, _ = knn_ids(ds.base, ds.queries, args.k)
+    qps, res = measure_qps(lambda q: engine.search(q, k=args.k, h=args.h),
+                           ds.queries)
+    print(f"[serve] {args.scenario}: recall@{args.k}="
+          f"{recall_at_k(res.ids, gt, args.k):.4f} qps={qps:.1f} "
+          f"hops={float(res.hops.mean()):.1f} "
+          f"resident={engine.memory_bytes()/1e6:.1f}MB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Architecture zoo: LM (dense/MoE), GNN (GAT), recsys (DLRM/DeepFM/DIN/BERT4Rec)."""

@@ -1,0 +1,203 @@
+"""Shared neural-net layers for the architecture zoo (pure-JAX pytrees).
+
+Conventions
+-----------
+* params are nested dicts of jnp arrays; layer-stacked weights carry a
+  leading (L, ...) axis and are consumed by `lax.scan` (keeps HLO size flat
+  in depth — a 126-layer 405B train step compiles in seconds).
+* compute dtype bf16, parameters bf16, reductions/softmax fp32.
+* attention is GQA throughout (n_kv ≤ n_heads); decode takes a KV cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def uniform_init(key, shape, scale, dtype=jnp.bfloat16):
+    return jax.random.uniform(key, shape, jnp.float32, -scale, scale).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype=jnp.bfloat16, stacked: int = 0):
+    shape = (stacked, d_in, d_out) if stacked else (d_in, d_out)
+    return uniform_init(key, shape, 1.0 / np.sqrt(d_in), dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(ms + eps)).astype(x.dtype) * gamma
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma + beta
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0
+               ) -> jax.Array:
+    """x: (..., S, H, d_head); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, d/2)
+    cos = jnp.cos(ang)[..., None, :]                            # (..., S, 1, d/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA attention (train / prefill / decode)
+# --------------------------------------------------------------------------
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool, q_offset: jax.Array | int = 0,
+                  kv_len: Optional[jax.Array] = None,
+                  seq_shard_axis: Optional[str] = None) -> jax.Array:
+    """Grouped-query attention.
+
+    q: (B, Sq, Hq, d), k/v: (B, Skv, Hkv, d) with Hq = G·Hkv.
+    q_offset: absolute position of q[0] (decode: cache length).
+    kv_len: optional valid-prefix length of k/v (masks cache tail).
+    seq_shard_axis: pin the score matrix's Skv dim to this mesh axis —
+      keeps decode attention as a SHARDED softmax (partial max/sum psums)
+      instead of letting GSPMD all-gather the whole KV cache out of the
+      layer scan (measured 33 GB/dev hoisted gather on 405B decode_32k;
+      EXPERIMENTS §Perf iteration 8).
+    Returns (B, Sq, Hq, d).
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores / np.sqrt(d)
+    if seq_shard_axis is not None:
+        scores = jax.lax.with_sharding_constraint(
+            scores, jax.sharding.PartitionSpec(
+                None, None, None, None, seq_shard_axis))
+    qpos = jnp.asarray(q_offset) + jnp.arange(sq)
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask = kpos[None, :] <= qpos[:, None]
+    if kv_len is not None:
+        mask = mask & (kpos[None, :] < kv_len)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, hq, d)
+
+
+def chunked_gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                          causal: bool, q_chunk: int = 2048,
+                          kv_chunk: int = 1024,
+                          q_offset: jax.Array | int = 0,
+                          kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Online-softmax (flash-style) GQA attention in pure lax.
+
+    Never materializes the (Sq, Skv) score matrix: double scan over q-chunks
+    (outer) and kv-chunks (inner) with running (max, sum, acc) — the TPU
+    re-derivation of FlashAttention for XLA (DESIGN.md §3). Peak score
+    buffer = (B, Hkv, G, q_chunk, kv_chunk) f32.
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    nq = max(sq // q_chunk, 1)
+    q_chunk = sq // nq
+    nkv = max(skv // kv_chunk, 1)
+    kv_chunk = skv // nkv
+
+    qg = q.reshape(b, nq, q_chunk, hkv, g, d).astype(jnp.bfloat16)
+    kc = k.reshape(b, nkv, kv_chunk, hkv, d).astype(jnp.bfloat16)
+    vc = v.reshape(b, nkv, kv_chunk, hkv, d).astype(jnp.bfloat16)
+    scale = 1.0 / np.sqrt(d)
+
+    def q_step(_, qi):
+        qblk = qg[:, qi]                                  # (B, qc, Hkv, G, d)
+        qpos = jnp.asarray(q_offset) + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk = kc[:, ki]
+            vblk = vc[:, ki]
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask = kpos[None, :] <= qpos[:, None]
+            if kv_len is not None:
+                mask = mask & (kpos[None, :] < kv_len)
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(jnp.bfloat16), vblk,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(nkv))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]      # (B, Hkv, G, qc, d)
+        return None, out.transpose(0, 3, 1, 2, 4)          # (B, qc, Hkv, G, d)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))   # (nq, B, qc, ...)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, hq, d)
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    h = jax.nn.silu((x @ w1).astype(jnp.float32)).astype(x.dtype) * (x @ w3)
+    return h @ w2
+
+
+def mlp_stack(key, sizes: list[int], dtype=jnp.float32):
+    """Plain MLP params for recsys towers: [(w, b), ...]."""
+    params = []
+    for i in range(len(sizes) - 1):
+        key, sub = jax.random.split(key)
+        params.append({
+            "w": dense_init(sub, sizes[i], sizes[i + 1], dtype),
+            "b": jnp.zeros((sizes[i + 1],), dtype),
+        })
+    return params
+
+
+def mlp_apply(params, x, *, final_act: bool = False):
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(params) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x

@@ -1,0 +1,100 @@
+"""Mixture-of-Experts FFN with GShard-style einsum dispatch (TPU-idiomatic).
+
+Top-k routing with per-group expert capacity. The dispatch/combine tensors
+are one-hot over (expert, capacity-slot) and contract on the MXU; under SPMD
+the (tokens→experts) re-layout lowers to the classic MoE all-to-all on the
+`model` (expert-parallel) mesh axis. Group size bounds the dispatch tensor:
+total one-hot footprint = T × S_group × k × capacity_factor elements.
+
+Priority: choice-rank major (all tokens' 1st choices beat any 2nd choice),
+matching GShard; overflow tokens are dropped (their combine weight is 0).
+
+Aux loss: Switch-style load balancing  E · Σ_e f_e · p_e.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as nn
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    group_size: int = 1024
+    aux_coef: float = 0.01
+
+
+def init_moe(key, cfg: MoEConfig, d_model: int, n_layers: int,
+             dtype=jnp.bfloat16):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    e, f = cfg.n_experts, cfg.d_ff_expert
+    return {
+        "router": nn.dense_init(k1, d_model, e, jnp.float32, stacked=n_layers),
+        "w1": nn.uniform_init(k2, (n_layers, e, d_model, f),
+                              (d_model ** -0.5), dtype),
+        "w3": nn.uniform_init(k3, (n_layers, e, d_model, f),
+                              (d_model ** -0.5), dtype),
+        "w2": nn.uniform_init(k4, (n_layers, e, f, d_model),
+                              (f ** -0.5), dtype),
+    }
+
+
+class MoEOut(NamedTuple):
+    y: jax.Array
+    aux_loss: jax.Array
+
+
+def moe_ffn(x: jax.Array, w, cfg: MoEConfig) -> MoEOut:
+    """x: (T, D) token slab (one layer's weights w, unstacked).
+
+    Returns mixed expert outputs (T, D) + the load-balancing aux loss.
+    """
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    s = min(cfg.group_size, t)
+    g = t // s
+    cap = int(s * k * cfg.capacity_factor / e) + 1
+
+    xg = x.reshape(g, s, d)
+    logits = (xg.astype(jnp.float32) @ w["router"])            # (G, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)            # (G, S, k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    # position assignment, choice-rank major: (G, k, S, E) cumsum over (k, S)
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)   # (G, S, k, E)
+    oh_rank = onehot.transpose(0, 2, 1, 3).reshape(g, k * s, e)  # rank-major
+    pos_rank = jnp.cumsum(oh_rank, axis=1) - oh_rank             # excl. cumsum
+    pos = (pos_rank.reshape(g, k, s, e).transpose(0, 2, 1, 3)
+           * onehot).sum(-1)                                     # (G, S, k)
+    keep = pos < cap
+
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+    pos_i = jnp.where(keep, pos, cap).astype(jnp.int32)
+    pos_oh = jax.nn.one_hot(pos_i, cap, dtype=jnp.float32)
+    # dispatch (G, S, E, C): sum over the k choices (disjoint slots)
+    dispatch = jnp.einsum("gske,gskc->gsec", onehot * keep[..., None], pos_oh)
+    combine = jnp.einsum("gske,gskc->gsec",
+                         onehot * gate_vals[..., None], pos_oh)
+
+    xin = jnp.einsum("gsec,gsd->egcd", dispatch.astype(x.dtype), xg)  # (E,G,C,D)
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xin, w["w1"])
+                    .astype(jnp.float32)).astype(x.dtype) \
+        * jnp.einsum("egcd,edf->egcf", xin, w["w3"])
+    yout = jnp.einsum("egcf,efd->egcd", h, w["w2"])                  # (E,G,C,D)
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), yout)
+
+    # Switch aux loss: fraction routed vs mean router prob, per expert
+    frac = jnp.mean(onehot.sum(2), axis=(0, 1)) / k
+    pmean = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.aux_coef * e * jnp.sum(frac * pmean)
+    return MoEOut(y=y.reshape(t, d), aux_loss=aux)

@@ -1,0 +1,350 @@
+"""Recsys architecture family: DLRM, DeepFM, DIN, BERT4Rec (assigned pool).
+
+The shared hot path is the sparse embedding lookup. JAX has no native
+EmbeddingBag — per the brief, we BUILD it: `jnp.take` + `jax.ops.segment_sum`
+(multi-hot bags) or plain take (one-hot fields). All four models store their
+categorical tables as ONE concatenated mega-table with per-field row offsets
+(the classic DLRM layout) so the distribution layer can row-shard a single
+array over the `model` axis (dist/sharding.py implements the mod-sharded
+lookup: local gather + psum ≡ TorchRec's all-to-all).
+
+`retrieval_cand` (1 query × 1M candidates) is scored two ways:
+  * exact dot product (baseline, one GEMV), and
+  * the paper's technique: PQ-compressed candidate embeddings scanned with
+    the Pallas ADC kernel — this is RPQ's serving kernel applied verbatim
+    (DESIGN.md §5), reported as the beyond-paper optimized variant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import adam, constant_schedule
+from repro.models import layers as nn
+
+
+# --------------------------------------------------------------------------
+# EmbeddingBag substrate
+# --------------------------------------------------------------------------
+
+def embedding_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """One-hot fields: (rows, D) × (..., F) → (..., F, D)."""
+    return jnp.take(table, ids, axis=0)
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array, bag_ids: jax.Array,
+                  n_bags: int, mode: str = "sum") -> jax.Array:
+    """Multi-hot EmbeddingBag: gather + segment-reduce.
+
+    ids (T,) row ids, bag_ids (T,) bag assignment → (n_bags, D).
+    """
+    vals = jnp.take(table, ids, axis=0)
+    out = jax.ops.segment_sum(vals, bag_ids, num_segments=n_bags)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones((ids.shape[0], 1), vals.dtype),
+                                  bag_ids, num_segments=n_bags)
+        out = out / jnp.maximum(cnt, 1.0)
+    return out
+
+
+def make_mega_table(key, row_counts: Sequence[int], dim: int,
+                    dtype=jnp.float32, pad_rows_to: int = 512):
+    """Rows padded to a mesh-divisible multiple (512 = max device count);
+    padding rows are unreachable via per-field offsets."""
+    total = int(sum(row_counts))
+    total = ((total + pad_rows_to - 1) // pad_rows_to) * pad_rows_to
+    table = nn.uniform_init(key, (total, dim), 1.0 / np.sqrt(dim), dtype)
+    return table, field_offsets(row_counts)
+
+
+def field_offsets(row_counts: Sequence[int]) -> jax.Array:
+    """Static per-field row offsets into the mega-table (NOT a parameter:
+    integer arrays must stay out of the grad pytree)."""
+    off = np.concatenate([[0], np.cumsum(row_counts)[:-1]]).astype(np.int64)
+    return jnp.asarray(off, jnp.int32)
+
+
+def field_lookup(table: jax.Array, offsets: jax.Array, ids: jax.Array
+                 ) -> jax.Array:
+    """ids (B, F) per-field local ids → (B, F, D) via the mega-table."""
+    return embedding_lookup(table, ids + offsets[None, :])
+
+
+# --------------------------------------------------------------------------
+# DLRM (Naumov et al. 2019, MLPerf config)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str
+    n_dense: int
+    row_counts: tuple[int, ...]   # 26 tables (Criteo 1TB)
+    embed_dim: int
+    bot_mlp: tuple[int, ...]
+    top_mlp: tuple[int, ...]
+    dtype: Any = jnp.float32
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.row_counts)
+
+
+def init_dlrm(key, cfg: DLRMConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    table, _ = make_mega_table(k1, cfg.row_counts, cfg.embed_dim, cfg.dtype)
+    n_f = cfg.n_sparse + 1
+    n_int = n_f * (n_f - 1) // 2
+    return {
+        "table": table,
+        "bot": nn.mlp_stack(k2, [cfg.n_dense, *cfg.bot_mlp], cfg.dtype),
+        "top": nn.mlp_stack(k3, [n_int + cfg.bot_mlp[-1], *cfg.top_mlp], cfg.dtype),
+    }
+
+
+def dlrm_forward(cfg: DLRMConfig, params, dense: jax.Array, sparse: jax.Array,
+                 *, lookup_fn=field_lookup) -> jax.Array:
+    """dense (B, 13), sparse (B, 26) int32 → logits (B,)."""
+    offsets = field_offsets(cfg.row_counts)
+    d = nn.mlp_apply(params["bot"], dense, final_act=True)     # (B, D)
+    emb = lookup_fn(params["table"], offsets, sparse)          # (B, 26, D)
+    feats = jnp.concatenate([d[:, None, :], emb], axis=1)      # (B, 27, D)
+    inter = jnp.einsum("bfd,bgd->bfg", feats, feats)           # (B, 27, 27)
+    iu = jnp.triu_indices(feats.shape[1], k=1)
+    flat = inter[:, iu[0], iu[1]]                              # (B, 351)
+    top_in = jnp.concatenate([d, flat], axis=1)
+    return nn.mlp_apply(params["top"], top_in)[:, 0]
+
+
+# --------------------------------------------------------------------------
+# DeepFM (Guo et al. 2017)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DeepFMConfig:
+    name: str
+    row_counts: tuple[int, ...]   # 39 fields (Criteo)
+    embed_dim: int
+    mlp: tuple[int, ...]
+    dtype: Any = jnp.float32
+
+    @property
+    def n_fields(self) -> int:
+        return len(self.row_counts)
+
+
+def init_deepfm(key, cfg: DeepFMConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    table, _ = make_mega_table(k1, cfg.row_counts, cfg.embed_dim, cfg.dtype)
+    table_lin, _ = make_mega_table(k2, cfg.row_counts, 1, cfg.dtype)
+    return {
+        "table": table, "table_lin": table_lin,
+        "deep": nn.mlp_stack(k3, [cfg.n_fields * cfg.embed_dim, *cfg.mlp, 1],
+                             cfg.dtype),
+    }
+
+
+def deepfm_forward(cfg: DeepFMConfig, params, sparse: jax.Array,
+                   *, lookup_fn=field_lookup) -> jax.Array:
+    offsets = field_offsets(cfg.row_counts)
+    emb = lookup_fn(params["table"], offsets, sparse)             # (B, F, D)
+    lin = lookup_fn(params["table_lin"], offsets, sparse)[..., 0]
+    # FM 2nd order: ½[(Σv)² − Σv²]
+    s = jnp.sum(emb, axis=1)
+    fm2 = 0.5 * jnp.sum(s * s - jnp.sum(emb * emb, axis=1), axis=-1)
+    deep = nn.mlp_apply(params["deep"], emb.reshape(emb.shape[0], -1))[:, 0]
+    return jnp.sum(lin, axis=1) + fm2 + deep
+
+
+# --------------------------------------------------------------------------
+# DIN (Zhou et al. 2018)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    name: str
+    n_items: int
+    embed_dim: int
+    seq_len: int
+    attn_mlp: tuple[int, ...]
+    mlp: tuple[int, ...]
+    dtype: Any = jnp.float32
+
+
+def init_din(key, cfg: DINConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    table, _ = make_mega_table(k1, [cfg.n_items], cfg.embed_dim, cfg.dtype)
+    d = cfg.embed_dim
+    return {
+        "table": table,
+        "attn": nn.mlp_stack(k2, [4 * d, *cfg.attn_mlp, 1], cfg.dtype),
+        "mlp": nn.mlp_stack(k3, [3 * d, *cfg.mlp, 1], cfg.dtype),
+    }
+
+
+def din_forward(cfg: DINConfig, params, hist: jax.Array, hist_mask: jax.Array,
+                target: jax.Array, *, lookup_fn=None) -> jax.Array:
+    """hist (B, S) item ids, hist_mask (B, S) bool, target (B,) → logits."""
+    table = params["table"]
+    he = jnp.take(table, hist, axis=0)                 # (B, S, D)
+    te = jnp.take(table, target, axis=0)               # (B, D)
+    tb = jnp.broadcast_to(te[:, None, :], he.shape)
+    att_in = jnp.concatenate([he, tb, he - tb, he * tb], axis=-1)
+    w = nn.mlp_apply(params["attn"], att_in)[..., 0]   # (B, S)
+    w = jnp.where(hist_mask, w, -1e30)
+    w = jax.nn.softmax(w, axis=-1)
+    interest = jnp.einsum("bs,bsd->bd", w, he)
+    out_in = jnp.concatenate([interest, te, interest * te], axis=-1)
+    return nn.mlp_apply(params["mlp"], out_in)[:, 0]
+
+
+# --------------------------------------------------------------------------
+# BERT4Rec (Sun et al. 2019)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Bert4RecConfig:
+    name: str
+    n_items: int
+    embed_dim: int
+    n_blocks: int
+    n_heads: int
+    seq_len: int
+    dtype: Any = jnp.float32
+
+    @property
+    def mask_token(self) -> int:
+        return self.n_items  # vocab = n_items + 1 (mask)
+
+    @property
+    def vocab_padded(self) -> int:
+        """Item vocab (+mask) padded to 256 for mesh divisibility; padded
+        rows are masked out of the MLM softmax."""
+        return ((self.n_items + 1 + 255) // 256) * 256
+
+
+def init_bert4rec(key, cfg: Bert4RecConfig):
+    keys = jax.random.split(key, 8)
+    d, l = cfg.embed_dim, cfg.n_blocks
+    return {
+        "item_emb": nn.uniform_init(keys[0], (cfg.vocab_padded, d),
+                                    d ** -0.5, cfg.dtype),
+        "pos_emb": nn.uniform_init(keys[1], (cfg.seq_len, d), 0.02, cfg.dtype),
+        "wq": nn.dense_init(keys[2], d, d, cfg.dtype, stacked=l),
+        "wk": nn.dense_init(keys[3], d, d, cfg.dtype, stacked=l),
+        "wv": nn.dense_init(keys[4], d, d, cfg.dtype, stacked=l),
+        "wo": nn.dense_init(keys[5], d, d, cfg.dtype, stacked=l),
+        "w1": nn.dense_init(keys[6], d, 4 * d, cfg.dtype, stacked=l),
+        "w2": nn.dense_init(keys[7], 4 * d, d, cfg.dtype, stacked=l),
+        "ln1": jnp.ones((l, d), cfg.dtype), "ln1b": jnp.zeros((l, d), cfg.dtype),
+        "ln2": jnp.ones((l, d), cfg.dtype), "ln2b": jnp.zeros((l, d), cfg.dtype),
+    }
+
+
+def bert4rec_encode(cfg: Bert4RecConfig, params, items: jax.Array,
+                    pad_mask: jax.Array) -> jax.Array:
+    """items (B, S) (mask_token allowed), pad_mask (B, S) → (B, S, D)."""
+    b, s = items.shape
+    d, h = cfg.embed_dim, cfg.n_heads
+    x = params["item_emb"][items] + params["pos_emb"][None, :s]
+
+    def block(x, w):
+        hn = nn.layernorm(x, w["ln1"], w["ln1b"])
+        q = (hn @ w["wq"]).reshape(b, s, h, d // h)
+        k = (hn @ w["wk"]).reshape(b, s, h, d // h)
+        v = (hn @ w["wv"]).reshape(b, s, h, d // h)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(d // h)
+        scores = jnp.where(pad_mask[:, None, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(x.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, d)
+        x = x + o @ w["wo"]
+        hn = nn.layernorm(x, w["ln2"], w["ln2b"])
+        return x + jax.nn.gelu((hn @ w["w1"]).astype(jnp.float32)).astype(x.dtype) @ w["w2"], None
+
+    stacked = {k: params[k] for k in
+               ("wq", "wk", "wv", "wo", "w1", "w2", "ln1", "ln1b", "ln2", "ln2b")}
+    # remat: at train_batch=65536 the un-checkpointed f32 attention probs
+    # stack to 2.6 GB/dev per block (§Perf iter 9b)
+    blk = jax.remat(lambda xx, ww: block(xx, ww)[0])
+    x, _ = jax.lax.scan(lambda c, w: (blk(c, w), None), x, stacked)
+    return x
+
+
+def bert4rec_mlm_loss(cfg: Bert4RecConfig, params, items, pad_mask,
+                      mlm_positions, mlm_labels, logit_pspec=None):
+    """Masked-item prediction: positions (B, P) into the sequence.
+
+    logit_pspec: optional PartitionSpec pinning the (B, P, V) logits (batch
+    over dp, vocab over model) — without it GSPMD replicates the MLM logits
+    (26 GB/dev at batch 65536; EXPERIMENTS §Perf)."""
+    h = bert4rec_encode(cfg, params, items, pad_mask)
+    sel = jnp.take_along_axis(h, mlm_positions[..., None], axis=1)  # (B,P,D)
+    logits = (sel @ params["item_emb"].T).astype(jnp.float32)
+    if logit_pspec is not None:
+        logits = jax.lax.with_sharding_constraint(logits, logit_pspec)
+    vocab_iota = jnp.arange(cfg.vocab_padded)
+    if cfg.vocab_padded != cfg.n_items + 1:
+        logits = jnp.where((vocab_iota > cfg.n_items)[None, None, :], -1e30,
+                           logits)
+    # NLL via iota-compare (NOT take_along_axis: a label gather over the
+    # model-sharded vocab dim makes GSPMD replicate the logits — 26 GB/dev
+    # at batch 65536; elementwise select shards cleanly. §Perf iter 9)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    label_logit = jnp.sum(
+        jnp.where(vocab_iota[None, None, :] == mlm_labels[..., None],
+                  logits, 0.0), axis=-1)
+    nll = lse - label_logit
+    valid = mlm_labels >= 0
+    nll = jnp.where(valid, nll, 0.0)
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+
+
+# --------------------------------------------------------------------------
+# Retrieval scoring (retrieval_cand shape) — exact and PQ/ADC paths
+# --------------------------------------------------------------------------
+
+def score_candidates_exact(query_vec: jax.Array, cand_emb: jax.Array,
+                           k: int = 100):
+    """(D,) × (N, D) → top-k (scores, ids): one GEMV, the baseline."""
+    scores = cand_emb @ query_vec
+    vals, ids = jax.lax.top_k(scores, k)
+    return vals, ids
+
+
+def score_candidates_adc(lut: jax.Array, cand_codes: jax.Array, k: int = 100,
+                         backend: str = "auto"):
+    """The paper's kernel as a recsys scorer: (M,K) LUT × (N,M) codes.
+
+    Distances ascend = similarity descends; returns top-k by −distance.
+    """
+    from repro.kernels import ops as kops
+    d = kops.adc_scan(cand_codes, lut, backend=backend)
+    vals, ids = jax.lax.top_k(-d, k)
+    return -vals, ids
+
+
+# --------------------------------------------------------------------------
+# Shared training-step factory (BCE point-wise ranking)
+# --------------------------------------------------------------------------
+
+def bce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    z = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0) - z * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def make_bce_train_step(forward_fn, init_fn, lr: float = 1e-3):
+    optimizer = adam(constant_schedule(lr))
+
+    def train_step(params, opt_state, batch):
+        def loss(p):
+            return bce_loss(forward_fn(p, batch), batch["label"])
+        l, g = jax.value_and_grad(loss)(params)
+        params, opt_state = optimizer.update(g, opt_state, params)
+        return params, opt_state, l
+
+    return init_fn, train_step, optimizer.init

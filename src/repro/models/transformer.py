@@ -1,0 +1,402 @@
+"""Decoder-only LM family (dense GQA + optional MoE FFN).
+
+Covers granite-3-8b, llama3-405b, starcoder2-3b (dense) and
+granite-moe-1b-a400m, olmoe-1b-7b (MoE) from the assigned pool.
+
+Engineering for the 512-chip dry-run:
+* layer weights are stacked (L, ...) and consumed by `lax.scan` + `jax.remat`
+  — HLO size is depth-independent; a 405B/126L train step compiles in ~3 s;
+* `train_step` does gradient accumulation over `microbatches` with an inner
+  scan (bounds live activations: one microbatch at a time);
+* logits/vocab math runs in fp32; embeddings are input/output-tied
+  (configurable) so the vocab matrix shards once over `model`;
+* `decode_step` is flash-decoding-friendly: one token vs a (possibly huge)
+  KV cache with a valid-length mask — O(S) per token, which is why the
+  long_500k decode cells are runnable even for full-attention archs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import adam, constant_schedule
+from repro.models import layers as nn
+from repro.models.moe import MoEConfig, init_moe, moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    rope_theta: float = 10000.0
+    moe: Optional[MoEConfig] = None
+    dtype: Any = jnp.bfloat16
+    tie_embeddings: bool = True
+    # training-time knobs (the §Perf loop tunes these)
+    microbatches: int = 1
+    remat: bool = True
+    opt_slot_dtype: Any = jnp.float32
+    grad_dtype: Any = jnp.float32
+    # flash-style chunked attention (0 = disabled, use full-score path)
+    attn_q_chunk: int = 1024
+    attn_kv_chunk: int = 1024
+    # remat granularity: scan over n_layers/layer_block blocks, saving one
+    # residual per BLOCK instead of per layer (126-layer 405B: 17 GB → 2.4 GB
+    # of saved residuals at layer_block=7; §Perf hillclimb)
+    layer_block: int = 1
+    # unroll the outer block loop in Python instead of lax.scan. Measured
+    # WORSE (all block gathers' live ranges overlap → 492 GB/dev on 405B);
+    # kept as a knob for the §Perf log. Refuted hypothesis, iteration 3.
+    unroll_blocks: bool = False
+    # place an optimization_barrier on each scanned layer's weight slice:
+    # stops GSPMD's slice(all-gather(stack)) rewrite, keeping the FSDP
+    # all-gather PER-LAYER inside the loop (50 GB hoisted gather → one
+    # layer's worth). §Perf hillclimb iteration 4.
+    gather_barrier: bool = False
+    # optional activation sharding hint: axis names for the batch dim of
+    # (B, S, D) activations (set by launch/cells.py per mesh)
+    act_batch_axes: Optional[tuple] = None
+    # Megatron-style sequence parallelism: shard the residual stream's S dim
+    # over this axis (attention all-gathers K/V per layer — 16 MB vs GBs of
+    # activation stacks on 405B). §Perf hillclimb iteration 5.
+    act_seq_axis: Optional[str] = None
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up to 256 (TPU lane alignment + mesh divisibility;
+        llama-3's 128256 is already such a padded figure). Padded logit
+        columns are masked to −inf in lm_loss."""
+        return ((self.vocab + 255) // 256) * 256
+
+    @property
+    def param_count(self) -> int:
+        d, f, l, v = self.d_model, self.d_ff, self.n_layers, self.vocab
+        attn = d * self.n_heads * self.d_head * 2 \
+            + d * self.n_kv_heads * self.d_head * 2
+        if self.moe:
+            ff = 3 * d * self.moe.d_ff_expert * self.moe.n_experts \
+                + d * self.moe.n_experts
+        else:
+            ff = 3 * d * f
+        return l * (attn + ff + 2 * d) + v * d + d
+
+    @property
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k experts only)."""
+        if not self.moe:
+            return self.param_count
+        d, l = self.d_model, self.n_layers
+        dense = self.param_count - l * 3 * d * self.moe.d_ff_expert * self.moe.n_experts
+        return dense + l * 3 * d * self.moe.d_ff_expert * self.moe.top_k
+
+
+def init_lm(key: jax.Array, cfg: LMConfig):
+    keys = jax.random.split(key, 8)
+    d, l = cfg.d_model, cfg.n_layers
+    hq = cfg.n_heads * cfg.d_head
+    hkv = cfg.n_kv_heads * cfg.d_head
+    params = {
+        "embed": nn.uniform_init(keys[0], (cfg.vocab_padded, d), d ** -0.5,
+                                 cfg.dtype),
+        "ln_f": jnp.ones((d,), cfg.dtype),
+        "attn": {
+            "wq": nn.dense_init(keys[1], d, hq, cfg.dtype, stacked=l),
+            "wk": nn.dense_init(keys[2], d, hkv, cfg.dtype, stacked=l),
+            "wv": nn.dense_init(keys[3], d, hkv, cfg.dtype, stacked=l),
+            "wo": nn.dense_init(keys[4], hq, d, cfg.dtype, stacked=l),
+        },
+        "ln1": jnp.ones((l, d), cfg.dtype),
+        "ln2": jnp.ones((l, d), cfg.dtype),
+    }
+    if cfg.moe:
+        params["moe"] = init_moe(keys[5], cfg.moe, d, l, cfg.dtype)
+    else:
+        params["mlp"] = {
+            "w1": nn.dense_init(keys[5], d, cfg.d_ff, cfg.dtype, stacked=l),
+            "w3": nn.dense_init(keys[6], d, cfg.d_ff, cfg.dtype, stacked=l),
+            "w2": nn.dense_init(keys[7], cfg.d_ff, d, cfg.dtype, stacked=l),
+        }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = nn.dense_init(keys[6], d, cfg.vocab_padded,
+                                          cfg.dtype)
+    return params
+
+
+def _layer_weights(params, cfg: LMConfig):
+    w = {"attn": params["attn"], "ln1": params["ln1"], "ln2": params["ln2"]}
+    w["ffn"] = params["moe"] if cfg.moe else params["mlp"]
+    return w
+
+
+def _attend(cfg: LMConfig, q, k, v, *, causal=True, q_offset=0, kv_len=None):
+    """Dispatch full-score vs chunked (flash-style) attention."""
+    use_chunked = (cfg.attn_kv_chunk > 0
+                   and k.shape[1] >= 2 * cfg.attn_kv_chunk
+                   and q.shape[1] > 1)
+    if use_chunked:
+        return nn.chunked_gqa_attention(
+            q, k, v, causal=causal, q_chunk=cfg.attn_q_chunk,
+            kv_chunk=cfg.attn_kv_chunk, q_offset=q_offset, kv_len=kv_len)
+    return nn.gqa_attention(q, k, v, causal=causal, q_offset=q_offset,
+                            kv_len=kv_len)
+
+
+def _constrain(cfg: LMConfig, x: jax.Array) -> jax.Array:
+    if cfg.act_batch_axes is not None:
+        rest = [None] * (x.ndim - 1)
+        if cfg.act_seq_axis is not None and x.ndim >= 3:
+            rest[0] = cfg.act_seq_axis
+        x = jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(tuple(cfg.act_batch_axes), *rest))
+    return x
+
+
+def _one_layer(cfg: LMConfig, x: jax.Array, w, positions: jax.Array):
+    """x: (B, S, D). Returns (x', aux_loss)."""
+    b, s, d = x.shape
+    x = _constrain(cfg, x)  # pin batch-sharding (GSPMD replicates otherwise:
+    #                         measured 2.1 GB/dev score buffers, §Perf iter 2)
+    if cfg.gather_barrier:
+        w = jax.lax.optimization_barrier(w)
+    h = nn.rmsnorm(x, w["ln1"])
+    q = (h @ w["attn"]["wq"]).reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = (h @ w["attn"]["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = (h @ w["attn"]["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    q = nn.apply_rope(q, positions, cfg.rope_theta)
+    k = nn.apply_rope(k, positions, cfg.rope_theta)
+    o = _attend(cfg, q, k, v, causal=True)
+    x = x + (o.reshape(b, s, -1) @ w["attn"]["wo"])
+    h = nn.rmsnorm(x, w["ln2"])
+    if cfg.moe:
+        out = moe_ffn(h.reshape(b * s, d), w["ffn"], cfg.moe)
+        return x + out.y.reshape(b, s, d), out.aux_loss
+    return x + nn.swiglu(h, w["ffn"]["w1"], w["ffn"]["w3"], w["ffn"]["w2"]), \
+        jnp.zeros((), jnp.float32)
+
+
+def forward(cfg: LMConfig, params, tokens: jax.Array):
+    """tokens (B, S) → logits (B, S, V) fp32, aux_loss."""
+    b, s = tokens.shape
+    x = _constrain(cfg, params["embed"][tokens].astype(cfg.dtype))
+    positions = jnp.arange(s)[None, :]
+    lw = _layer_weights(params, cfg)
+
+    def one(xx, ww):
+        return _one_layer(cfg, xx, ww, positions)
+
+    if cfg.layer_block > 1 and cfg.n_layers % cfg.layer_block == 0:
+        lb = cfg.layer_block
+        lw = jax.tree.map(
+            lambda a: a.reshape(cfg.n_layers // lb, lb, *a.shape[1:]), lw)
+
+        # NESTED remat: outer remat saves only block boundaries; inner remat
+        # makes the within-block backward recompute layer-by-layer (without
+        # it, one block's backward holds 7 layers of attention internals —
+        # measured 3.8 GB score stacks per block on 405B, §Perf iter 6).
+        inner_one = jax.remat(one) if cfg.remat else one
+
+        def block(xx, wb):
+            def inner(c, w):
+                xc, auxc = c
+                xc, a = inner_one(xc, w)
+                return (xc.astype(cfg.dtype), auxc + a), None
+            (xx, a), _ = jax.lax.scan(
+                inner, (xx, jnp.zeros((), jnp.float32)), wb)
+            return xx, a
+        step = jax.remat(block) if cfg.remat else block
+
+        if cfg.unroll_blocks:
+            aux = jnp.zeros((), jnp.float32)
+            for bi in range(cfg.n_layers // lb):
+                wb = jax.tree.map(lambda a: a[bi], lw)
+                x, a = step(x, wb)
+                x = x.astype(cfg.dtype)
+                aux = aux + a
+        else:
+            def body(carry, w):
+                x, aux = carry
+                x, a = step(x, w)
+                return (x.astype(cfg.dtype), aux + a), None
+            (x, aux), _ = jax.lax.scan(
+                body, (x, jnp.zeros((), jnp.float32)), lw)
+    else:
+        step = jax.remat(one) if cfg.remat else one
+
+        def body(carry, w):
+            x, aux = carry
+            x, a = step(x, w)
+            return (x.astype(cfg.dtype), aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), lw)
+    x = nn.rmsnorm(x, params["ln_f"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head).astype(jnp.float32)
+    return logits, aux
+
+
+def lm_loss(cfg: LMConfig, params, tokens: jax.Array, labels: jax.Array):
+    logits, aux = forward(cfg, params, tokens)
+    if cfg.vocab_padded != cfg.vocab:  # mask the padding columns
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll) + aux
+
+
+class TrainStepFns(NamedTuple):
+    init: Any
+    train_step: Any
+    opt_init: Any
+
+
+def make_train_step(cfg: LMConfig, lr: float = 3e-4, param_pspecs=None):
+    """Returns (init_fn, train_step). train_step does microbatched grad
+    accumulation + AdamW; everything shardable via in_shardings.
+
+    param_pspecs: optional pytree of PartitionSpec matching params — pins
+    the grad-accumulation scan carry's sharding (without it GSPMD may
+    replicate the params-shaped carry over `model`: +45 GB/dev on 405B,
+    §Perf iteration 6)."""
+    optimizer = adam(constant_schedule(lr), slot_dtype=cfg.opt_slot_dtype)
+
+    def _pin(gtree):
+        if param_pspecs is None:
+            return gtree
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s),
+            gtree, param_pspecs)
+
+    def train_step(params, opt_state, tokens, labels):
+        mb = cfg.microbatches
+        b = tokens.shape[0]
+        tok_mb = tokens.reshape(mb, b // mb, -1)
+        lab_mb = labels.reshape(mb, b // mb, -1)
+        if cfg.act_batch_axes is not None:
+            # the (B,) → (mb, B/mb) reshape must stay batch-sharded on dim 1
+            mb_spec = jax.sharding.PartitionSpec(
+                None, tuple(cfg.act_batch_axes), None)
+            tok_mb = jax.lax.with_sharding_constraint(tok_mb, mb_spec)
+            lab_mb = jax.lax.with_sharding_constraint(lab_mb, mb_spec)
+
+        def mb_body(acc, inp):
+            tok, lab = inp
+            loss, g = jax.value_and_grad(
+                lambda p: lm_loss(cfg, p, tok, lab))(params)
+            acc = jax.tree.map(
+                lambda a, gg: a + gg.astype(cfg.grad_dtype) / mb, acc, g)
+            return _pin(acc), loss
+
+        zero = _pin(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, cfg.grad_dtype), params))
+        grads, losses = jax.lax.scan(mb_body, zero, (tok_mb, lab_mb))
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, jnp.mean(losses)
+
+    return TrainStepFns(init=lambda key: init_lm(key, cfg),
+                        train_step=train_step,
+                        opt_init=optimizer.init)
+
+
+# --------------------------------------------------------------------------
+# Serving: prefill + decode with KV cache
+# --------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array        # (L, B, Smax, Hkv, dh)
+    v: jax.Array
+    length: jax.Array   # () int32 — valid prefix
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> KVCache:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return KVCache(k=jnp.zeros(shape, cfg.dtype), v=jnp.zeros(shape, cfg.dtype),
+                   length=jnp.zeros((), jnp.int32))
+
+
+def prefill(cfg: LMConfig, params, tokens: jax.Array, max_len: int):
+    """tokens (B, S) → (logits of last position (B, V), filled KVCache)."""
+    b, s = tokens.shape
+    x = _constrain(cfg, params["embed"][tokens].astype(cfg.dtype))
+    positions = jnp.arange(s)[None, :]
+    cache = init_cache(cfg, b, max_len)
+
+    def body(x, w):
+        h = nn.rmsnorm(x, w["ln1"])
+        q = (h @ w["attn"]["wq"]).reshape(b, s, cfg.n_heads, cfg.d_head)
+        k = (h @ w["attn"]["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+        v = (h @ w["attn"]["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+        q = nn.apply_rope(q, positions, cfg.rope_theta)
+        k = nn.apply_rope(k, positions, cfg.rope_theta)
+        o = _attend(cfg, q, k, v, causal=True)
+        x = x + (o.reshape(b, s, -1) @ w["attn"]["wo"])
+        h2 = nn.rmsnorm(x, w["ln2"])
+        if cfg.moe:
+            out = moe_ffn(h2.reshape(b * s, -1), w["ffn"], cfg.moe)
+            x = x + out.y.reshape(b, s, -1)
+        else:
+            x = x + nn.swiglu(h2, w["ffn"]["w1"], w["ffn"]["w3"], w["ffn"]["w2"])
+        kc = jnp.zeros((b, max_len, cfg.n_kv_heads, cfg.d_head), cfg.dtype)
+        vc = jnp.zeros((b, max_len, cfg.n_kv_heads, cfg.d_head), cfg.dtype)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, 0, 0, 0))
+        return x.astype(cfg.dtype), (kc, vc)
+
+    x, (kcs, vcs) = jax.lax.scan(
+        lambda c, w: body(c, w), x, _layer_weights(params, cfg))
+    x = nn.rmsnorm(x[:, -1:], params["ln_f"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x[:, 0] @ head).astype(jnp.float32)
+    return logits, KVCache(k=kcs, v=vcs, length=jnp.asarray(s, jnp.int32))
+
+
+def decode_step(cfg: LMConfig, params, cache: KVCache, tokens: jax.Array):
+    """One-token decode. tokens (B,) → (logits (B, V), updated cache).
+
+    Attention runs against the full cache with a valid-length mask — O(S)
+    compute/bytes per token (flash-decoding style; the softmax reduction is
+    sharded over `model` along heads by SPMD).
+    """
+    b = tokens.shape[0]
+    x = params["embed"][tokens][:, None, :].astype(cfg.dtype)   # (B, 1, D)
+    pos = cache.length
+
+    def body(x, inp):
+        w, kc, vc = inp
+        h = nn.rmsnorm(x, w["ln1"])
+        q = (h @ w["attn"]["wq"]).reshape(b, 1, cfg.n_heads, cfg.d_head)
+        k = (h @ w["attn"]["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.d_head)
+        v = (h @ w["attn"]["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.d_head)
+        q = nn.apply_rope(q, pos[None, None], cfg.rope_theta)
+        k = nn.apply_rope(k, pos[None, None], cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+        o = nn.gqa_attention(q, kc, vc, causal=False, q_offset=pos,
+                             kv_len=pos + 1,
+                             seq_shard_axis=cfg.act_seq_axis)
+        x = x + (o.reshape(b, 1, -1) @ w["attn"]["wo"])
+        h2 = nn.rmsnorm(x, w["ln2"])
+        if cfg.moe:
+            out = moe_ffn(h2.reshape(b, -1), w["ffn"], cfg.moe)
+            x = x + out.y.reshape(b, 1, -1)
+        else:
+            x = x + nn.swiglu(h2, w["ffn"]["w1"], w["ffn"]["w3"], w["ffn"]["w2"])
+        return x.astype(cfg.dtype), (kc, vc)
+
+    x, (kcs, vcs) = jax.lax.scan(
+        body, x, (_layer_weights(params, cfg), cache.k, cache.v))
+    x = nn.rmsnorm(x, params["ln_f"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x[:, 0] @ head).astype(jnp.float32)
+    return logits, KVCache(k=kcs, v=vcs, length=cache.length + 1)

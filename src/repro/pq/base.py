@@ -1,0 +1,84 @@
+"""Serving-side quantizer representation shared by PQ / OPQ / RPQ.
+
+Every trainable quantizer in this repo (classic PQ, OPQ's alternating
+optimization, the paper's learned RPQ) exports a :class:`QuantizerModel` —
+an orthonormal rotation + codebooks — which is all the serving engine needs:
+``encode`` the base vectors once offline, ``build_lut`` per query online,
+``adc`` via the Pallas scan kernel.
+
+Catalyst-style nonlinear encoders don't fit this linear form; they provide
+the same *protocol* (codes + ``lut_fn``) via their own module.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+class QuantizerModel(NamedTuple):
+    r: jax.Array          # (D, D) orthonormal rotation; identity for PQ
+    codebooks: jax.Array  # (M, K, dsub)
+
+    @property
+    def dim(self) -> int:
+        return self.r.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.codebooks.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.codebooks.shape[1]
+
+    @property
+    def dsub(self) -> int:
+        return self.codebooks.shape[2]
+
+
+def rotate_split(model: QuantizerModel, x: jax.Array) -> jax.Array:
+    """(N, D) → (N, M, dsub) rotated sub-vectors."""
+    xr = x @ model.r.T
+    return xr.reshape(x.shape[0], model.m, model.dsub)
+
+
+def encode(model: QuantizerModel, x: jax.Array, *, backend: str = "auto") -> jax.Array:
+    """(N, D) → (N, M) hard codes (uint8 when K ≤ 256)."""
+    d = kops.pq_pairwise(rotate_split(model, x), model.codebooks, backend=backend)
+    codes = jnp.argmin(d, axis=-1)
+    return codes.astype(jnp.uint8 if model.k <= 256 else jnp.int32)
+
+
+def decode(model: QuantizerModel, codes: jax.Array) -> jax.Array:
+    """(N, M) codes → (N, D) reconstruction in the ORIGINAL space (R^T x')."""
+    sub = jnp.take_along_axis(
+        model.codebooks[None], codes[:, :, None, None].astype(jnp.int32), axis=2
+    )[:, :, 0, :]
+    return sub.reshape(codes.shape[0], -1) @ model.r
+
+
+def build_lut(model: QuantizerModel, queries: jax.Array) -> jax.Array:
+    """(Q, D) → (Q, M, K) per-query ADC lookup tables."""
+    qs = rotate_split(model, jnp.atleast_2d(queries))
+    return kops.pq_pairwise(qs, model.codebooks, backend="ref")
+
+
+def adc(model: QuantizerModel, codes: jax.Array, queries: jax.Array,
+        *, backend: str = "auto") -> jax.Array:
+    """(Q, D) × (N, M) → (Q, N) estimated squared distances."""
+    return kops.adc_scan_batch(codes, build_lut(model, queries), backend=backend)
+
+
+def distortion(model: QuantizerModel, x: jax.Array) -> jax.Array:
+    """Mean squared reconstruction error (the vertex-oriented PQ objective)."""
+    codes = encode(model, x)
+    return jnp.mean(jnp.sum((x - decode(model, codes)) ** 2, axis=-1))
+
+
+def identity_rotation(dim: int) -> jax.Array:
+    return jnp.eye(dim, dtype=jnp.float32)

@@ -1,0 +1,127 @@
+"""Catalyst-style learned baseline (Sablayrolles et al., "Spreading vectors
+for similarity search", ICLR'19) — the paper's strongest learned competitor.
+
+Simplified faithful core: a small MLP f: R^D → R^dout trained with
+  * a triplet loss on exact nearest neighbors (rank preservation), and
+  * the KoLeo differential-entropy regularizer  −1/n Σ log(min_j ||f_i − f_j||)
+    that spreads points over the output sphere,
+followed by plain PQ in the output space. Unlike RPQ it is graph-agnostic:
+no PG neighborhood sampling, no routing features — exactly the contrast the
+paper draws.
+
+Serving: nonlinear encoders can't export a QuantizerModel; this module
+provides the same duck-typed protocol the engines accept (`codes`, `lut_fn`).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import adam, one_cycle
+from repro.kernels import ops as kops
+from repro.pq import base
+from repro.pq.pq import train_pq
+
+
+class CatalystParams(NamedTuple):
+    w1: jax.Array
+    b1: jax.Array
+    w2: jax.Array
+    b2: jax.Array
+
+
+class CatalystModel(NamedTuple):
+    net: CatalystParams
+    pq: base.QuantizerModel   # PQ trained in the output space
+
+
+def init_net(key: jax.Array, d_in: int, d_hidden: int, d_out: int) -> CatalystParams:
+    k1, k2 = jax.random.split(key)
+    s1 = 1.0 / jnp.sqrt(d_in)
+    s2 = 1.0 / jnp.sqrt(d_hidden)
+    return CatalystParams(
+        w1=jax.random.uniform(k1, (d_in, d_hidden), jnp.float32, -s1, s1),
+        b1=jnp.zeros((d_hidden,), jnp.float32),
+        w2=jax.random.uniform(k2, (d_hidden, d_out), jnp.float32, -s2, s2),
+        b2=jnp.zeros((d_out,), jnp.float32),
+    )
+
+
+def forward(net: CatalystParams, x: jax.Array) -> jax.Array:
+    h = jnp.tanh(x @ net.w1 + net.b1)
+    y = h @ net.w2 + net.b2
+    return y / (jnp.linalg.norm(y, axis=-1, keepdims=True) + 1e-8)  # sphere
+
+
+def _koleo(y: jax.Array) -> jax.Array:
+    d2 = jnp.sum((y[:, None, :] - y[None, :, :]) ** 2, axis=-1)
+    d2 = d2 + jnp.eye(y.shape[0]) * 1e9
+    # eps INSIDE the sqrt: duplicate batch rows give d2=0 whose sqrt has an
+    # infinite gradient → NaN params (observed: catalyst beam search died
+    # with NaN LUTs in the benchmark run)
+    return -jnp.mean(0.5 * jnp.log(jnp.min(d2, axis=1) + 1e-10))
+
+
+def _loss(net, anchors, pos, neg, lam, margin=0.1):
+    ya, yp, yn = forward(net, anchors), forward(net, pos), forward(net, neg)
+    dp = jnp.sum((ya - yp) ** 2, axis=-1)
+    dn = jnp.sum((ya - yn) ** 2, axis=-1)
+    trip = jnp.mean(jnp.maximum(0.0, margin + dp - dn))
+    return trip + lam * _koleo(ya)
+
+
+def train_catalyst(key: jax.Array, x: jax.Array, m: int, k: int, *,
+                   d_out: int = 40, d_hidden: int = 128, lam: float = 0.005,
+                   steps: int = 300, batch: int = 256,
+                   n_neighbors: int = 10) -> CatalystModel:
+    """Paper-parameter defaults: d_out=40, λ=0.005 (§8.1)."""
+    n, d = x.shape
+    key, knet, kpq = jax.random.split(key, 3)
+    net = init_net(knet, d, d_hidden, d_out)
+
+    # Exact-kNN positives on a training subsample (Catalyst is graph-free).
+    sub = x[:min(n, 20000)]
+    d2 = (jnp.sum(sub**2, 1)[:, None] - 2 * sub @ sub.T + jnp.sum(sub**2, 1)[None, :])
+    d2 = d2 + jnp.eye(sub.shape[0]) * 1e9
+    nbr = jax.lax.top_k(-d2, n_neighbors)[1]      # (Ns, n_neighbors)
+
+    opt = adam(one_cycle(1e-3, steps))
+    state = opt.init(net)
+
+    @jax.jit
+    def step(net, state, kk):
+        ka, kp, kn = jax.random.split(kk, 3)
+        ai = jax.random.randint(ka, (batch,), 0, sub.shape[0])
+        pj = jax.random.randint(kp, (batch,), 0, n_neighbors)
+        pi = nbr[ai, pj]
+        ni = jax.random.randint(kn, (batch,), 0, sub.shape[0])
+        g = jax.grad(_loss)(net, sub[ai], sub[pi], sub[ni], lam)
+        from repro.common import clip_by_global_norm
+        g, _ = clip_by_global_norm(g, 1.0)
+        return opt.update(g, state, net)
+
+    for _ in range(steps):
+        key, kk = jax.random.split(key)
+        net, state = step(net, state, kk)
+
+    y = forward(net, x)
+    pq = train_pq(kpq, y, m, k, iters=10)
+    return CatalystModel(net=net, pq=pq)
+
+
+# ---- serving protocol (duck-typed like pq.base) ---------------------------
+
+def encode(model: CatalystModel, x: jax.Array) -> jax.Array:
+    return base.encode(model.pq, forward(model.net, x))
+
+
+def build_lut(model: CatalystModel, queries: jax.Array) -> jax.Array:
+    return base.build_lut(model.pq, forward(model.net, jnp.atleast_2d(queries)))
+
+
+def adc(model: CatalystModel, codes: jax.Array, queries: jax.Array,
+        *, backend: str = "auto") -> jax.Array:
+    return kops.adc_scan_batch(codes, build_lut(model, queries), backend=backend)

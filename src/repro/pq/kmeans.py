@@ -1,0 +1,71 @@
+"""Blocked Lloyd k-means in JAX (the PQ/OPQ/RPQ codebook initializer).
+
+Fully jitted: assignment uses the pq_pairwise kernel path in N-blocks (keeps
+the (block, K) distance tile small), the update is a segment_sum, and empty
+clusters are re-seeded to the currently-worst-quantized points — essential
+for PQ sub-codebooks where K=256 often exceeds the visible cluster count of
+a 16-dimensional slice.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "block"))
+def kmeans(key: jax.Array, x: jax.Array, k: int, *, iters: int = 20,
+           block: int = 8192) -> tuple[jax.Array, jax.Array]:
+    """Lloyd's algorithm. Returns (centroids (K, D), assignments (N,))."""
+    n, d = x.shape
+    x = x.astype(jnp.float32)
+    perm = jax.random.permutation(key, n)
+    cent0 = x[perm[:k]]
+
+    n_pad = (-n) % block
+    xp = jnp.pad(x, ((0, n_pad), (0, 0)))
+    nb = xp.shape[0] // block
+    xb = xp.reshape(nb, block, d)
+    validb = (jnp.arange(nb * block) < n).reshape(nb, block)
+
+    def assign(cent):
+        def one(args):
+            xc, valid = args
+            idx, dist = kops.kmeans_assign(xc, cent)
+            return idx, jnp.where(valid, dist, -jnp.inf)  # pads never "worst"
+        idx, dist = jax.lax.map(one, (xb, validb))
+        return idx.reshape(-1)[:n], dist.reshape(-1)[:n]
+
+    def body(_, cent):
+        idx, dist = assign(cent)
+        sums = jax.ops.segment_sum(x, idx, num_segments=k)
+        counts = jax.ops.segment_sum(jnp.ones((n,), jnp.float32), idx,
+                                     num_segments=k)
+        new = sums / jnp.maximum(counts, 1.0)[:, None]
+        # Re-seed empty clusters at the worst-quantized points.
+        far = jax.lax.top_k(dist, k)[1]           # (K,) farthest point ids
+        empty = counts == 0
+        new = jnp.where(empty[:, None], x[far], new)
+        return new
+
+    cent = jax.lax.fori_loop(0, iters, body, cent0)
+    idx, _ = assign(cent)
+    return cent, idx
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "block"))
+def kmeans_multi(key: jax.Array, x: jax.Array, k: int, *, iters: int = 20,
+                 block: int = 8192) -> jax.Array:
+    """Independent k-means per leading axis: x (M, N, d) → centroids (M, K, d).
+
+    This is exactly "train the M PQ sub-codebooks"; vmapped so all subspaces
+    run in one XLA program.
+    """
+    m = x.shape[0]
+    keys = jax.random.split(key, m)
+    cent, _ = jax.vmap(lambda kk, xx: kmeans(kk, xx, k, iters=iters, block=block))(keys, x)
+    return cent

@@ -1,0 +1,35 @@
+"""Optimized Product Quantization (Ge et al., CVPR'13), non-parametric variant.
+
+Alternating optimization:
+  (1) fix R, retrain codebooks with Lloyd on the rotated data;
+  (2) fix codebooks, solve the orthogonal Procrustes problem
+      min_R ||R X − X'||_F  →  R = U Vᵀ from SVD(X'ᵀ X)
+(our convention rotates row-vectors as x @ Rᵀ, so we solve for that R).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.pq import base
+from repro.pq.pq import train_pq
+
+
+def train_opq(key: jax.Array, x: jax.Array, m: int, k: int, *,
+              outer_iters: int = 8, kmeans_iters: int = 8) -> base.QuantizerModel:
+    n, d = x.shape
+    model = train_pq(key, x, m, k, iters=kmeans_iters)  # R = I start
+    for it in range(outer_iters):
+        key, sub = jax.random.split(key)
+        # (2) Procrustes: reconstruction targets in rotated space.
+        codes = base.encode(model, x)
+        sub_rec = jnp.take_along_axis(
+            model.codebooks[None], codes[:, :, None, None].astype(jnp.int32), axis=2
+        )[:, :, 0, :].reshape(n, d)                      # x' in rotated space
+        # want R minimizing ||x @ R.T − x'||_F ; R = U Vᵀ of  x'ᵀ x
+        u, _, vt = jnp.linalg.svd(sub_rec.T @ x, full_matrices=False)
+        r = u @ vt
+        # (1) Lloyd under the new rotation.
+        model = train_pq(sub, x, m, k, iters=kmeans_iters, rotation=r)
+    return model

@@ -1,0 +1,24 @@
+"""Classic Product Quantization (Jégou et al., TPAMI'11) — the DiskANN default.
+
+Vertical split into M chunks, independent K-means per chunk, Lloyd quantizer.
+This is both the paper's main baseline and the initializer for OPQ and RPQ.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.pq import base
+from repro.pq.kmeans import kmeans_multi
+
+
+def train_pq(key: jax.Array, x: jax.Array, m: int, k: int, *,
+             iters: int = 20, rotation: jax.Array | None = None) -> base.QuantizerModel:
+    """Train a PQ codebook on x (N, D). Optional fixed rotation (for OPQ)."""
+    n, d = x.shape
+    assert d % m == 0, f"D={d} % M={m} != 0"
+    r = base.identity_rotation(d) if rotation is None else rotation
+    xr = (x @ r.T).reshape(n, m, d // m).transpose(1, 0, 2)  # (M, N, dsub)
+    codebooks = kmeans_multi(key, xr, k, iters=iters)
+    return base.QuantizerModel(r=r, codebooks=codebooks)

@@ -1,0 +1,5 @@
+"""Routing + serving: batched beam search, ADC, engines, metrics."""
+from repro.search.beam import (  # noqa: F401
+    beam_search, beam_search_trace, SearchResult, Trace,
+    make_exact_dist_fn, make_adc_dist_fn,
+)

@@ -1,0 +1,185 @@
+"""Batched graph beam search — the routing engine (paper §3.1, Alg. 2 core).
+
+TPU/JAX adaptation (DESIGN.md §3): instead of a scalar CPU heap per query we
+run a *fixed-shape* best-first beam entirely in `jax.lax`:
+
+* beam = three (h,) arrays (ids, dists, expanded) kept sorted by merge+top_k;
+* visited set = uint32 bitset (N/32 words) — O(1) membership, vmappable;
+* one `while_loop` per batch; vmapped lanes step together until all converge
+  (the classic SIMD-ification of best-first search);
+* distances come from a pluggable `dist_fn` (ADC LUT gather or exact), so the
+  same engine serves PQ-routing and exact-routing.
+
+`beam_search_trace` additionally records the ranked candidate beam at every
+hop — exactly the paper's Definition 6 routing features.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.float32(jnp.inf)
+
+
+class SearchResult(NamedTuple):
+    ids: jax.Array     # (Q, h) int32 ascending by dist (sentinel-padded)
+    dists: jax.Array   # (Q, h) f32
+    hops: jax.Array    # (Q,) int32 — number of node expansions
+    n_dist: jax.Array  # (Q,) int32 — number of distance computations
+
+
+class Trace(NamedTuple):
+    beam_ids: jax.Array    # (Q, T, h) beam AFTER each hop's merge
+    beam_dists: jax.Array  # (Q, T, h)
+    hop_valid: jax.Array   # (Q, T) bool — hop actually happened
+    result: SearchResult
+
+
+def _bit_get(bits: jax.Array, idx: jax.Array) -> jax.Array:
+    return (bits[idx >> 5] >> (idx & 31)) & 1
+
+
+def _scatter_or(bits, word, mask):
+    """OR `mask[i]` into `bits[word[i]]` (duplicate-word safe).
+
+    jnp has no scatter-or primitive; a fori over the ≤R ids is cheap and
+    correct even when several ids land in the same 32-bit word.
+    """
+    def body(i, b):
+        return b.at[word[i]].set(b[word[i]] | mask[i])
+    return jax.lax.fori_loop(0, word.shape[0], body, bits)
+
+
+def _single_query(neighbors: jax.Array, entry: jax.Array, qdata,
+                  dist_fn: Callable, h: int, max_steps: int,
+                  trace_len: int = 0):
+    """Search for ONE query; built to be vmapped. Returns result (+trace)."""
+    n = neighbors.shape[0]
+    r = neighbors.shape[1]
+    nwords = (n + 32) // 32 + 1
+
+    ids0 = jnp.full((h,), n, jnp.int32).at[0].set(entry)
+    d_entry = dist_fn(qdata, entry[None])[0]
+    dists0 = jnp.full((h,), INF).at[0].set(d_entry)
+    exp0 = jnp.ones((h,), bool).at[0].set(False)
+    visited0 = _scatter_or(jnp.zeros((nwords,), jnp.uint32),
+                           (entry >> 5)[None], (jnp.uint32(1) << (entry & 31).astype(jnp.uint32))[None])
+
+    do_trace = trace_len > 0
+    tb_ids0 = jnp.full((max(trace_len, 1), h), n, jnp.int32)
+    tb_d0 = jnp.full((max(trace_len, 1), h), INF)
+    tb_v0 = jnp.zeros((max(trace_len, 1),), bool)
+
+    def cond(state):
+        step, ids, dists, exp, visited, hops, ndist, tbi, tbd, tbv = state
+        return jnp.logical_and(step < max_steps, jnp.any(~exp & (dists < INF)))
+
+    def body(state):
+        step, ids, dists, exp, visited, hops, ndist, tbi, tbd, tbv = state
+        # 1. pick best unexpanded beam entry
+        cand = jnp.where(~exp & (dists < INF), dists, INF)
+        sel = jnp.argmin(cand)
+        exp = exp.at[sel].set(True)
+        hops = hops + 1
+        # 2. expand: gather neighbors, drop pads & visited
+        nbr = neighbors[ids[sel]]                       # (R,)
+        valid = nbr < n
+        seen = _bit_get(visited, jnp.where(valid, nbr, 0)).astype(bool)
+        fresh = valid & ~seen
+        visited = _scatter_or(
+            visited, jnp.where(fresh, nbr, n) >> 5,
+            jnp.where(fresh, jnp.uint32(1) << (nbr & 31).astype(jnp.uint32), jnp.uint32(0)))
+        nd = dist_fn(qdata, jnp.where(fresh, nbr, 0))
+        nd = jnp.where(fresh, nd, INF)
+        ndist = ndist + jnp.sum(fresh.astype(jnp.int32))
+        # 3. merge beam ∪ neighbors, keep top-h by distance
+        all_ids = jnp.concatenate([ids, jnp.where(fresh, nbr, n)])
+        all_d = jnp.concatenate([dists, nd])
+        all_e = jnp.concatenate([exp, jnp.zeros((r,), bool)])
+        neg, order = jax.lax.top_k(-all_d, h)
+        ids = all_ids[order]
+        dists = -neg
+        exp = all_e[order] | (dists == INF)
+        # 4. trace the ranked candidate beam (paper Def. 6); steps beyond
+        #    trace_len must NOT clobber the last recorded slot
+        if do_trace:
+            ti = jnp.minimum(step, trace_len - 1)
+            in_range = step < trace_len
+            tbi = tbi.at[ti].set(jnp.where(in_range, ids, tbi[ti]))
+            tbd = tbd.at[ti].set(jnp.where(in_range, dists, tbd[ti]))
+            tbv = tbv.at[ti].set(tbv[ti] | in_range)
+        return (step + 1, ids, dists, exp, visited, hops, ndist, tbi, tbd, tbv)
+
+    state = (jnp.int32(0), ids0, dists0, exp0, visited0,
+             jnp.int32(0), jnp.int32(1), tb_ids0, tb_d0, tb_v0)
+    step, ids, dists, exp, visited, hops, ndist, tbi, tbd, tbv = \
+        jax.lax.while_loop(cond, body, state)
+    res = (ids, dists, hops, ndist)
+    return res + ((tbi, tbd, tbv) if do_trace else ())
+
+
+@functools.partial(jax.jit, static_argnames=("dist_fn", "h", "max_steps"))
+def beam_search(neighbors: jax.Array, entry: jax.Array, qdatas,
+                dist_fn: Callable, *, h: int = 32,
+                max_steps: int = 256) -> SearchResult:
+    """Batched beam search.
+
+    Args:
+      neighbors: (N, R) padded adjacency (sentinel N).
+      entry:     () int32 entry vertex (shared) — the PG medoid.
+      qdatas:    per-query pytree, leading axis Q (e.g. LUTs (Q, M, K) for ADC
+                 routing or raw queries (Q, D) for exact routing).
+      dist_fn:   (qdata, ids (B,)) -> (B,) f32 distances for one query.
+      h:         beam width (the paper's global candidate set size).
+      max_steps: hop cap (safety for pathological graphs).
+    """
+    entry = jnp.asarray(entry, jnp.int32)
+    nq = jax.tree.leaves(qdatas)[0].shape[0]
+    entries = jnp.broadcast_to(entry, (nq,)) if entry.ndim == 0 else entry
+    fn = lambda e, qd: _single_query(neighbors, e, qd, dist_fn, h, max_steps)
+    ids, dists, hops, ndist = jax.vmap(fn)(entries, qdatas)
+    return SearchResult(ids, dists, hops, ndist)
+
+
+@functools.partial(jax.jit, static_argnames=("dist_fn", "h", "max_steps", "trace_len"))
+def beam_search_trace(neighbors: jax.Array, entry: jax.Array, qdatas,
+                      dist_fn: Callable, *, h: int = 32, max_steps: int = 256,
+                      trace_len: int = 64) -> Trace:
+    """Beam search that also records the ranked beam at every hop."""
+    entry = jnp.asarray(entry, jnp.int32)
+    nq = jax.tree.leaves(qdatas)[0].shape[0]
+    entries = jnp.broadcast_to(entry, (nq,)) if entry.ndim == 0 else entry
+    fn = lambda e, qd: _single_query(neighbors, e, qd, dist_fn, h, max_steps,
+                                     trace_len=trace_len)
+    ids, dists, hops, ndist, tbi, tbd, tbv = jax.vmap(fn)(entries, qdatas)
+    return Trace(tbi, tbd, tbv, SearchResult(ids, dists, hops, ndist))
+
+
+# --------------------------------------------------------------------------
+# Distance functions
+# --------------------------------------------------------------------------
+
+def make_exact_dist_fn(vectors: jax.Array) -> Callable:
+    """qdata = query vector (D,). vectors must be (N+1, D) sentinel-padded."""
+    def dist_fn(q, ids):
+        v = vectors[ids]
+        return jnp.sum((v - q[None, :]) ** 2, axis=-1)
+    return dist_fn
+
+
+def make_adc_dist_fn(codes: jax.Array) -> Callable:
+    """qdata = LUT (M, K). codes must be (N+1, M) sentinel-padded.
+
+    The per-hop gather is tiny (R ≤ 64 rows), so this is a VPU LUT lookup —
+    the bulk ADC work in benchmarks uses the Pallas scan kernel instead.
+    """
+    m = codes.shape[1]
+    def dist_fn(lut, ids):
+        c = codes[ids].astype(jnp.int32)              # (B, M)
+        vals = lut[jnp.arange(m)[None, :], c]         # (B, M)
+        return jnp.sum(vals, axis=-1)
+    return dist_fn

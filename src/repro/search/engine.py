@@ -1,0 +1,111 @@
+"""Serving engines (paper §7): in-memory and SSD-hybrid (DiskANN) scenarios.
+
+Both engines route with PQ-ADC distances over a proximity graph. They accept
+any quantizer exposing the (codes, lut_fn) protocol — classic PQ / OPQ
+(pq.base.QuantizerModel), the learned RPQ (core.rpq), or Catalyst.
+
+* :class:`InMemoryEngine` — codes + codebook + PG in RAM; next-hop selection
+  and the final top-k use ONLY PQ distances (no rerank). Memory = N·M bytes
+  + graph.
+* :class:`HybridEngine` — DiskANN: codes + codebook in RAM; full vectors +
+  PG "on SSD". Routing uses ADC; every expansion costs one simulated SSD
+  read (the node's 4 KiB block holds its vector + adjacency, as in DiskANN's
+  disk layout); the final candidates are re-ranked with exact distances.
+  IO time is modeled as reads × latency (default 100 µs, ~NVMe) — reported
+  separately from compute time so real-hardware numbers can be projected.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.adjacency import Graph
+from repro.search import beam
+from repro.search.beam import SearchResult
+
+
+def _pad_codes(codes: jax.Array) -> jax.Array:
+    return jnp.concatenate(
+        [codes, jnp.zeros((1, codes.shape[1]), codes.dtype)], axis=0)
+
+
+def _pad_vectors(x: jax.Array) -> jax.Array:
+    return jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)], axis=0)
+
+
+@dataclasses.dataclass
+class InMemoryEngine:
+    graph: Graph
+    codes: jax.Array                  # (N, M) compact codes
+    lut_fn: Callable                  # (Q, D) queries -> (Q, M, K) LUTs
+    entry_fn: Optional[Callable] = None  # queries -> (Q,) entries (HNSW descend)
+
+    def __post_init__(self):
+        self._codes_p = _pad_codes(self.codes)
+        self._dist_fn = beam.make_adc_dist_fn(self._codes_p)
+
+    def search(self, queries: jax.Array, *, k: int = 10, h: int = 32,
+               max_steps: int = 512) -> SearchResult:
+        luts = self.lut_fn(queries)
+        entry = (self.entry_fn(queries) if self.entry_fn is not None
+                 else self.graph.medoid)
+        res = beam.beam_search(self.graph.neighbors, entry, luts,
+                               self._dist_fn, h=h, max_steps=max_steps)
+        return SearchResult(res.ids[:, :k], res.dists[:, :k], res.hops,
+                            res.n_dist)
+
+    def memory_bytes(self) -> int:
+        return (self.codes.size * self.codes.dtype.itemsize
+                + self.graph.neighbors.size * 4)
+
+
+@dataclasses.dataclass
+class HybridEngine:
+    """DiskANN-style: ADC routing + exact rerank from "SSD" vectors."""
+    graph: Graph
+    codes: jax.Array
+    lut_fn: Callable
+    vectors: jax.Array                # (N, D) original vectors ("on SSD")
+    io_latency_s: float = 100e-6     # per 4 KiB node read (NVMe-class)
+    entry_fn: Optional[Callable] = None
+
+    def __post_init__(self):
+        self._codes_p = _pad_codes(self.codes)
+        self._vec_p = _pad_vectors(jnp.asarray(self.vectors, jnp.float32))
+        self._dist_fn = beam.make_adc_dist_fn(self._codes_p)
+
+    def search(self, queries: jax.Array, *, k: int = 10, h: int = 32,
+               max_steps: int = 512, rerank: int = 0) -> SearchResult:
+        """rerank = how many beam candidates to re-rank exactly (0 → h)."""
+        rerank = rerank or h
+        k = min(k, rerank)  # cannot return more results than candidates
+        luts = self.lut_fn(queries)
+        entry = (self.entry_fn(queries) if self.entry_fn is not None
+                 else self.graph.medoid)
+        res = beam.beam_search(self.graph.neighbors, entry, luts,
+                               self._dist_fn, h=h, max_steps=max_steps)
+        ids, dists = _exact_rerank(self._vec_p, queries, res.ids, rerank, k)
+        return SearchResult(ids, dists, res.hops, res.n_dist)
+
+    def io_time(self, res: SearchResult) -> jax.Array:
+        """Modeled SSD time per query: one 4 KiB block read per expansion."""
+        return res.hops.astype(jnp.float32) * self.io_latency_s
+
+    def memory_bytes(self) -> int:
+        # resident = codes (+ codebook, negligible); graph+vectors on SSD
+        return self.codes.size * self.codes.dtype.itemsize
+
+
+@partial(jax.jit, static_argnames=("rerank", "k"))
+def _exact_rerank(vec_p, queries, cand_ids, rerank: int, k: int):
+    cand = cand_ids[:, :rerank]
+    v = vec_p[cand]                                       # (Q, rerank, D)
+    d = jnp.sum((v - queries[:, None, :]) ** 2, axis=-1)
+    d = jnp.where(cand == vec_p.shape[0] - 1, jnp.inf, d)
+    neg, order = jax.lax.top_k(-d, k)
+    return jnp.take_along_axis(cand, order, axis=1), -neg

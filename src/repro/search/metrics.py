@@ -1,0 +1,39 @@
+"""Evaluation metrics: recall@k and QPS timing (paper §8.1)."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def recall_at_k(pred_ids, gt_ids, k: int) -> float:
+    """Eq. 1: |R ∩ R̃| / k, averaged over queries.
+
+    pred_ids (Q, ≥k), gt_ids (Q, k). Sentinel/padding ids never match gt.
+    """
+    pred = np.asarray(pred_ids)[:, :k]
+    gt = np.asarray(gt_ids)[:, :k]
+    hits = 0
+    for p, g in zip(pred, gt):
+        hits += len(set(p.tolist()) & set(g.tolist()))
+    return hits / (k * len(gt))
+
+
+def measure_qps(search_fn: Callable, queries, *, repeats: int = 3,
+                warmup: int = 1) -> tuple[float, object]:
+    """QPS of a jitted batched search callable. Returns (qps, last_result)."""
+    nq = jax.tree.leaves(queries)[0].shape[0]
+    out = None
+    for _ in range(warmup):
+        out = search_fn(queries)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = search_fn(queries)
+        jax.block_until_ready(out)
+    dt = (time.perf_counter() - t0) / repeats
+    return nq / dt, out

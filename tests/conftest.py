@@ -1,0 +1,38 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 CPU device
+(the 512-device override belongs ONLY to launch/dryrun.py)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def clustered_data():
+    """Small clustered anisotropic dataset + queries + exact GT (session-wide)."""
+    from repro.graphs import knn_ids
+
+    r = np.random.default_rng(1)
+    n, d, nc, nq = 3000, 32, 24, 100
+    centers = r.normal(size=(nc, d)).astype(np.float32) * 3
+    z = centers[r.integers(0, nc, n)] + r.normal(size=(n, d)).astype(np.float32)
+    basis = (np.linalg.qr(r.normal(size=(d, d)))[0]
+             @ np.diag(np.linspace(1.5, 0.3, d))).astype(np.float32)
+    x = jnp.asarray(z @ basis)
+    zq = centers[r.integers(0, nc, nq)] + r.normal(size=(nq, d)).astype(np.float32)
+    q = jnp.asarray(zq @ basis)
+    gt, _ = knn_ids(x, q, 10)
+    return x, q, gt
+
+
+@pytest.fixture(scope="session")
+def small_graph(clustered_data):
+    from repro.graphs import build_vamana
+
+    x, _, _ = clustered_data
+    return build_vamana(jax.random.PRNGKey(0), x, r=16, l=32, batch=1024)

@@ -1,0 +1,274 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + finiteness. The FULL configs are exercised only by the
+dry-run (ShapeDtypeStruct, no allocation)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, list_archs
+
+LM_ARCHS = ["granite-3-8b", "llama3-405b", "starcoder2-3b",
+            "granite-moe-1b-a400m", "olmoe-1b-7b"]
+RECSYS_ARCHS = ["bert4rec", "deepfm", "din", "dlrm-mlperf"]
+
+
+def test_registry_has_all_assigned():
+    have = set(list_archs())
+    want = set(LM_ARCHS + RECSYS_ARCHS + ["gat-cora", "rpq"])
+    assert want <= have
+
+
+def _finite(x):
+    return bool(jnp.isfinite(x).all())
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_reduced_train_and_decode(arch):
+    from repro.models import transformer as tf
+
+    cfg = get_arch(arch).make_reduced()
+    key = jax.random.PRNGKey(0)
+    init, train_step, opt_init = tf.make_train_step(cfg, lr=1e-3)
+    params = init(key)
+    opt_state = opt_init(params)
+    b, s = 4, 16
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    labels = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    params2, opt_state, loss = jax.jit(train_step)(params, opt_state, toks, labels)
+    assert _finite(loss) and float(loss) > 0
+    # a step must actually move the params
+    moved = jax.tree.map(lambda a, b_: float(jnp.abs(a.astype(jnp.float32)
+                                                     - b_.astype(jnp.float32)).max()),
+                         params, params2)
+    assert max(jax.tree.leaves(moved)) > 0
+    # prefill + decode path
+    logits, cache = tf.prefill(cfg, params2, toks, max_len=s + 8)
+    assert logits.shape == (b, cfg.vocab) and _finite(logits)
+    nxt = jnp.argmax(logits, -1)
+    logits2, cache = tf.decode_step(cfg, params2, cache, nxt)
+    assert logits2.shape == (b, cfg.vocab) and _finite(logits2)
+    assert int(cache.length) == s + 1
+
+
+def test_lm_decode_matches_forward():
+    """Greedy decode logits == teacher-forced forward logits (same tokens)."""
+    from repro.models import transformer as tf
+
+    cfg = get_arch("granite-3-8b").make_reduced()
+    key = jax.random.PRNGKey(1)
+    params = tf.init_lm(key, cfg)
+    b, s = 2, 8
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    full_logits, _ = tf.forward(cfg, params, toks)
+    _, cache = tf.prefill(cfg, params, toks[:, :s - 1], max_len=s + 1)
+    dec_logits, _ = tf.decode_step(cfg, params, cache, toks[:, s - 1])
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(full_logits[:, -1]),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_gat_full_graph_train():
+    from repro.models import gnn
+
+    cfg = get_arch("gat-cora").make_reduced()
+    key = jax.random.PRNGKey(0)
+    n, e = 64, 256
+    x = jax.random.normal(key, (n, cfg.d_in))
+    src = jax.random.randint(key, (e,), 0, n)
+    dst = jax.random.randint(jax.random.PRNGKey(1), (e,), 0, n)
+    labels = jax.random.randint(key, (n,), 0, cfg.n_classes)
+    mask = jnp.ones((n,), bool)
+    init, train_step, opt_init = gnn.make_train_step(cfg)
+    params = init(key)
+    opt_state = opt_init(params)
+    losses = []
+    step = jax.jit(train_step)
+    for _ in range(5):
+        params, opt_state, loss = step(params, opt_state, x, src, dst,
+                                       labels, mask)
+        losses.append(float(loss))
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0]  # overfits a tiny random graph
+
+
+def test_gat_molecule_batched_pooling():
+    from repro.models import gnn
+
+    cfg = get_arch("gat-cora").make_reduced()
+    key = jax.random.PRNGKey(0)
+    b, n_per, e_per = 8, 10, 20
+    n = b * n_per
+    x = jax.random.normal(key, (n, cfg.d_in))
+    graph_id = jnp.repeat(jnp.arange(b), n_per)
+    src = jax.random.randint(key, (b * e_per,), 0, n_per) \
+        + jnp.repeat(jnp.arange(b) * n_per, e_per)
+    dst = jax.random.randint(jax.random.PRNGKey(1), (b * e_per,), 0, n_per) \
+        + jnp.repeat(jnp.arange(b) * n_per, e_per)
+    y = jax.random.randint(key, (b,), 0, cfg.n_classes)
+    params = gnn.init_gat(key, cfg)
+    loss = gnn.graph_pool_loss(cfg, params, x, src, dst, graph_id, b, y)
+    assert np.isfinite(float(loss))
+
+
+def test_gnn_neighbor_sampler_block():
+    from repro.models import gnn
+
+    rng = np.random.default_rng(0)
+    n = 200
+    # random CSR graph
+    deg = rng.integers(1, 8, n)
+    indptr = np.concatenate([[0], np.cumsum(deg)]).astype(np.int64)
+    indices = rng.integers(0, n, indptr[-1]).astype(np.int64)
+    feats = rng.normal(size=(n, 16)).astype(np.float32)
+    labels = rng.integers(0, 4, n)
+    seeds = rng.choice(n, 8, replace=False)
+    blk = gnn.sample_block(rng, indptr, indices, feats, labels, seeds, (3, 2))
+    assert blk.src.shape == blk.dst.shape == blk.edge_mask.shape
+    assert blk.src.shape[0] == 8 * 3 + 8 * 3 * 2
+    assert blk.feats.shape[1] == 16
+    # run a GAT layer over the block
+    cfg = get_arch("gat-cora").make_reduced()
+    cfg2 = gnn.GATConfig(name="t", d_in=16, d_hidden=4, n_heads=2, n_layers=2,
+                         n_classes=4)
+    params = gnn.init_gat(jax.random.PRNGKey(0), cfg2)
+    out = gnn.forward(cfg2, params, blk.feats, blk.src, blk.dst,
+                      edge_mask=blk.edge_mask)
+    assert out.shape == (blk.feats.shape[0], 4)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_dlrm_reduced_train():
+    from repro.models import recsys as rs
+
+    cfg = get_arch("dlrm-mlperf").make_reduced()
+    key = jax.random.PRNGKey(0)
+    params = rs.init_dlrm(key, cfg)
+    b = 32
+    batch = {
+        "dense": jax.random.normal(key, (b, cfg.n_dense)),
+        "sparse": jax.random.randint(key, (b, cfg.n_sparse), 0, 100),
+        "label": jax.random.bernoulli(key, 0.3, (b,)).astype(jnp.float32),
+    }
+    fwd = lambda p, bt: rs.dlrm_forward(cfg, p, bt["dense"], bt["sparse"])
+    init, step, opt_init = rs.make_bce_train_step(fwd, lambda k: params)
+    opt_state = opt_init(params)
+    step = jax.jit(step)
+    l0 = None
+    for _ in range(5):
+        params, opt_state, loss = step(params, opt_state, batch)
+        l0 = l0 or float(loss)
+    assert np.isfinite(float(loss)) and float(loss) < l0 + 0.1
+
+
+def test_deepfm_reduced_forward_backward():
+    from repro.models import recsys as rs
+
+    cfg = get_arch("deepfm").make_reduced()
+    key = jax.random.PRNGKey(0)
+    params = rs.init_deepfm(key, cfg)
+    b = 16
+    sparse = jax.random.randint(key, (b, cfg.n_fields), 0, 50)
+    label = jax.random.bernoulli(key, 0.5, (b,)).astype(jnp.float32)
+    loss, g = jax.value_and_grad(
+        lambda p: rs.bce_loss(rs.deepfm_forward(cfg, p, sparse), label))(params)
+    assert np.isfinite(float(loss))
+    assert float(jnp.abs(g["table"]).max()) > 0
+
+
+def test_din_reduced_forward():
+    from repro.models import recsys as rs
+
+    cfg = get_arch("din").make_reduced()
+    key = jax.random.PRNGKey(0)
+    params = rs.init_din(key, cfg)
+    b = 16
+    hist = jax.random.randint(key, (b, cfg.seq_len), 0, cfg.n_items)
+    mask = jnp.arange(cfg.seq_len)[None, :] < 8
+    target = jax.random.randint(key, (b,), 0, cfg.n_items)
+    out = rs.din_forward(cfg, params, hist, jnp.broadcast_to(mask, hist.shape),
+                         target)
+    assert out.shape == (b,) and bool(jnp.isfinite(out).all())
+
+
+def test_bert4rec_reduced_mlm():
+    from repro.models import recsys as rs
+
+    cfg = get_arch("bert4rec").make_reduced()
+    key = jax.random.PRNGKey(0)
+    params = rs.init_bert4rec(key, cfg)
+    b, s, p = 8, cfg.seq_len, 4
+    items = jax.random.randint(key, (b, s), 0, cfg.n_items)
+    pad = jnp.ones((b, s), bool)
+    pos = jax.random.randint(key, (b, p), 0, s)
+    labels = jax.random.randint(key, (b, p), 0, cfg.n_items)
+    items = items.at[jnp.arange(b)[:, None], pos].set(cfg.mask_token)
+    loss = rs.bert4rec_mlm_loss(cfg, params, items, pad, pos, labels)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+
+
+def test_embedding_bag_matches_loop_oracle(rng):
+    from repro.models.recsys import embedding_bag
+
+    table = jnp.asarray(rng.normal(size=(50, 8)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 50, 40), jnp.int32)
+    bags = jnp.asarray(np.sort(rng.integers(0, 10, 40)), jnp.int32)
+    got = embedding_bag(table, ids, bags, 10, mode="sum")
+    want = np.zeros((10, 8), np.float32)
+    for i, b in zip(np.asarray(ids), np.asarray(bags)):
+        want[b] += np.asarray(table)[i]
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+def test_retrieval_scoring_exact_vs_adc(rng):
+    """ADC top-k should strongly overlap the exact dot top-k (paper §5 use)."""
+    import jax
+    from repro.models import recsys as rs
+    from repro.pq import base, train_pq
+
+    n, d = 4000, 32
+    emb = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    qv = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    sv, si = rs.score_candidates_exact(qv, emb, k=50)
+    model = train_pq(jax.random.PRNGKey(0), emb, 8, 64, iters=10)
+    codes = base.encode(model, emb)
+    # score by distance to the query point: top-k closest ≅ top dot for
+    # normalized queries; use the distance formulation directly
+    lut = base.build_lut(model, qv[None])[0]
+    dv, di = rs.score_candidates_adc(lut, codes, k=50, backend="ref")
+    exact_d = jnp.sum((emb - qv[None]) ** 2, -1)
+    _, gt = jax.lax.top_k(-exact_d, 50)
+    overlap = len(set(np.asarray(di).tolist()) & set(np.asarray(gt).tolist()))
+    assert overlap >= 18  # ≥36% recall at 48-bit codes on iid gaussian
+    # and far above chance (50/4000 → expected overlap < 1)
+
+
+def test_moe_dispatch_matches_dense_oracle(rng):
+    """Capacity-unconstrained MoE == per-token dense expert mixing."""
+    from repro.models.moe import MoEConfig, moe_ffn
+
+    t, d, e, k, f = 32, 8, 4, 2, 16
+    cfg = MoEConfig(n_experts=e, top_k=k, d_ff_expert=f,
+                    capacity_factor=8.0, group_size=32)  # no drops
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    w = {
+        "router": jax.random.normal(ks[0], (d, e)),
+        "w1": jax.random.normal(ks[1], (e, d, f)) * 0.1,
+        "w3": jax.random.normal(ks[2], (e, d, f)) * 0.1,
+        "w2": jax.random.normal(ks[3], (f, d))[None].repeat(e, 0) * 0.1,
+    }
+    x = jax.random.normal(jax.random.PRNGKey(5), (t, d))
+    out = moe_ffn(x, w, cfg)
+    # oracle: per-token loop
+    probs = jax.nn.softmax(x @ w["router"], -1)
+    gv, gi = jax.lax.top_k(probs, k)
+    gv = gv / gv.sum(-1, keepdims=True)
+    want = np.zeros((t, d), np.float32)
+    for ti in range(t):
+        for kk in range(k):
+            ei = int(gi[ti, kk])
+            h = jax.nn.silu(x[ti] @ w["w1"][ei]) * (x[ti] @ w["w3"][ei])
+            want[ti] += float(gv[ti, kk]) * np.asarray(h @ w["w2"][ei])
+    np.testing.assert_allclose(np.asarray(out.y), want, rtol=2e-2, atol=2e-2)

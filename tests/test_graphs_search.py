@@ -1,0 +1,134 @@
+"""Graph builders + batched beam search + serving engines."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.graphs import (build_hnsw, build_nsg, build_vamana, degree_stats,
+                          descend, knn_ids)
+from repro.graphs.adjacency import Graph
+from repro.graphs.prune import robust_prune
+from repro.pq import base, train_pq
+from repro.search import beam_search, beam_search_trace, make_adc_dist_fn, \
+    make_exact_dist_fn
+from repro.search.engine import HybridEngine, InMemoryEngine
+from repro.search.metrics import recall_at_k
+
+
+def _pad(x):
+    return jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)])
+
+
+def test_knn_ids_exact(rng):
+    x = jnp.asarray(rng.normal(size=(500, 8)).astype(np.float32))
+    q = x[:10]
+    ids, dist = knn_ids(x, q, 5)
+    # brute-force oracle
+    d2 = np.sum((np.asarray(q)[:, None] - np.asarray(x)[None]) ** 2, -1)
+    want = np.argsort(d2, axis=1)[:, :5]
+    assert (np.asarray(ids) == want).mean() > 0.99  # ties may swap
+    assert (np.diff(np.asarray(dist), axis=1) >= -1e-5).all()  # ascending
+
+
+def test_robust_prune_degree_and_no_dups():
+    ids = jnp.asarray([[1, 2, 3, 2, 9, 9]], jnp.int32)   # dup 2, pad 9
+    dv = jnp.asarray([[1.0, 2.0, 3.0, 2.0, 0.0, 0.0]])
+    pair = jnp.full((1, 6, 6), 10.0)
+    out = robust_prune(ids, dv, pair, 1.0, 3, sentinel=9)
+    got = np.asarray(out[0])
+    valid = got[got != 9]
+    assert len(set(valid.tolist())) == len(valid)
+    assert set(valid.tolist()) <= {1, 2, 3}
+
+
+def test_beam_search_exact_on_knn_graph_high_recall(rng):
+    # uniform data: a kNN graph is connected there (clustered data would
+    # split into per-cluster components — that's WHY Vamana/NSG prune with
+    # long-range edges; covered by test_builders_reach_reasonable_recall)
+    x = jnp.asarray(rng.normal(size=(2000, 16)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(100, 16)).astype(np.float32))
+    gt, _ = knn_ids(x, q, 10)
+    ids, _ = knn_ids(x, x, 24, exclude_self=True)
+    g = Graph(neighbors=ids, medoid=jnp.asarray(0, jnp.int32))
+    res = beam_search(g.neighbors, g.medoid, q, make_exact_dist_fn(_pad(x)),
+                      h=64, max_steps=512)
+    assert recall_at_k(res.ids, gt, 10) > 0.9
+
+
+def test_beam_monotone_in_width(clustered_data, small_graph):
+    x, q, gt = clustered_data
+    f = make_exact_dist_fn(_pad(x))
+    r16 = recall_at_k(beam_search(small_graph.neighbors, small_graph.medoid,
+                                  q, f, h=16).ids, gt, 10)
+    r64 = recall_at_k(beam_search(small_graph.neighbors, small_graph.medoid,
+                                  q, f, h=64).ids, gt, 10)
+    assert r64 >= r16 - 0.02  # monotone up to tie noise
+
+
+def test_beam_results_sorted_unique(clustered_data, small_graph):
+    x, q, _ = clustered_data
+    res = beam_search(small_graph.neighbors, small_graph.medoid, q,
+                      make_exact_dist_fn(_pad(x)), h=32)
+    ids = np.asarray(res.ids)
+    dists = np.asarray(res.dists)
+    n = x.shape[0]
+    for row_i, row_d in zip(ids, dists):
+        valid = row_i[row_i < n]
+        assert len(set(valid.tolist())) == len(valid)
+        vd = row_d[: len(valid)]
+        assert (np.diff(vd) >= -1e-5).all()
+
+
+def test_trace_records_hops(clustered_data, small_graph):
+    x, q, _ = clustered_data
+    model_x = _pad(x)
+    tr = beam_search_trace(small_graph.neighbors, small_graph.medoid, q[:8],
+                           make_exact_dist_fn(model_x), h=8, trace_len=16)
+    assert tr.beam_ids.shape == (8, 16, 8)
+    hops = np.asarray(tr.result.hops)
+    valid = np.asarray(tr.hop_valid).sum(1)
+    assert (valid == np.minimum(hops, 16)).all()
+
+
+@pytest.mark.parametrize("builder", ["vamana", "nsg"])
+def test_builders_reach_reasonable_recall(clustered_data, builder):
+    x, q, gt = clustered_data
+    key = jax.random.PRNGKey(0)
+    if builder == "vamana":
+        g = build_vamana(key, x, r=16, l=32, batch=1024)
+    else:
+        g = build_nsg(key, x, r=16, k=24, search_l=24, batch=1024)
+    st = degree_stats(g)
+    assert st["max"] <= 16
+    res = beam_search(g.neighbors, g.medoid, q, make_exact_dist_fn(_pad(x)),
+                      h=48, max_steps=512)
+    assert recall_at_k(res.ids, gt, 10) > 0.55
+
+
+def test_hnsw_descend_and_search(clustered_data):
+    x, q, gt = clustered_data
+    h = build_hnsw(jax.random.PRNGKey(0), x, m=8, scale=8)
+    entries = descend(h, q, x)
+    assert entries.shape == (q.shape[0],)
+    res = beam_search(h.base.neighbors, entries, q,
+                      make_exact_dist_fn(_pad(x)), h=48, max_steps=512)
+    assert recall_at_k(res.ids, gt, 10) > 0.55
+
+
+def test_engines_end_to_end(clustered_data, small_graph):
+    x, q, gt = clustered_data
+    model = train_pq(jax.random.PRNGKey(0), x, 8, 64, iters=8)
+    codes = base.encode(model, x)
+    lut_fn = lambda qq: base.build_lut(model, qq)
+    mem = InMemoryEngine(small_graph, codes, lut_fn)
+    r1 = mem.search(q, k=10, h=48)
+    hyb = HybridEngine(small_graph, codes, lut_fn, vectors=x)
+    r2 = hyb.search(q, k=10, h=48)
+    rec1 = recall_at_k(r1.ids, gt, 10)
+    rec2 = recall_at_k(r2.ids, gt, 10)
+    assert rec2 >= rec1  # exact rerank can only help
+    assert rec2 > 0.3
+    io = np.asarray(hyb.io_time(r2))
+    assert (io > 0).all()
+    assert mem.memory_bytes() < x.size * 4  # codes much smaller than vectors

@@ -1,0 +1,136 @@
+"""PQ / OPQ / RPQ quantizer behaviour + hypothesis property tests."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantizer as Q
+from repro.core import rotation as rot
+from repro.pq import base, train_pq, train_opq
+from repro.pq.kmeans import kmeans
+
+
+# ---------- rotation properties -------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(dim=st.sampled_from([4, 8, 16]), seed=st.integers(0, 2**31 - 1),
+       scale=st.floats(0.0, 2.0))
+def test_rotation_is_orthonormal(dim, seed, scale):
+    theta = rot.init_rotation_params(dim, scale=scale,
+                                     key=jax.random.PRNGKey(seed))
+    r = rot.rotation_from_params(theta, dim)
+    err = jnp.abs(r @ r.T - jnp.eye(dim)).max()
+    assert float(err) < 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_rotation_preserves_distances(seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    theta = rot.init_rotation_params(16, scale=1.0, key=k1)
+    r = rot.rotation_from_params(theta, 16)
+    a = jax.random.normal(k2, (5, 16))
+    b = jax.random.normal(k3, (5, 16))
+    d0 = jnp.sum((a - b) ** 2, -1)
+    d1 = jnp.sum((rot.rotate(a, r) - rot.rotate(b, r)) ** 2, -1)
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=1e-4)
+
+
+def test_split_merge_roundtrip():
+    x = jnp.arange(24.0).reshape(2, 12)
+    s = rot.split_subvectors(x, 4)
+    assert s.shape == (2, 4, 3)
+    np.testing.assert_array_equal(np.asarray(rot.merge_subvectors(s)),
+                                  np.asarray(x))
+
+
+# ---------- kmeans ----------------------------------------------------------
+
+def test_kmeans_improves_and_covers(rng):
+    x = jnp.asarray(rng.normal(size=(2000, 8)).astype(np.float32))
+    cent, assign = kmeans(jax.random.PRNGKey(0), x, 16, iters=10)
+    assert cent.shape == (16, 8)
+    # every cluster non-empty after re-seeding logic
+    counts = np.bincount(np.asarray(assign), minlength=16)
+    assert (counts > 0).all()
+    # distortion below the trivial single-centroid bound
+    d = float(jnp.mean(jnp.sum((x - cent[assign]) ** 2, -1)))
+    d0 = float(jnp.mean(jnp.sum((x - x.mean(0)) ** 2, -1)))
+    assert d < 0.9 * d0
+
+
+# ---------- PQ / OPQ --------------------------------------------------------
+
+def test_hard_rpq_encode_equals_pq_encode(rng):
+    """DiffPQ with R=I and the same codebook must reproduce classic PQ."""
+    x = jnp.asarray(rng.normal(size=(300, 16)).astype(np.float32))
+    model = train_pq(jax.random.PRNGKey(0), x, 4, 8, iters=5)
+    cfg = Q.RPQConfig(dim=16, m=4, k=8)
+    params = Q.init_params(cfg, model.codebooks)
+    np.testing.assert_array_equal(
+        np.asarray(Q.encode(cfg, params, x, backend="ref")),
+        np.asarray(base.encode(model, x, backend="ref")))
+
+
+def test_opq_beats_pq_on_correlated_data(rng):
+    z = rng.normal(size=(4000, 16)).astype(np.float32)
+    mix = rng.normal(size=(16, 16)).astype(np.float32) * 0.7 + np.eye(16, dtype=np.float32)
+    x = jnp.asarray(z @ mix)
+    pq = train_pq(jax.random.PRNGKey(0), x, 4, 16, iters=10)
+    opq = train_opq(jax.random.PRNGKey(0), x, 4, 16, outer_iters=3,
+                    kmeans_iters=5)
+    assert float(base.distortion(opq, x)) < float(base.distortion(pq, x))
+
+
+def test_decode_roundtrip_distortion_reasonable(rng):
+    x = jnp.asarray(rng.normal(size=(2000, 16)).astype(np.float32))
+    model = train_pq(jax.random.PRNGKey(0), x, 8, 64, iters=10)
+    d = float(base.distortion(model, x))
+    d0 = float(jnp.mean(jnp.sum((x - x.mean(0)) ** 2, -1)))
+    assert d < 0.5 * d0  # 8 subspaces × 64 codewords on 16-dim gaussian
+
+
+# ---------- differentiable quantizer ---------------------------------------
+
+def test_gumbel_st_forward_is_hard_onehot(rng):
+    x = jnp.asarray(rng.normal(size=(50, 16)).astype(np.float32))
+    model = train_pq(jax.random.PRNGKey(0), x, 4, 8, iters=5)
+    cfg = Q.RPQConfig(dim=16, m=4, k=8, straight_through=True)
+    params = Q.init_params(cfg, model.codebooks)
+    y = Q.gumbel_codes(cfg, params, x, jax.random.PRNGKey(1))
+    ssum = np.asarray(jnp.sum(y, -1))
+    np.testing.assert_allclose(ssum, 1.0, atol=1e-5)
+    assert ((np.asarray(y) == 1.0).sum(-1) == 1).all()
+
+
+def test_quantizer_gradients_flow(rng):
+    x = jnp.asarray(rng.normal(size=(64, 16)).astype(np.float32))
+    model = train_pq(jax.random.PRNGKey(0), x, 4, 8, iters=5)
+    cfg = Q.RPQConfig(dim=16, m=4, k=8)
+    params = Q.init_params(cfg, model.codebooks)
+
+    def loss(p):
+        xq = Q.quantize_st(cfg, p, x, jax.random.PRNGKey(2))
+        r = Q.rotation_matrix(cfg, p)
+        return jnp.mean(jnp.sum((x @ r.T - xq) ** 2, -1))
+
+    g = jax.grad(loss)(params)
+    assert float(jnp.abs(g.codebooks).max()) > 0
+    assert float(jnp.abs(g.theta).max()) > 0  # rotation receives gradient
+
+
+def test_soft_assign_is_distribution(rng):
+    x = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    model = train_pq(jax.random.PRNGKey(0), x, 4, 8, iters=3)
+    cfg = Q.RPQConfig(dim=16, m=4, k=8)
+    params = Q.init_params(cfg, model.codebooks)
+    p = Q.soft_assign(cfg, params, x)
+    np.testing.assert_allclose(np.asarray(p.sum(-1)), 1.0, atol=1e-5)
+    assert (np.asarray(p) >= 0).all()
+    # closest codeword gets the highest probability (sign fix of Eq. 6)
+    d = Q.subspace_distances(cfg, params, x, backend="ref")
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(p, -1)),
+                                  np.asarray(jnp.argmin(d, -1)))
