@@ -1,0 +1,75 @@
+"""Forward-compat shims for older jax (this repo targets the jax >= 0.5
+sharding surface; the baked toolchain ships jax 0.4.37).
+
+Patched surface (idempotent, attribute-adds only — NEVER initializes a
+backend, so ``XLA_FLAGS`` set after ``import jax`` still takes effect):
+
+* ``jax.shard_map``            — re-exported from ``jax.experimental``.
+  ``check_rep`` defaults to False: 0.4.x replication rules are incomplete
+  for ``top_k`` / ``axis_index`` used by the scatter-gather engine.
+* ``jax.sharding.AxisType``    — Auto/Explicit/Manual enum stand-in.
+* ``jax.make_mesh(axis_types=)`` — kwarg accepted and ignored (0.4.x
+  meshes are implicitly Auto, which is what every caller here passes).
+
+Loaded from ``repro/__init__.py`` and from ``src/sitecustomize.py`` (the
+latter covers subprocesses that touch ``jax.sharding`` BEFORE importing
+``repro`` — e.g. the elastic-restore test driver).
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+
+import jax
+import jax.sharding
+
+
+class _AxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _compat_shard_map(f=None, /, *, mesh=None, in_specs=None, out_specs=None,
+                      check_rep=False, **kwargs):
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    if f is None:  # decorator style: jax.shard_map(mesh=..., ...)(f)
+        return functools.partial(_compat_shard_map, mesh=mesh,
+                                 in_specs=in_specs, out_specs=out_specs,
+                                 check_rep=check_rep, **kwargs)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_rep, **kwargs)
+
+
+def apply() -> None:
+    """Install the shims (no-ops on jax versions that already have them)."""
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _compat_shard_map
+
+    try:
+        import inspect
+        sig = inspect.signature(jax.make_mesh)
+        has_axis_types = "axis_types" in sig.parameters
+    except (TypeError, ValueError):  # pragma: no cover - builtin signature
+        has_axis_types = True
+    if not has_axis_types and not getattr(jax.make_mesh, "_repro_compat", False):
+        _orig = jax.make_mesh
+
+        @functools.wraps(_orig)
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+            return _orig(axis_shapes, axis_names, **kw)
+
+        make_mesh._repro_compat = True
+        jax.make_mesh = make_mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-agnostic shard_map used by the scatter-gather engine."""
+    apply()
+    return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs)

@@ -24,10 +24,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.sharding import PartitionSpec as P
+
+from repro._compat import shard_map
 from repro.common import adam, one_cycle, clip_by_global_norm
 from repro.core import features as F
 from repro.core import losses as L
 from repro.core import quantizer as Q
+from repro.dist import compression as comp
+from repro.dist import sharding as shd
 from repro.graphs.adjacency import Graph
 from repro.pq import base as pqbase
 from repro.pq.pq import train_pq
@@ -51,6 +56,9 @@ class TrainConfig:
     use_routing: bool = True        # ablations: RPQ w/ N only
     use_neighborhood: bool = True   # ablations: RPQ w/ R only
     log_every: int = 50
+    # distribution (dist/sharding + optional dist/compression):
+    data_parallel: bool = False     # shard_map the step over the data axis
+    compress_grads: bool = False    # int8 + error feedback before all-reduce
 
 
 @dataclasses.dataclass
@@ -68,9 +76,7 @@ def init_rpq(key: jax.Array, cfg: Q.RPQConfig, x: jax.Array,
     return Q.init_params(cfg, model.codebooks)
 
 
-def make_train_step(cfg: Q.RPQConfig, tcfg: TrainConfig, optimizer):
-    """Returns the jitted (params, opt_state, x, trip, route, key) step."""
-
+def _make_loss_fn(cfg: Q.RPQConfig, tcfg: TrainConfig):
     def loss_fn(params, x, trip, route, key):
         kt, kr = jax.random.split(key)
         zero = jnp.zeros((), jnp.float32)
@@ -88,6 +94,13 @@ def make_train_step(cfg: Q.RPQConfig, tcfg: TrainConfig, optimizer):
             total = lr_ + alpha * ln + s
         return total, L.LossReport(total, lr_, ln, alpha)
 
+    return loss_fn
+
+
+def make_train_step(cfg: Q.RPQConfig, tcfg: TrainConfig, optimizer):
+    """Returns the jitted (params, opt_state, x, trip, route, key) step."""
+    loss_fn = _make_loss_fn(cfg, tcfg)
+
     @jax.jit
     def step(params, opt_state, x, trip, route, key):
         (_, report), grads = jax.value_and_grad(loss_fn, has_aux=True)(
@@ -101,15 +114,79 @@ def make_train_step(cfg: Q.RPQConfig, tcfg: TrainConfig, optimizer):
     return step
 
 
+def _dp_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names) \
+        or tuple(mesh.axis_names)
+
+
+def default_dp_mesh():
+    """1-D data mesh over every local device (the serving row layout's
+    training twin); built inline so pure-library users never touch launch/."""
+    return jax.make_mesh((len(jax.devices()),), ("data",))
+
+
+def init_dp_comp_state(params, n_dp: int):
+    """Per-device error-feedback residuals: leading (n_dp,) axis, sharded
+    over the data axis by the dp step (each replica keeps its OWN residual —
+    error feedback is local by construction)."""
+    return jax.tree.map(
+        lambda p: jnp.zeros((n_dp,) + jnp.shape(p), jnp.float32), params)
+
+
+def make_dp_train_step(cfg: Q.RPQConfig, tcfg: TrainConfig, optimizer, mesh,
+                       compress: bool = False):
+    """Data-parallel step (the docstring's `data_parallel=True` path).
+
+    shard_map over the data axes: triplet/routing batches are row-sharded,
+    the base set x and the (tiny) quantizer params stay replicated, local
+    gradients are optionally int8-compressed with error feedback
+    (dist/compression) and then mean-all-reduced — after which the update
+    is replica-identical, exactly like the serving layout.
+
+    Signature: (params, opt_state, comp_state, x, trip, route, key) →
+    (params, opt_state, comp_state, report, gnorm). ``comp_state`` is the
+    (n_dp, ...) error-feedback pytree from :func:`init_dp_comp_state`
+    (pass ``{}`` when ``compress=False``).
+    """
+    loss_fn = _make_loss_fn(cfg, tcfg)
+    dp = _dp_axes(mesh)
+
+    def local_step(params, opt_state, comp_state, x, trip, route, key):
+        # decorrelate per-shard Gumbel noise; one global key per step
+        key = jax.random.fold_in(key, shd.flat_shard_index(mesh, dp))
+        (_, report), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, x, trip, route, key)
+        if not cfg.learn_rotation:
+            grads = grads._replace(theta=jnp.zeros_like(grads.theta))
+        if compress:
+            local_state = jax.tree.map(lambda e: e[0], comp_state)
+            (q, s), local_state = comp.compress_tree(grads, local_state)
+            grads = comp.decompress_tree((q, s))   # ≙ wire format int8+scale
+            comp_state = jax.tree.map(lambda e: e[None], local_state)
+        grads = jax.lax.pmean(grads, dp)
+        report = jax.tree.map(lambda v: jax.lax.pmean(v, dp), report)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, comp_state, report, gnorm
+
+    pb = P(dp)
+    step = shard_map(local_step, mesh=mesh,
+                     in_specs=(P(), P(), pb, P(), pb, pb, P()),
+                     out_specs=(P(), P(), pb, P(), P()))
+    return jax.jit(step)
+
+
 def fit(key: jax.Array, cfg: Q.RPQConfig, tcfg: TrainConfig, x: jax.Array,
         graph: Graph, *, params: Optional[Q.RPQParams] = None,
         checkpoint_cb: Optional[Callable] = None,
-        start_step: int = 0, opt_state=None,
+        start_step: int = 0, opt_state=None, mesh=None,
         verbose: bool = True) -> TrainState:
     """End-to-end RPQ training (paper Fig. 2). Returns the final TrainState.
 
     checkpoint_cb(step, params, opt_state) — wired to dist/checkpoint.py by
-    launch/train.py; pure library users can ignore it.
+    launch/train.py; pure library users can ignore it. With
+    ``tcfg.data_parallel`` the jitted step runs under shard_map on ``mesh``
+    (default: every local device) — see :func:`make_dp_train_step`.
     """
     n = x.shape[0]
     key, kinit = jax.random.split(key)
@@ -118,7 +195,23 @@ def fit(key: jax.Array, cfg: Q.RPQConfig, tcfg: TrainConfig, x: jax.Array,
     optimizer = adam(one_cycle(tcfg.lr, tcfg.steps))
     if opt_state is None:
         opt_state = optimizer.init(params)
-    step_fn = make_train_step(cfg, tcfg, optimizer)
+    comp_state = {}
+    n_dp = 1
+    if tcfg.data_parallel:
+        mesh = mesh if mesh is not None else default_dp_mesh()
+        for a in _dp_axes(mesh):
+            n_dp *= mesh.shape[a]
+        if tcfg.triplet_batch % n_dp or tcfg.routing_batch % n_dp:
+            raise ValueError(
+                f"data_parallel: triplet_batch={tcfg.triplet_batch} and "
+                f"routing_batch={tcfg.routing_batch} must divide the "
+                f"{n_dp}-way data axis")
+        step_fn = make_dp_train_step(cfg, tcfg, optimizer, mesh,
+                                     compress=tcfg.compress_grads)
+        if tcfg.compress_grads:
+            comp_state = init_dp_comp_state(params, n_dp)
+    else:
+        step_fn = make_train_step(cfg, tcfg, optimizer)
 
     routing_pool: Optional[F.RoutingBatch] = None
     history = []
@@ -143,15 +236,20 @@ def fit(key: jax.Array, cfg: Q.RPQConfig, tcfg: TrainConfig, x: jax.Array,
                                  k_pos=tcfg.k_pos, k_neg=tcfg.k_neg)
         if tcfg.use_routing:
             route = F.subsample_routing(k4, routing_pool, tcfg.routing_batch)
-        else:  # placeholder batch (masked out by use_routing=False)
+        else:  # placeholder batch (masked out by use_routing=False);
+            #    one row PER REPLICA so it shards under data_parallel
             route = F.RoutingBatch(
-                q=jnp.zeros((1, x.shape[1]), jnp.float32),
-                cand=jnp.zeros((1, tcfg.beam_h), jnp.int32),
-                label=jnp.zeros((1,), jnp.int32),
-                valid=jnp.zeros((1,), bool))
+                q=jnp.zeros((n_dp, x.shape[1]), jnp.float32),
+                cand=jnp.zeros((n_dp, tcfg.beam_h), jnp.int32),
+                label=jnp.zeros((n_dp,), jnp.int32),
+                valid=jnp.zeros((n_dp,), bool))
         # ---- jitted joint step ----
-        params, opt_state, report, gnorm = step_fn(
-            params, opt_state, x, trip, route, k5)
+        if tcfg.data_parallel:
+            params, opt_state, comp_state, report, gnorm = step_fn(
+                params, opt_state, comp_state, x, trip, route, k5)
+        else:
+            params, opt_state, report, gnorm = step_fn(
+                params, opt_state, x, trip, route, k5)
         if step % tcfg.log_every == 0:
             rec = {k: float(v) for k, v in report._asdict().items()}
             rec.update(step=step, gnorm=float(gnorm), wall=time.time() - t0)

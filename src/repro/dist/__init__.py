@@ -1,0 +1,12 @@
+"""Distribution substrate.
+
+* :mod:`repro.dist.sharding`    — mesh-aware PartitionSpec rules for every
+  arch family (LM, GNN, recsys, RPQ) + pytree sharding helpers.
+* :mod:`repro.dist.checkpoint`  — atomic / elastic / rotating checkpoints.
+* :mod:`repro.dist.compression` — int8 gradient compression with error
+  feedback (communication-efficient data parallelism).
+* :mod:`repro.dist.fault`       — failure injection, supervised restart,
+  straggler-tolerant partial top-k merge for scatter-gather serving.
+"""
+
+from repro.dist import checkpoint, compression, fault, sharding  # noqa: F401

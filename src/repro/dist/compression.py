@@ -1,0 +1,62 @@
+"""Int8 gradient compression with error feedback (EF-SGD style).
+
+Data-parallel training all-reduces a gradient pytree every step; for the
+small RPQ quantizer that is cheap, but the same trainer drives the arch-zoo
+models where the all-reduce is the bill. Each leaf is quantized to int8
+with a single per-leaf scale (max-abs / 127); the quantization residual is
+carried in a per-device error-feedback state and added back before the next
+step's quantization, so the *accumulated* compressed gradient stays within
+one quantization step of the true sum (the EF telescoping argument —
+Karimireddy et al. 2019) instead of drifting by O(steps).
+
+The (q, scale) pair is what would travel on the wire: 4 bytes/element →
+1 byte + one f32 scale per leaf, a 4× collective-traffic cut.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_state(tree):
+    """Zero error-feedback residuals, one f32 buffer per gradient leaf."""
+    return jax.tree.map(lambda g: jnp.zeros(jnp.shape(g), jnp.float32), tree)
+
+
+def quantize_leaf(g: jax.Array, err: jax.Array):
+    """Quantize one leaf (with its EF residual folded in).
+
+    Returns ``(q int8, scale f32 scalar, new_err f32)`` where
+    ``dequantize_leaf(q, scale) + new_err == g + err`` exactly.
+    """
+    corrected = g.astype(jnp.float32) + err
+    amax = jnp.max(jnp.abs(corrected))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(corrected / scale), -127, 127).astype(jnp.int8)
+    new_err = corrected - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def dequantize_leaf(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(tree, state):
+    """Compress a gradient pytree under error feedback.
+
+    Returns ``((q_tree, scale_tree), new_state)`` — the pair mirrors the
+    original tree structure and is what :func:`decompress_tree` consumes.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    err_leaves = treedef.flatten_up_to(state)
+    out = [quantize_leaf(g, e) for g, e in zip(leaves, err_leaves)]
+    q_tree = treedef.unflatten([o[0] for o in out])
+    s_tree = treedef.unflatten([o[1] for o in out])
+    new_state = treedef.unflatten([o[2] for o in out])
+    return (q_tree, s_tree), new_state
+
+
+def decompress_tree(compressed):
+    q_tree, s_tree = compressed
+    return jax.tree.map(dequantize_leaf, q_tree, s_tree)

@@ -1,0 +1,90 @@
+"""Fault tolerance: failure injection, supervised restart, partial merge.
+
+The serving-side counterpart to checkpoint/restore: a scatter-gather query
+fans out to row shards; :func:`partial_merge` recombines whatever shard
+shortlists actually arrived, so a dead or straggling shard degrades recall
+(its rows simply go missing from the merged top-k) instead of failing the
+query. The training-side counterpart is :func:`supervise`, which restarts a
+crashed driver up to ``max_restarts`` times — paired with the fold_in(step)
+RNG discipline in core/trainer.fit, a restart replays the exact key
+sequence of the uninterrupted run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+
+class InjectedFailure(RuntimeError):
+    """A deliberately injected crash (fault-tolerance drills)."""
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Raises :class:`InjectedFailure` when training reaches a given step.
+
+    Drivers construct one per attempt; a restarted (i.e. replaced) node is
+    built with ``fail_at_step=None`` so it does not re-crash at the same
+    step (see launch/train.py).
+    """
+
+    fail_at_step: Optional[int] = None
+
+    def maybe_fail(self, step: int) -> None:
+        if self.fail_at_step is not None and step == self.fail_at_step:
+            raise InjectedFailure(f"injected failure at step {step}")
+
+
+def supervise(run: Callable[[], object], max_restarts: int = 0,
+              on_restart: Optional[Callable[[int, BaseException], None]] = None,
+              retry_on: tuple = (InjectedFailure,)):
+    """Run ``run()`` under a restart supervisor.
+
+    Returns ``(result, n_restarts)``. Only exceptions in ``retry_on`` are
+    retried (default: injected failures — a genuine bug should crash loudly,
+    not loop); anything else, or exhausting ``max_restarts``, propagates.
+    """
+    restarts = 0
+    while True:
+        try:
+            return run(), restarts
+        except retry_on as e:  # noqa: PERF203 - restart loop is cold
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            if on_restart is not None:
+                on_restart(restarts, e)
+
+
+def partial_merge(ids: Sequence, dists: Sequence, alive: Sequence[bool],
+                  k: int):
+    """Straggler-tolerant top-k merge of per-shard shortlists.
+
+    Args:
+      ids:   per-shard (Q, k_s) int arrays of GLOBAL candidate ids.
+      dists: per-shard (Q, k_s) float distances (ascending = better).
+      alive: per-shard liveness flags; dead shards are skipped entirely.
+      k:     merged shortlist size.
+
+    Returns:
+      (ids (Q, k) int32, dists (Q, k) float32) merged by ascending distance.
+      Rows are padded with (-1, +inf) if the surviving shards contribute
+      fewer than ``k`` candidates. Raises ``RuntimeError`` when no shard is
+      alive — an empty answer is an error, a partial answer is not.
+    """
+    live = [(np.asarray(i), np.asarray(d))
+            for i, d, a in zip(ids, dists, alive) if a]
+    if not live:
+        raise RuntimeError("partial_merge: all shards dead/unreachable")
+    cat_i = np.concatenate([i for i, _ in live], axis=1)
+    cat_d = np.concatenate([d for _, d in live], axis=1).astype(np.float32)
+    if cat_i.shape[1] < k:  # pad so top-k below is well-defined
+        pad = k - cat_i.shape[1]
+        cat_i = np.pad(cat_i, ((0, 0), (0, pad)), constant_values=-1)
+        cat_d = np.pad(cat_d, ((0, 0), (0, pad)), constant_values=np.inf)
+    order = np.argsort(cat_d, axis=1, kind="stable")[:, :k]
+    return (np.take_along_axis(cat_i, order, axis=1).astype(np.int32),
+            np.take_along_axis(cat_d, order, axis=1))

@@ -1,0 +1,231 @@
+"""Mesh-aware sharding rules for every arch family (the GSPMD layer).
+
+Axis semantics follow launch/mesh.py: ``pod`` (DCN data parallel), ``data``
+(intra-pod data/FSDP), ``model`` (tensor/expert/table/row parallel). Every
+rule is divisibility-guarded: a dim that does not divide its mesh axes is
+left unsharded instead of tripping XLA's uneven-sharding paths, so the same
+rule set serves the 16×16 pod, the 2×16×16 multi-pod, and a laptop's
+(1, n) host mesh.
+
+Rules are *path-keyed* (``"table"``, ``"wq"``, ``"embed"`` ...), which makes
+them apply uniformly to parameter trees AND to optimizer states whose inner
+slots mirror the parameter tree (common.optim.OptState embeds the param
+paths, so Adam moments inherit their parameter's sharding — FSDP slots for
+free).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+_LAST_KEY_RE = re.compile(r"[A-Za-z_][A-Za-z_0-9]*")
+
+
+def named(mesh, pspec: P) -> NamedSharding:
+    """The one constructor everybody shares: pspec → NamedSharding."""
+    return NamedSharding(mesh, pspec)
+
+
+def axis_size(mesh, axes) -> int:
+    """Total device count across ``axes`` (str | tuple | None)."""
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh, axes, dim: int):
+    """``axes`` if they evenly divide ``dim`` (else None → replicate)."""
+    if axes is None:
+        return None
+    return axes if dim % axis_size(mesh, axes) == 0 else None
+
+
+def row_axes(mesh) -> tuple:
+    """All mesh axes in canonical (pod, data, model) order — the maximal
+    row-sharding for big flat tables / code arrays."""
+    axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    return axes if axes else tuple(mesh.axis_names)
+
+
+def flat_shard_index(mesh, axes: tuple):
+    """Row-major linear shard index over ``axes`` — only meaningful inside
+    shard_map. The ONE definition of shard ordering: the scatter-gather
+    engine derives global row ids from it and the dp trainer folds it into
+    per-replica RNG keys; both must agree with how jax lays out
+    ``P(axes)``-sharded rows."""
+    idx = jnp.zeros((), jnp.int32)
+    for a in axes:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def _leaf_name(path: str) -> str:
+    keys = _LAST_KEY_RE.findall(path)
+    return keys[-1] if keys else ""
+
+
+# --------------------------------------------------------------------------
+# Pytree helpers
+# --------------------------------------------------------------------------
+
+def tree_pspecs(tree: Any, rule: Callable[[str, Any], P]):
+    """Map ``rule(path_str, leaf) -> PartitionSpec`` over a pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: rule(jax.tree_util.keystr(kp), leaf), tree)
+
+
+def tree_shardings(mesh, tree: Any, fn: Callable[[str, Any], P]):
+    """Like :func:`tree_pspecs` but returns NamedShardings on ``mesh``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: NamedSharding(
+            mesh, fn(jax.tree_util.keystr(kp), leaf)), tree)
+
+
+# --------------------------------------------------------------------------
+# LM family — Megatron TP over `model`, FSDP over `data`, batch over dp axes
+# --------------------------------------------------------------------------
+
+def lm_batch_spec(mesh) -> P:
+    """(B, ...) token batches: batch dim over all data-parallel axes."""
+    return P(data_axes(mesh))
+
+
+def lm_param_rule(mesh) -> Callable[[str, Any], P]:
+    """Path-keyed rule for stacked (L, ...) LM weights.
+
+    Column-parallel (wq/wk/wv/w1/w3) shard their OUTPUT dim over `model`
+    and their input dim over `data` (FSDP); row-parallel (wo/w2) the
+    transpose. Embeddings shard the vocab over `model` (the tied head then
+    produces model-sharded logits). MoE expert stacks shard experts over
+    `model` (expert parallelism). Everything 1-D (norms, scalars)
+    replicates. All subject to divisibility.
+    """
+
+    def rule(path: str, leaf) -> P:
+        shape = getattr(leaf, "shape", ())
+        if len(shape) <= 1:
+            return P()
+        name = _leaf_name(path)
+        if "embed" in path:                     # (Vpad, D)
+            return P(_fit(mesh, "model", shape[0]),
+                     _fit(mesh, "data", shape[1]))
+        if "lm_head" in path:                   # (D, Vpad)
+            return P(_fit(mesh, "data", shape[0]),
+                     _fit(mesh, "model", shape[1]))
+        if "router" in path:                    # (L, D, E)
+            return P(None, None, _fit(mesh, "model", shape[2]))
+        if "moe" in path and len(shape) == 4:   # (L, E, din, dout)
+            if name in ("w1", "w3"):
+                return P(None, _fit(mesh, "model", shape[1]),
+                         _fit(mesh, "data", shape[2]), None)
+            return P(None, _fit(mesh, "model", shape[1]), None,
+                     _fit(mesh, "data", shape[3]))
+        if name in ("wq", "wk", "wv", "w1", "w3") and len(shape) == 3:
+            return P(None, _fit(mesh, "data", shape[1]),
+                     _fit(mesh, "model", shape[2]))
+        if name in ("wo", "w2") and len(shape) == 3:
+            return P(None, _fit(mesh, "model", shape[1]),
+                     _fit(mesh, "data", shape[2]))
+        return P()
+
+    return rule
+
+
+def lm_shardings(mesh, cfg, params_shape, opt_shape):
+    """(param shardings, optimizer-state shardings) for one LM config.
+
+    The same path-keyed rule covers both trees: OptState's inner slots embed
+    the parameter paths, so Adam moments co-shard with their parameters.
+    """
+    del cfg  # rules are shape/path-driven; cfg reserved for future overrides
+    rule = lm_param_rule(mesh)
+    return (tree_shardings(mesh, params_shape, rule),
+            tree_shardings(mesh, opt_shape, rule))
+
+
+def lm_cache_spec(mesh, batch: int, seq_len: int) -> P:
+    """(L, B, S, Hkv, dh) KV-cache spec.
+
+    Batched decode/prefill shards B over the dp axes and S over `model`
+    (the sharded-softmax layout of layers.gqa_attention); single-sequence
+    long-context decode (B=1) shards S over EVERY axis instead — element
+    [2] of the returned spec is what cells.py pins decode attention to.
+    """
+    dp = data_axes(mesh)
+    if batch % max(axis_size(mesh, dp), 1) == 0 and batch > 1:
+        return P(None, dp, _fit(mesh, "model", seq_len), None, None)
+    all_ax = row_axes(mesh)
+    seq = _fit(mesh, all_ax, seq_len) or _fit(mesh, "model", seq_len)
+    return P(None, None, seq, None, None)
+
+
+# --------------------------------------------------------------------------
+# GNN family — edge lists row-sharded over every axis (degree parallelism)
+# --------------------------------------------------------------------------
+
+def gnn_edge_spec(mesh) -> P:
+    """1-D (E,) src/dst/mask arrays, padded to a device-count multiple by
+    the pipeline, sharded over all axes."""
+    return P(row_axes(mesh))
+
+
+# --------------------------------------------------------------------------
+# Recsys family — the mega-table is the only big tensor; row-shard it
+# --------------------------------------------------------------------------
+
+def _is_table(path: str) -> bool:
+    return "table" in path or "item_emb" in path
+
+
+def recsys_table_rule(mesh, table_axes: str = "model"
+                      ) -> Callable[[str, Any], P]:
+    axes = row_axes(mesh) if table_axes == "all" else ("model",)
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+
+    def rule(path: str, leaf) -> P:
+        shape = getattr(leaf, "shape", ())
+        if len(shape) >= 1 and _is_table(path) and _fit(mesh, axes, shape[0]):
+            return P(axes, *([None] * (len(shape) - 1)))
+        return P()
+
+    return rule
+
+
+def recsys_shardings(mesh, params_shape, opt_shape, *,
+                     table_axes: str = "model"):
+    """(param, opt) shardings: embedding mega-tables row-sharded over
+    ``table_axes`` ("model" = TorchRec-style table parallel; "all" = every
+    axis, the DLRM layout), dense towers replicated. Optimizer slots
+    co-shard with their parameters (path-keyed, as in lm_shardings)."""
+    rule = recsys_table_rule(mesh, table_axes)
+    return (tree_shardings(mesh, params_shape, rule),
+            tree_shardings(mesh, opt_shape, rule))
+
+
+# --------------------------------------------------------------------------
+# RPQ (the paper's system) — tiny replicated quantizer, row-sharded codes
+# --------------------------------------------------------------------------
+
+def rpq_rows_spec(mesh) -> P:
+    """(N, ...) code/vector arrays row-sharded over every mesh axis — the
+    serving layout: each device owns N/n_devices rows and scans them
+    locally (scatter-gather, search/engine.py)."""
+    return P(row_axes(mesh))
+
+
+def rpq_param_spec(mesh, params_shape):
+    """RPQ quantizer params are ≤ a few MB — fully replicated, exactly like
+    the serving layout (every shard builds LUTs locally)."""
+    return tree_shardings(mesh, params_shape, lambda p, l: P())

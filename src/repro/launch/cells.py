@@ -377,7 +377,6 @@ def _recsys_cell(arch_id: str, shape, mesh) -> Cell:
 
 def _rpq_cell(arch_id: str, shape, mesh) -> Cell:
     from repro.core import quantizer as Q
-    from repro.kernels import ref as kref
 
     spec = get_arch(arch_id)
     acfg = spec.make_config()
@@ -443,13 +442,12 @@ def _rpq_cell(arch_id: str, shape, mesh) -> Cell:
                     (params_shape, _sds((n, qcfg.dim), jnp.float32)),
                     (p_sh, rows), rows, meta={"mode": "serve", "n": n})
 
-    all_axes = tuple(list(dp) + ["model"])
+    # The scatter-gather bodies live in search/engine.py — the SAME
+    # implementation ShardedEngine serves with; these cells only prove it
+    # lowers/compiles on the production meshes.
+    from repro.search import engine as se
 
-    def _flat_shard_index():
-        idx = jnp.zeros((), jnp.int32)
-        for a in all_axes:
-            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
-        return idx
+    all_axes = shd.row_axes(mesh)
 
     if shape.name == "adc_bulk":
         # scatter-gather ADC: each shard scans its code rows and returns a
@@ -459,25 +457,11 @@ def _rpq_cell(arch_id: str, shape, mesh) -> Cell:
         n = _pad_to(dims["n_codes"], n_dev)
         qb = dims["query_batch"]
         kk = 10
-        n_local = n // n_dev
-
-        def local_scan(codes_l, luts):
-            d = kref.adc_scan_batch_ref(codes_l, luts)       # (Q, N_local)
-            neg, ids = jax.lax.top_k(-d, kk)
-            gids = ids + _flat_shard_index() * n_local
-            return gids[None], (-neg)[None]                  # (1, Q, k)
 
         def fn(codes, luts):
-            gids, dists = jax.shard_map(
-                local_scan, mesh=mesh,
-                in_specs=(P(all_axes, None), P(None, None, None)),
-                out_specs=(P(all_axes, None, None), P(all_axes, None, None)),
-            )(codes, luts)
-            # (n_shards, Q, k) → global top-k per query
-            ds = dists.transpose(1, 0, 2).reshape(qb, -1)
-            is_ = gids.transpose(1, 0, 2).reshape(qb, -1)
-            neg, order = jax.lax.top_k(-ds, kk)
-            return jnp.take_along_axis(is_, order, axis=1), -neg
+            gids, dists = se.sharded_adc_scan(mesh, all_axes, codes, luts,
+                                              k=kk)
+            return se.merge_shard_topk(gids, dists, kk)
 
         rows = shd.named(mesh, shd.rpq_rows_spec(mesh))
         return Cell(arch_id, shape.name, fn,
@@ -491,29 +475,12 @@ def _rpq_cell(arch_id: str, shape, mesh) -> Cell:
     n = _pad_to(dims["n_base"], n_dev)
     qb = dims["query_batch"]
     kk = dims["k"]
-    n_local = n // n_dev
-
-    def local_serve(codes_l, vectors_l, luts, queries):
-        d = kref.adc_scan_batch_ref(codes_l, luts)           # (Q, N_local)
-        _, cand = jax.lax.top_k(-d, 4 * kk)                  # ADC shortlist
-        cv = vectors_l[cand]                                 # (Q, 4k, D)
-        exact = jnp.sum((cv - queries[:, None, :]) ** 2, -1)
-        neg, order = jax.lax.top_k(-exact, kk)
-        gids = jnp.take_along_axis(cand, order, axis=1) \
-            + _flat_shard_index() * n_local
-        return gids[None], (-neg)[None]
 
     def fn(codes, vectors, luts, queries):
-        gids, dists = jax.shard_map(
-            local_serve, mesh=mesh,
-            in_specs=(P(all_axes, None), P(all_axes, None),
-                      P(None, None, None), P(None, None)),
-            out_specs=(P(all_axes, None, None), P(all_axes, None, None)),
-        )(codes, vectors, luts, queries)
-        ds = dists.transpose(1, 0, 2).reshape(qb, -1)
-        is_ = gids.transpose(1, 0, 2).reshape(qb, -1)
-        neg, order = jax.lax.top_k(-ds, kk)
-        return jnp.take_along_axis(is_, order, axis=1), -neg
+        gids, dists = se.sharded_adc_serve(mesh, all_axes, codes, vectors,
+                                           luts, queries, k=kk,
+                                           shortlist=4 * kk)
+        return se.merge_shard_topk(gids, dists, kk)
 
     rows = shd.named(mesh, shd.rpq_rows_spec(mesh))
     return Cell(arch_id, shape.name, fn,

@@ -77,6 +77,8 @@ def run_cell(arch: str, shape: str, mesh, mesh_name: str) -> dict:
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # jax<=0.4.x: one dict per comp
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         rec.update(
             ok=True,

@@ -7,8 +7,11 @@ Loads the latest checkpoint written by launch/train.py, rebuilds the
 serving engine (codes are re-encoded from the checkpointed quantizer —
 deterministic), and either runs a one-shot evaluation batch or reads
 newline-delimited query vectors from stdin (toy request loop; a real
-deployment fronts this with an RPC layer and shards the codes per
-dist/sharding.rpq_rows_spec — see the rpq serve_1m dry-run cell).
+deployment fronts this with an RPC layer). ``--scenario sharded`` serves
+through search/engine.ShardedEngine: codes + vectors row-sharded over the
+local devices per dist/sharding.rpq_rows_spec, per-shard scan + local
+rerank, dist.fault.partial_merge gather — the serve_1m dry-run cell's
+scatter-gather pattern running for real.
 """
 
 from __future__ import annotations
@@ -29,7 +32,7 @@ from repro.dist import checkpoint as ckpt
 from repro.graphs.knn import knn_ids
 from repro.launch.train import build_or_load_graph
 from repro.pq import base as pqbase
-from repro.search.engine import HybridEngine, InMemoryEngine
+from repro.search.engine import HybridEngine, InMemoryEngine, ShardedEngine
 from repro.search.metrics import measure_qps, recall_at_k
 
 
@@ -37,7 +40,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--ckpt-dir", required=True)
     ap.add_argument("--dataset", default="sift-small")
-    ap.add_argument("--scenario", choices=("hybrid", "memory"),
+    ap.add_argument("--scenario", choices=("hybrid", "memory", "sharded"),
                     default="hybrid")
     ap.add_argument("--h", type=int, default=32)
     ap.add_argument("--k", type=int, default=10)
@@ -60,21 +63,29 @@ def main():
     print(f"[serve] restored step {state['step']} quantizer "
           f"(M={m}, K={k}) from {args.ckpt_dir}")
 
-    graph = build_or_load_graph(jax.random.PRNGKey(0), ds.base,
-                                f"{args.ckpt_dir}/graph_base.npz",
-                                args.graph_r, args.graph_l)
     codes = pqbase.encode(model, ds.base)
     lut_fn = lambda q: pqbase.build_lut(model, q)
-    if args.scenario == "hybrid":
-        engine = HybridEngine(graph, codes, lut_fn, vectors=ds.base)
+    if args.scenario == "sharded":  # graph-free scatter-gather scan
+        engine = ShardedEngine(codes, lut_fn, vectors=ds.base)
+        print(f"[serve] sharded over {engine.n_shards} device shard(s)")
     else:
-        engine = InMemoryEngine(graph, codes, lut_fn)
+        graph = build_or_load_graph(jax.random.PRNGKey(0), ds.base,
+                                    f"{args.ckpt_dir}/graph_base.npz",
+                                    args.graph_r, args.graph_l)
+        if args.scenario == "hybrid":
+            engine = HybridEngine(graph, codes, lut_fn, vectors=ds.base)
+        else:
+            engine = InMemoryEngine(graph, codes, lut_fn)
 
     if args.port_stdin:
         print(f"[serve] reading {ds.dim}-d queries from stdin "
               f"(one per line; EOF to stop)")
         for line in sys.stdin:
-            vals = np.fromstring(line, sep=" ", dtype=np.float32)
+            try:
+                vals = np.fromiter(line.split(), dtype=np.float32)
+            except ValueError:
+                print(f"!! expected {ds.dim} floats, got unparseable input")
+                continue
             if vals.size != ds.dim:
                 print(f"!! expected {ds.dim} floats, got {vals.size}")
                 continue

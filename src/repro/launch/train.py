@@ -90,7 +90,9 @@ def run(args) -> dict:
                   opt_state=opt_state, start_step=start_step,
                   checkpoint_cb=checkpoint_cb, verbose=not args.quiet)
     ckpt.save(args.ckpt_dir, tcfg.steps, keep=args.keep, params=state.params,
-              opt=state.opt_state, extra={"final": True})
+              opt=state.opt_state,
+              extra={"final": True, "dataset": args.dataset, "m": args.m,
+                     "k": args.k})
 
     # final evaluation: hybrid (DiskANN) serving on the base set
     model = T.to_model(cfg, state.params)

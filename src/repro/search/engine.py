@@ -1,8 +1,9 @@
-"""Serving engines (paper §7): in-memory and SSD-hybrid (DiskANN) scenarios.
+"""Serving engines (paper §7): in-memory, SSD-hybrid (DiskANN) and sharded
+scatter-gather scenarios.
 
-Both engines route with PQ-ADC distances over a proximity graph. They accept
-any quantizer exposing the (codes, lut_fn) protocol — classic PQ / OPQ
-(pq.base.QuantizerModel), the learned RPQ (core.rpq), or Catalyst.
+All engines route with PQ-ADC distances. They accept any quantizer exposing
+the (codes, lut_fn) protocol — classic PQ / OPQ (pq.base.QuantizerModel),
+the learned RPQ (core.rpq), or Catalyst.
 
 * :class:`InMemoryEngine` — codes + codebook + PG in RAM; next-hop selection
   and the final top-k use ONLY PQ distances (no rerank). Memory = N·M bytes
@@ -13,18 +14,31 @@ any quantizer exposing the (codes, lut_fn) protocol — classic PQ / OPQ
   disk layout); the final candidates are re-ranked with exact distances.
   IO time is modeled as reads × latency (default 100 µs, ~NVMe) — reported
   separately from compute time so real-hardware numbers can be projected.
+* :class:`ShardedEngine` — multi-device scatter-gather: codes (+ vectors)
+  row-sharded over the mesh via dist.sharding.rpq_rows_spec; each shard
+  scans its rows with the ADC kernel and returns a LOCAL top-k, merged with
+  dist.fault.partial_merge so a dead/straggler shard degrades recall
+  instead of failing the query. The per-shard bodies below are the ONE
+  implementation of the scatter-gather pattern — launch/cells.py's
+  adc_bulk/serve_1m dry-run cells compile these same functions.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
+import numpy as np
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from repro._compat import shard_map
+from repro.dist import sharding as shd
+from repro.dist.fault import partial_merge
 from repro.graphs.adjacency import Graph
+from repro.kernels import ref as kref
 from repro.search import beam
 from repro.search.beam import SearchResult
 
@@ -109,3 +123,174 @@ def _exact_rerank(vec_p, queries, cand_ids, rerank: int, k: int):
     d = jnp.where(cand == vec_p.shape[0] - 1, jnp.inf, d)
     neg, order = jax.lax.top_k(-d, k)
     return jnp.take_along_axis(cand, order, axis=1), -neg
+
+
+# ==========================================================================
+# Sharded scatter-gather substrate (shared by ShardedEngine AND the
+# launch/cells.py adc_bulk / serve_1m dry-run cells)
+# ==========================================================================
+
+flat_shard_index = shd.flat_shard_index  # the one definition of shard order
+
+
+def _local_adc_topk(codes_l, luts, *, mesh, axes, n_local: int, k: int,
+                    n_valid: Optional[int]):
+    """One shard's scatter half: ADC-scan my rows, return LOCAL top-k with
+    GLOBAL ids. (1, Q, k) leading shard axis for the gather."""
+    d = kref.adc_scan_batch_ref(codes_l, luts)            # (Q, N_local)
+    shard = flat_shard_index(mesh, axes)
+    if n_valid is not None:  # mask divisibility-padding rows
+        gid_row = shard * n_local + jnp.arange(n_local)
+        d = jnp.where(gid_row[None, :] < n_valid, d, jnp.inf)
+    neg, ids = jax.lax.top_k(-d, k)
+    return (ids + shard * n_local)[None], (-neg)[None]
+
+
+def _local_adc_serve(codes_l, vectors_l, luts, queries, *, mesh, axes,
+                     n_local: int, k: int, shortlist: int,
+                     n_valid: Optional[int]):
+    """Scatter half with DiskANN-style local refinement: ADC shortlist →
+    exact rerank against my vector rows → LOCAL top-k, global ids."""
+    d = kref.adc_scan_batch_ref(codes_l, luts)            # (Q, N_local)
+    shard = flat_shard_index(mesh, axes)
+    if n_valid is not None:
+        gid_row = shard * n_local + jnp.arange(n_local)
+        d = jnp.where(gid_row[None, :] < n_valid, d, jnp.inf)
+    _, cand = jax.lax.top_k(-d, shortlist)                # ADC shortlist
+    cv = vectors_l[cand]                                  # (Q, shortlist, D)
+    exact = jnp.sum((cv - queries[:, None, :]) ** 2, -1)
+    if n_valid is not None:
+        exact = jnp.where(cand + shard * n_local < n_valid, exact, jnp.inf)
+    neg, order = jax.lax.top_k(-exact, k)
+    gids = jnp.take_along_axis(cand, order, axis=1) + shard * n_local
+    return gids[None], (-neg)[None]
+
+
+def sharded_adc_scan(mesh, axes: tuple, codes, luts, *, k: int,
+                     n_valid: Optional[int] = None):
+    """Scatter: row-sharded (N, M) codes × replicated (Q, M, K) LUTs →
+    per-shard (n_shards, Q, k) global ids + ADC distances.
+
+    O(shards·k) gather traffic instead of the (Q, N) distance matrix
+    (GSPMD's sharded top_k gathered it: 8.2 GB/dev → MBs)."""
+    n_local = codes.shape[0] // shd.axis_size(mesh, axes)
+    body = partial(_local_adc_topk, mesh=mesh, axes=axes, n_local=n_local,
+                   k=k, n_valid=n_valid)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axes, None), P(None, None, None)),
+        out_specs=(P(axes, None, None), P(axes, None, None)))(codes, luts)
+
+
+def sharded_adc_serve(mesh, axes: tuple, codes, vectors, luts, queries, *,
+                      k: int, shortlist: int, n_valid: Optional[int] = None):
+    """Scatter with local exact rerank (serve_1m): row-sharded codes AND
+    vectors; each shard reranks its own ADC shortlist from its local vector
+    rows — the DiskANN shortlist pattern distributed faiss-style."""
+    n_local = codes.shape[0] // shd.axis_size(mesh, axes)
+    body = partial(_local_adc_serve, mesh=mesh, axes=axes, n_local=n_local,
+                   k=k, shortlist=min(shortlist, n_local), n_valid=n_valid)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axes, None), P(axes, None), P(None, None, None),
+                  P(None, None)),
+        out_specs=(P(axes, None, None), P(axes, None, None)))(
+            codes, vectors, luts, queries)
+
+
+def merge_shard_topk(gids, dists, k: int):
+    """Gather: (n_shards, Q, k_s) per-shard shortlists → global (Q, k)
+    top-k. The in-jit, all-shards-alive merge; ShardedEngine uses
+    dist.fault.partial_merge on the host instead to tolerate dead shards."""
+    q = gids.shape[1]
+    ds = dists.transpose(1, 0, 2).reshape(q, -1)
+    is_ = gids.transpose(1, 0, 2).reshape(q, -1)
+    neg, order = jax.lax.top_k(-ds, k)
+    return jnp.take_along_axis(is_, order, axis=1), -neg
+
+
+def _pad_rows(x: jax.Array, mult: int) -> jax.Array:
+    pad = (-x.shape[0]) % mult
+    if pad == 0:
+        return x
+    return jnp.concatenate(
+        [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+
+
+@dataclasses.dataclass
+class ShardedEngine:
+    """Scatter-gather serving over a device mesh (exhaustive ADC scan).
+
+    Codes (and, when ``vectors`` is given, full vectors for the hybrid
+    local-rerank scenario) are row-sharded across every mesh axis via
+    dist.sharding.rpq_rows_spec. A query broadcasts its LUTs, every shard
+    scans its rows and answers a local top-k, and the host merges the
+    shard shortlists with dist.fault.partial_merge — shards reported dead
+    via ``alive`` are simply dropped from the merge (graceful recall
+    degradation, never a failed query).
+    """
+    codes: jax.Array                  # (N, M) compact codes
+    lut_fn: Callable                  # (Q, D) queries -> (Q, M, K) LUTs
+    vectors: Optional[jax.Array] = None   # (N, D): enables local exact rerank
+    mesh: Optional[jax.sharding.Mesh] = None
+    shortlist_mult: int = 4           # rerank shortlist = mult × k
+
+    def __post_init__(self):
+        if self.mesh is None:
+            self.mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+        self._axes = shd.row_axes(self.mesh)
+        self.n_shards = shd.axis_size(self.mesh, self._axes)
+        self.n = int(self.codes.shape[0])
+        rows = shd.named(self.mesh, shd.rpq_rows_spec(self.mesh))
+        codes = jnp.asarray(self.codes)
+        self._codes_bytes = codes.size * codes.dtype.itemsize
+        self._codes_s = jax.device_put(_pad_rows(codes, self.n_shards), rows)
+        self.codes = self._codes_s   # drop the unsharded copy
+        self._vec_bytes = 0
+        if self.vectors is not None:
+            vec = jnp.asarray(self.vectors, jnp.float32)
+            self._vec_bytes = vec.size * 4
+            self._vec_s = jax.device_put(_pad_rows(vec, self.n_shards), rows)
+            self.vectors = self._vec_s
+
+    def _scatter(self, luts, queries, k: int):
+        if not hasattr(self, "_jit_cache"):
+            self._jit_cache = {}
+        fn = self._jit_cache.get(k)
+        if fn is None:
+            if self.vectors is None:
+                fn = jax.jit(lambda codes, luts: sharded_adc_scan(
+                    self.mesh, self._axes, codes, luts, k=k, n_valid=self.n))
+            else:
+                fn = jax.jit(lambda codes, vec, luts, q: sharded_adc_serve(
+                    self.mesh, self._axes, codes, vec, luts, q, k=k,
+                    shortlist=self.shortlist_mult * k, n_valid=self.n))
+            self._jit_cache[k] = fn
+        if self.vectors is None:
+            return fn(self._codes_s, luts)
+        return fn(self._codes_s, self._vec_s, luts, queries)
+
+    def search(self, queries: jax.Array, *, k: int = 10,
+               alive: Optional[Sequence[bool]] = None,
+               h: Optional[int] = None) -> SearchResult:
+        """Exhaustive sharded scan (``h`` accepted for engine-protocol
+        compatibility and ignored — there is no beam)."""
+        del h
+        queries = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
+        n_local = self._codes_s.shape[0] // self.n_shards
+        kk = min(k, n_local)
+        luts = jnp.asarray(self.lut_fn(queries))
+        gids, dists = self._scatter(luts, queries, kk)
+        gids, dists = np.asarray(gids), np.asarray(dists)
+        if alive is None:
+            alive = [True] * self.n_shards
+        ids, ds = partial_merge(list(gids), list(dists), alive, k)
+        q = queries.shape[0]
+        scanned = n_local * sum(bool(a) for a in alive)
+        return SearchResult(jnp.asarray(ids), jnp.asarray(ds),
+                            hops=jnp.zeros((q,), jnp.int32),
+                            n_dist=jnp.full((q,), scanned, jnp.int32))
+
+    def memory_bytes(self) -> int:
+        # UNPADDED sizes: what the index costs, not the divisibility slack
+        return self._codes_bytes + self._vec_bytes

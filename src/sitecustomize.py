@@ -1,0 +1,17 @@
+"""Auto-loaded (via PYTHONPATH=src) jax forward-compat shims.
+
+Python imports ``sitecustomize`` from sys.path at interpreter startup, so
+any process launched with ``PYTHONPATH=src`` — including the test-suite
+subprocesses that import ``jax.sharding`` before ``repro`` — gets the
+``repro._compat`` patches (jax.shard_map / AxisType / make_mesh axis_types)
+without needing to import the package first. Importing jax here does NOT
+initialize a backend, so ``XLA_FLAGS`` set later by driver modules (e.g.
+``--xla_force_host_platform_device_count``) still applies.
+"""
+
+try:
+    from repro import _compat
+except Exception:  # noqa: BLE001 - never break interpreter startup
+    pass
+else:
+    _compat.apply()

@@ -1,0 +1,182 @@
+"""Serving engines: InMemory / Hybrid recall + rerank clamping +
+memory accounting, and ShardedEngine scatter-gather equivalence (single
+device in-process; 4 forced host devices in a subprocess) including
+dead-shard degradation via dist.fault.partial_merge."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.graphs import build_vamana
+from repro.graphs.knn import knn_ids
+from repro.pq import base as pqbase
+from repro.pq.pq import train_pq
+from repro.search.engine import HybridEngine, InMemoryEngine, ShardedEngine
+
+N, D, Q, M, K = 240, 32, 8, 4, 16
+TOPK = 10
+
+
+@pytest.fixture(scope="module")
+def setup():
+    r = np.random.default_rng(7)
+    centers = r.normal(size=(8, D)) * 2.5
+    x = (centers[r.integers(0, 8, N)]
+         + r.normal(size=(N, D))).astype(np.float32)
+    q = (centers[r.integers(0, 8, Q)]
+         + r.normal(size=(Q, D))).astype(np.float32)
+    x, q = jnp.asarray(x), jnp.asarray(q)
+    model = train_pq(jax.random.PRNGKey(0), x, M, K, iters=8)
+    codes = pqbase.encode(model, x)
+    graph = build_vamana(jax.random.PRNGKey(1), x, r=24, l=48)
+    # the exact id-sequence equivalence tests need tie-free ADC distances,
+    # so they use UNIQUE random codes (real encodes of clustered data
+    # collide: identical codes ⇒ tied distances ⇒ order is undefined)
+    codes_uniq = r.integers(0, K, (N, M)).astype(np.uint8)
+    while np.unique(codes_uniq, axis=0).shape[0] != N:  # pragma: no cover
+        codes_uniq = r.integers(0, K, (N, M)).astype(np.uint8)
+    codes_uniq = jnp.asarray(codes_uniq)
+    adc = np.asarray(pqbase.adc(model, codes_uniq, q))
+    adc_top = np.argsort(adc, axis=1, kind="stable")[:, :TOPK]
+    gt, _ = knn_ids(x, q, TOPK)
+    return dict(x=x, q=q, model=model, codes=codes, codes_uniq=codes_uniq,
+                graph=graph, adc=adc, adc_top=adc_top, gt=np.asarray(gt))
+
+
+def _lut_fn(model):
+    return lambda qq: pqbase.build_lut(model, qq)
+
+
+def test_inmemory_exhaustive_beam_matches_adc_topk(setup):
+    """With h = N on a connected PG, the beam visits every vertex — the
+    result must be the exact ADC top-k (this is the single-device oracle
+    the sharded engine is later compared against)."""
+    eng = InMemoryEngine(setup["graph"], setup["codes_uniq"],
+                         _lut_fn(setup["model"]))
+    res = eng.search(setup["q"], k=TOPK, h=N, max_steps=2 * N)
+    np.testing.assert_array_equal(np.asarray(res.ids), setup["adc_top"])
+
+
+def test_inmemory_recall_and_memory(setup):
+    eng = InMemoryEngine(setup["graph"], setup["codes"],
+                         _lut_fn(setup["model"]))
+    res = eng.search(setup["q"], k=TOPK, h=48)
+    rec = np.mean([len(set(a) & set(b)) / TOPK
+                   for a, b in zip(np.asarray(res.ids), setup["gt"])])
+    assert rec > 0.5
+    assert eng.memory_bytes() == (setup["codes"].size
+                                  + setup["graph"].neighbors.size * 4)
+
+
+def test_hybrid_rerank_clamps_k_and_improves_recall(setup):
+    eng = HybridEngine(setup["graph"], setup["codes"],
+                       _lut_fn(setup["model"]), vectors=setup["x"])
+    # k is clamped to the rerank budget
+    res = eng.search(setup["q"], k=TOPK, h=48, rerank=4)
+    assert res.ids.shape == (Q, 4)
+    # exact rerank of the full beam: recall must beat/equal ADC-only
+    res_h = eng.search(setup["q"], k=TOPK, h=48)
+    mem = InMemoryEngine(setup["graph"], setup["codes"],
+                         _lut_fn(setup["model"]))
+    res_m = mem.search(setup["q"], k=TOPK, h=48)
+    rec = lambda ids: np.mean([len(set(a) & set(b)) / TOPK for a, b
+                               in zip(np.asarray(ids), setup["gt"])])
+    assert rec(res_h.ids) >= rec(res_m.ids)
+    # resident set = codes only (vectors + graph live "on SSD")
+    assert eng.memory_bytes() == setup["codes"].size
+
+
+def test_sharded_single_device_matches_inmemory(setup):
+    """All-shards-alive ShardedEngine ≡ exhaustive-beam InMemoryEngine."""
+    eng = ShardedEngine(setup["codes_uniq"], _lut_fn(setup["model"]))
+    res = eng.search(setup["q"], k=TOPK)
+    np.testing.assert_array_equal(np.asarray(res.ids), setup["adc_top"])
+    assert eng.memory_bytes() == setup["codes_uniq"].size
+    hyb = ShardedEngine(setup["codes"], _lut_fn(setup["model"]),
+                        vectors=setup["x"], shortlist_mult=N)
+    res = hyb.search(setup["q"], k=TOPK)
+    np.testing.assert_array_equal(np.asarray(res.ids), setup["gt"])
+    assert hyb.memory_bytes() == setup["codes"].size + setup["x"].size * 4
+
+
+_SUBPROC = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax, jax.numpy as jnp
+from repro.graphs.adjacency import Graph
+from repro.pq import base as pqbase
+from repro.search.engine import InMemoryEngine, ShardedEngine
+
+assert len(jax.devices()) == 4
+z = np.load({path!r})
+model = pqbase.QuantizerModel(r=jnp.asarray(z["r"]),
+                              codebooks=jnp.asarray(z["codebooks"]))
+codes = jnp.asarray(z["codes"])
+x, q = jnp.asarray(z["x"]), jnp.asarray(z["q"])
+graph = Graph(neighbors=jnp.asarray(z["neighbors"]),
+              medoid=jnp.asarray(z["medoid"]))
+lut_fn = lambda qq: pqbase.build_lut(model, qq)
+
+se = ShardedEngine(codes, lut_fn)
+assert se.n_shards == 4, se.n_shards
+res = se.search(q, k={topk})
+mem = InMemoryEngine(graph, codes, lut_fn)
+rm = mem.search(q, k={topk}, h={n}, max_steps={n2})
+np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(rm.ids))
+print("EQUIV_OK")
+
+# dead shard 1: its row range must vanish; survivors merge exactly
+n_local = {n} // 4
+alive = [True, False, True, True]
+rd = se.search(q, k={topk}, alive=alive)
+ids = np.asarray(rd.ids)
+assert not np.any((ids >= n_local) & (ids < 2 * n_local)), ids
+adc = np.array(pqbase.adc(model, codes, q))
+adc[:, n_local:2 * n_local] = np.inf
+expect = np.argsort(adc, axis=1, kind="stable")[:, :{topk}]
+np.testing.assert_array_equal(ids, expect)
+print("DEGRADE_OK")
+"""
+
+
+def test_sharded_4dev_equivalence_and_dead_shard(setup, tmp_path):
+    """ShardedEngine under 4 forced host devices: identical top-k ids to
+    InMemoryEngine (all alive), and exact survivors-only merge when a
+    shard dies (partial_merge path). Subprocess so this process keeps its
+    1-device view (conftest requirement)."""
+    path = str(tmp_path / "engine_case.npz")
+    np.savez(path, x=np.asarray(setup["x"]), q=np.asarray(setup["q"]),
+             codes=np.asarray(setup["codes_uniq"]),
+             r=np.asarray(setup["model"].r),
+             codebooks=np.asarray(setup["model"].codebooks),
+             neighbors=np.asarray(setup["graph"].neighbors),
+             medoid=np.asarray(setup["graph"].medoid))
+    code = _SUBPROC.format(path=path, topk=TOPK, n=N, n2=2 * N)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600,
+                       env={**os.environ, "PYTHONPATH": "src"},
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "EQUIV_OK" in r.stdout and "DEGRADE_OK" in r.stdout, \
+        (r.stdout[-1500:], r.stderr[-2000:])
+
+
+def test_data_parallel_fit_smoke(setup):
+    """TrainConfig.data_parallel wires fit() through dist.sharding (+ int8
+    error-feedback compression) — must run and produce finite losses on
+    however many devices exist (mesh = every local device)."""
+    from repro.core import RPQConfig
+    from repro.core import trainer as T
+
+    cfg = RPQConfig(dim=D, m=M, k=K)
+    tcfg = T.TrainConfig(steps=4, triplet_batch=32, routing_batch=32,
+                         routing_pool_queries=8, refresh_every=2,
+                         log_every=1, data_parallel=True,
+                         compress_grads=True)
+    st = T.fit(jax.random.PRNGKey(3), cfg, tcfg, setup["x"], setup["graph"],
+               verbose=False)
+    assert st.history and all(np.isfinite(h["total"]) for h in st.history)

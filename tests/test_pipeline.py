@@ -1,7 +1,11 @@
 """Input pipeline: determinism, resumability, elastic sharding + hypothesis."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional test dep (pip install "
+                    "'.[test]'); property tests need it")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.data.pipeline import IndexStream
 from repro.data.tokens import lm_batch, zipf_tokens

@@ -4,7 +4,10 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="optional test dep (pip install "
+                    "'.[test]'); property tests need it")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import quantizer as Q
 from repro.core import rotation as rot
