@@ -1,4 +1,4 @@
-"""One benchmark per paper table/figure (DESIGN.md §6 index).
+"""One benchmark per paper table/figure (driven by benchmarks/run.py).
 
 Every function returns a list of CSV rows and prints them; run.py drives.
 Scales are sandbox-sized (REPRO_BENCH_SCALE=full for paper-relative sizes);

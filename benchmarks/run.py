@@ -18,6 +18,7 @@ import traceback
 
 def sections():
     from benchmarks import kernel_adc, paper_tables as pt
+    from benchmarks import sharded_serving
 
     return {
         "kernels": kernel_adc.run,
@@ -29,6 +30,10 @@ def sections():
         "fig8": pt.fig8_kposneg,
         "fig9": pt.fig9_km,
         "fig11": pt.fig11_scale,
+        # beyond the paper: multi-device serving scenarios (DESIGN.md §6);
+        # run `python -m benchmarks.sharded_serving` standalone for a
+        # forced 4-shard host split
+        "sharded": sharded_serving.run,
     }
 
 

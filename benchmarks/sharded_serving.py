@@ -1,0 +1,108 @@
+"""Sharded serving: graph-routed vs. exhaustive-scan vs. single-device.
+
+The numbers behind DESIGN.md §6's engine choice: at matched recall targets,
+how do the three multi-device-capable scenarios trade QPS, recall@10 and
+per-query distance work?
+
+* ``memory``        — single-device InMemoryEngine beam (the baseline the
+                      acceptance bar is measured against),
+* ``sharded-scan``  — ShardedEngine: every shard exhaustively ADC-scans its
+                      rows (O(N/S) distances per query per shard),
+* ``sharded-graph`` — ShardedGraphEngine: every shard beam-searches its own
+                      Vamana subgraph (O(hops·R) distances), with and
+                      without DiskANN-style local exact rerank,
+
+plus a dead-shard row showing graceful recall degradation (never an error).
+
+Run as a section of the driver (uses however many devices exist — 1 in the
+default CPU sandbox):
+
+    PYTHONPATH=src python -m benchmarks.run --only sharded
+
+or standalone with a forced 4-way host-device split, the honest multi-shard
+configuration:
+
+    PYTHONPATH=src python -m benchmarks.sharded_serving
+"""
+
+from __future__ import annotations
+
+import os
+
+
+def run():
+    import numpy as np
+    import jax
+
+    from benchmarks import common as C
+    from repro.graphs.partition import build_partitioned_vamana
+    from repro.search.engine import (InMemoryEngine, ShardedEngine,
+                                     ShardedGraphEngine)
+    from repro.search.metrics import measure_qps, recall_at_k
+
+    ds, gt, g = C.dataset(), C.ground_truth(), C.vamana_graph()
+    codes, lut_fn, _ = C.quantizer("pq")
+    n_shards = len(jax.devices())
+    pg = build_partitioned_vamana(jax.random.PRNGKey(11), ds.base, n_shards,
+                                  r=24, l=48, batch=2048)
+    k, h = 10, 32
+    rows = []
+
+    def emit(row):
+        rows.append(row)
+
+    def bench(tag, engine, **kw):
+        qps, res = measure_qps(
+            lambda q: engine.search(q, k=k, **kw), ds.queries, repeats=2)
+        rec = recall_at_k(res.ids, gt, k)
+        hops = float(np.mean(np.asarray(res.hops)))
+        ndist = float(np.mean(np.asarray(res.n_dist)))
+        emit((f"sharded/{tag}", 1e6 / max(qps, 1e-9),
+              f"recall={rec:.3f};qps={qps:.1f};hops={hops:.1f};"
+              f"ndist={ndist:.0f};shards={n_shards}"))
+        return res
+
+    mem = InMemoryEngine(g, codes, lut_fn)
+    bench("memory/h%d" % h, mem, h=h)
+
+    scan = ShardedEngine(codes, lut_fn)
+    bench("scan", scan)
+
+    graph_eng = ShardedGraphEngine(pg, codes, lut_fn)
+    bench("graph/h%d" % h, graph_eng, h=h)
+
+    graph_rr = ShardedGraphEngine(pg, codes, lut_fn, vectors=ds.base)
+    bench("graph_rerank/h%d" % h, graph_rr, h=h)
+
+    # fault drill: kill shard 0, recall degrades, the query still answers.
+    # Needs survivors — on a 1-device host (benchmarks/run.py default)
+    # every shard would be dead and partial_merge rightly raises.
+    if n_shards >= 2:
+        alive = [s != 0 for s in range(n_shards)]
+        res = graph_eng.search(ds.queries, k=k, h=h, alive=alive)
+        emit(("sharded/graph/dead_shard0", 0.0,
+              f"recall={recall_at_k(res.ids, gt, k):.3f};"
+              f"alive={sum(alive)}/{n_shards}"))
+    else:
+        emit(("sharded/graph/dead_shard0", 0.0,
+              "skipped=single_shard_host"))
+    return rows
+
+
+def main():
+    rows = run()
+    for r in rows:
+        print(f"{r[0]},{r[1]:.2f},{r[2]}", flush=True)
+    bad = [r for r in rows if "recall=" in r[2]
+           and float(r[2].split("recall=")[1].split(";")[0]) <= 0]
+    if bad:
+        raise SystemExit(f"degenerate benchmark rows: {bad}")
+
+
+if __name__ == "__main__":
+    # the honest multi-shard configuration on a CPU host: 4 forced devices
+    # (must be set before jax initializes its backend)
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=4")
+    print("name,us_per_call,derived")
+    main()

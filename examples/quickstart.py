@@ -1,14 +1,20 @@
 """Quickstart: the whole RPQ pipeline in ~1 minute on CPU.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--dry-run]
 
 1. synthesize a small clustered dataset,
 2. build a Vamana proximity graph,
 3. train the paper's routing-guided quantizer (RPQ) end to end,
 4. serve queries through the DiskANN-style hybrid engine,
 5. compare against classic PQ at the same bit budget.
+
+``--dry-run`` shrinks every knob (a few hundred vectors, a handful of
+training steps) so CI can prove the example still runs in seconds; the
+pipeline and printed format are identical.
 """
 
+import argparse
+import dataclasses
 import sys
 sys.path.insert(0, "src")
 
@@ -24,7 +30,17 @@ from repro.search.metrics import recall_at_k
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="minutes → seconds: tiny data + few train steps")
+    args = ap.parse_args()
+
     ds = load_dataset("unit-test")          # 2k × 32, clustered anisotropic
+    if args.dry_run:
+        ds = dataclasses.replace(ds, base=ds.base[:400],
+                                 queries=ds.queries[:20],
+                                 train=ds.train[:200])
+    steps = 10 if args.dry_run else 150
     print(f"dataset: {ds.base.shape[0]} base vectors, dim {ds.dim}")
 
     graph = build_vamana(jax.random.PRNGKey(0), ds.base, r=16, l=32)
@@ -33,9 +49,10 @@ def main():
     m, k = 4, 32                            # 4 sub-bytes per vector
     pq_model = train_pq(jax.random.PRNGKey(1), ds.train, m, k)
     cfg = RPQConfig(dim=ds.dim, m=m, k=k)
-    tcfg = TrainConfig(steps=150, refresh_every=50, triplet_batch=256,
-                       routing_batch=256, routing_pool_queries=48,
-                       log_every=50)
+    tcfg = TrainConfig(steps=steps, refresh_every=max(steps // 3, 1),
+                       triplet_batch=256, routing_batch=256,
+                       routing_pool_queries=48,
+                       log_every=max(steps // 3, 1))
     rpq = train_rpq(jax.random.PRNGKey(2), ds.train, graph, cfg=cfg,
                     tcfg=tcfg)
 

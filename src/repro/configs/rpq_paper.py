@@ -40,6 +40,11 @@ RPQ_SHAPES = (
     base.ShapeSpec("encode_bulk", "serve", dict(batch=1_000_000)),
     base.ShapeSpec("adc_bulk", "retrieval",
                    dict(n_codes=1_000_000, query_batch=1024)),
+    # graph-ROUTED sharded serving: per-shard Vamana beam search inside
+    # shard_map (search/engine.sharded_graph_topk), R=32 adjacency
+    base.ShapeSpec("sharded_graph", "serve",
+                   dict(n_base=1_000_000, query_batch=256, k=10, h=32,
+                        r=32)),
 )
 
 base.register(base.ArchSpec(

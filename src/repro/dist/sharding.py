@@ -225,6 +225,15 @@ def rpq_rows_spec(mesh) -> P:
     return P(row_axes(mesh))
 
 
+def rpq_shard_stack_spec(mesh, ndim: int = 3) -> P:
+    """(S, n_local, ...) shard-STACKED arrays (graph-routed serving): the
+    leading axis is the shard axis, sharded over every mesh axis; inner
+    axes (a shard's local rows/columns) are never split. This is the layout
+    of graphs.partition.PartitionedGraph stacks and the per-shard code /
+    vector blocks of search.engine.ShardedGraphEngine."""
+    return P(row_axes(mesh), *([None] * (ndim - 1)))
+
+
 def rpq_param_spec(mesh, params_shape):
     """RPQ quantizer params are ≤ a few MB — fully replicated, exactly like
     the serving layout (every shard builds LUTs locally)."""

@@ -1,7 +1,11 @@
-"""Proximity-graph construction: kNN substrate, Vamana, HNSW, NSG."""
+"""Proximity-graph construction: kNN substrate, Vamana, HNSW, NSG, and the
+per-shard partitioned build for multi-device graph routing."""
 from repro.graphs.adjacency import Graph, from_lists, find_medoid, degree_stats  # noqa: F401
 from repro.graphs.knn import knn_ids, knn_graph  # noqa: F401
 from repro.graphs.prune import robust_prune, prune_from_vectors  # noqa: F401
 from repro.graphs.vamana import build_vamana  # noqa: F401
 from repro.graphs.hnsw import build_hnsw, HNSW, descend  # noqa: F401
 from repro.graphs.nsg import build_nsg  # noqa: F401
+from repro.graphs.partition import (  # noqa: F401
+    PartitionedGraph, build_partitioned_vamana, shard_bounds, shard_subgraph,
+)

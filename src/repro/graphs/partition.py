@@ -1,0 +1,129 @@
+"""Graph partitioning for multi-device serving (DESIGN.md §6).
+
+The distributed-DiskANN layout: the dataset is split into contiguous
+per-shard row ranges and an INDEPENDENT Vamana subgraph is built over each
+shard's rows. Shard s owns global rows ``[s·n_local, min((s+1)·n_local, n))``
+and its adjacency uses LOCAL ids in ``[0, n_local)`` with sentinel
+``n_local``, so the whole partition stacks into one fixed-shape
+``(n_shards, n_local, R)`` array that row-shards cleanly over a device mesh
+(leading axis = shard axis, ``dist.sharding.rpq_rows_spec``-style).
+
+Independent subgraphs (vs. a single edge-cut graph) mean a beam search never
+crosses a shard boundary: each device routes purely locally and only the
+per-shard top-k crosses the interconnect (O(shards·k) per query). The cost
+is that every shard must be searched — recall comes from merging all local
+answers, and a dead shard removes exactly its row range from the merged
+result (graceful degradation via ``dist.fault.partial_merge``). This is the
+partitioned PQ+PG layout of AiSAQ-style systems (see PAPERS.md).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.adjacency import Graph
+
+# NOTE: repro.graphs.vamana is imported lazily inside
+# build_partitioned_vamana — search.engine imports this module for the
+# PartitionedGraph type, and vamana itself imports search.beam, so a
+# module-level import here would close an import cycle.
+
+
+class PartitionedGraph(NamedTuple):
+    """A stack of independent per-shard proximity graphs.
+
+    Attributes:
+      neighbors: (S, n_local, R) int32 adjacency per shard, LOCAL ids with
+        sentinel ``n_local`` (pad rows — beyond a shard's real row count —
+        are all-sentinel and unreachable).
+      medoids:   (S,) int32 per-shard entry vertex, LOCAL id.
+      n:         total number of REAL rows across all shards (the global
+        dataset size before divisibility padding).
+    """
+
+    neighbors: jax.Array
+    medoids: jax.Array
+    n: int
+
+    @property
+    def n_shards(self) -> int:
+        return self.neighbors.shape[0]
+
+    @property
+    def n_local(self) -> int:
+        """Rows per shard including divisibility padding."""
+        return self.neighbors.shape[1]
+
+    @property
+    def degree(self) -> int:
+        return self.neighbors.shape[2]
+
+    def shard_rows(self, s: int) -> tuple[int, int]:
+        """Global [lo, hi) row range owned by shard ``s``."""
+        lo = s * self.n_local
+        return lo, min(lo + self.n_local, self.n)
+
+
+def shard_bounds(n: int, n_shards: int) -> list[tuple[int, int]]:
+    """Contiguous per-shard global row ranges [lo, hi).
+
+    Every shard gets ``ceil(n / n_shards)`` row slots; the last shard(s) may
+    own fewer real rows (the remainder is sentinel-padded, never fabricated).
+    """
+    n_local = -(-n // n_shards)
+    return [(s * n_local, min((s + 1) * n_local, n)) for s in range(n_shards)]
+
+
+def build_partitioned_vamana(key: jax.Array, x: jax.Array, n_shards: int, *,
+                             r: int = 32, l: int = 64, alpha: float = 1.2,
+                             passes: int = 2, batch: int = 1024,
+                             verbose: bool = False) -> PartitionedGraph:
+    """Partition ``x`` (N, D) into ``n_shards`` row ranges and build one
+    independent Vamana graph per range.
+
+    Returns a :class:`PartitionedGraph` whose stacked adjacency is ready to
+    be device_put with a ``P(axes, None, None)`` sharding (leading axis =
+    shard). Local ids map to global ids as ``gid = s * n_local + local``.
+    """
+    from repro.graphs.vamana import build_vamana
+
+    n = int(x.shape[0])
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if n < n_shards:
+        raise ValueError(f"cannot split {n} rows into {n_shards} shards")
+    bounds = shard_bounds(n, n_shards)
+    n_local = bounds[0][1] - bounds[0][0]
+
+    nbrs = np.full((n_shards, n_local, r), n_local, np.int32)
+    medoids = np.zeros((n_shards,), np.int32)
+    for s, (lo, hi) in enumerate(bounds):
+        ns = hi - lo
+        if ns <= 1:
+            # degenerate shard (n barely > (S-1)·n_local): nothing to route
+            # over — all-sentinel adjacency, entry 0; the engine's validity
+            # mask handles the rest (a 0-row shard contributes nothing)
+            continue
+        key, ks = jax.random.split(key)
+        g = build_vamana(ks, x[lo:hi], r=r, l=l, alpha=alpha, passes=passes,
+                         batch=batch, verbose=verbose)
+        local = np.asarray(g.neighbors)
+        # remap the subgraph's sentinel (ns) to the stacked sentinel (n_local)
+        nbrs[s, :ns] = np.where(local >= ns, n_local, local)
+        medoids[s] = int(g.medoid)
+        if verbose:
+            print(f"[partition] shard {s}: rows [{lo}, {hi}) "
+                  f"medoid(local)={medoids[s]}")
+
+    return PartitionedGraph(neighbors=jnp.asarray(nbrs),
+                            medoids=jnp.asarray(medoids), n=n)
+
+
+def shard_subgraph(pg: PartitionedGraph, s: int) -> Graph:
+    """Extract shard ``s`` as a standalone single-device :class:`Graph`
+    (debugging / per-shard inspection; sentinel stays ``n_local``)."""
+    return Graph(neighbors=pg.neighbors[s], medoid=pg.medoids[s])

@@ -1,0 +1,110 @@
+"""Fused Pallas TPU kernel: gather + ADC reduce for one beam-search hop.
+
+The per-hop hot loop of graph-routed serving does two things per query:
+gather the compact code rows of its R candidate neighbors, then reduce each
+row against the query's LUT. As two XLA ops that round-trips a (Q, R, M)
+gathered-codes array through HBM between the gather and the reduce
+(`hop_gather.py` only covers the reduce half). This kernel fuses both: the
+ids never leave SMEM, the gathered rows never leave VMEM.
+
+Layout (DESIGN.md §6):
+
+* ``ids`` (Q, R) int32 ride in as a scalar-prefetch argument — they live in
+  SMEM, where scalars are readable before/without a VMEM DMA, and drive the
+  row gather directly (the embedding-lookup idiom of
+  ``PrefetchScalarGridSpec``).
+* ``codes`` (N, M) int32 are block-resident in VMEM across all grid steps
+  (index_map pins block (0, 0)). N here is a SHARD's rows, not the corpus:
+  at 1M rows / 512 devices ≈ 2k rows × M=16 × 4 B ≈ 128 KiB — small next
+  to the LUT tile.
+* ``luts`` (bq, M, K) f32 tile per grid step; per query the reduce is the
+  same K-lane iota-compare as adc_scan's VPU formulation (M static unroll).
+* grid = (Q / bq,); per-(query, neighbor) row gathers are dynamic slices
+  into the resident codes block, staged through an (R, M) VMEM scratch.
+
+VMEM @ bq=8, R=64, M=16, K=256: LUT tile 8·16·256·4 = 512 KiB + codes +
+scratch ≪ 16 MB. Validated against ``ref.hop_adc_ref`` in interpret mode by
+tests/test_kernels.py; ``ops.hop_adc`` dispatches Pallas-on-TPU / jnp-ref
+elsewhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _hop_adc_kernel(ids_ref, codes_ref, luts_ref, out_ref, gathered,
+                    *, m: int, k: int, r: int, block_q: int):
+    """One grid step: block_q queries × R fused gather-reduce."""
+    q0 = pl.program_id(0) * block_q
+
+    def q_body(qi, _):
+        # 1. gather this query's R neighbor code rows into VMEM scratch;
+        #    the row index comes straight from SMEM (no VMEM round-trip).
+        def g_body(ri, __):
+            row = ids_ref[q0 + qi, ri]
+            gathered[pl.ds(ri, 1), :] = codes_ref[pl.ds(row, 1), :]
+            return __
+
+        jax.lax.fori_loop(0, r, g_body, 0)
+        rows = gathered[...]                               # (R, M) int32
+        lut = luts_ref[pl.ds(qi, 1)][0]                    # (M, K) f32
+        # 2. LUT reduce: K-lane iota compare per subspace (VPU formulation)
+        iota = jax.lax.broadcasted_iota(jnp.int32, (r, k), 1)
+        acc = jnp.zeros((r,), jnp.float32)
+        for j in range(m):                                 # M static unroll
+            mask = rows[:, j:j + 1] == iota                # (R, K)
+            acc = acc + jnp.sum(
+                jnp.where(mask, lut[j, :][None, :], 0.0), axis=1)
+        out_ref[pl.ds(qi, 1), :] = acc[None]
+        return _
+
+    jax.lax.fori_loop(0, block_q, q_body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def hop_adc(codes: jax.Array, ids: jax.Array, luts: jax.Array, *,
+            block_q: int = 8, interpret: bool | None = None) -> jax.Array:
+    """Fused per-hop ADC: (N, M) codes, (Q, R) ids, (Q, M, K) LUTs → (Q, R).
+
+    ``out[q, i] = sum_j luts[q, j, codes[ids[q, i], j]]`` — the distance of
+    query q to its i-th candidate neighbor. All ids must be valid rows in
+    ``[0, N)`` (the beam passes masked-to-0 ids for dead lanes and infs the
+    distances afterwards). ``interpret=None`` autodetects: compiled Pallas
+    on TPU, interpreter elsewhere (kernels.ops.default_interpret).
+    """
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+        interpret = default_interpret()
+    q, r = ids.shape
+    n, m = codes.shape
+    _, _, k = luts.shape
+    q_pad = (-q) % block_q
+    ids_i = ids.astype(jnp.int32)
+    luts_f = luts.astype(jnp.float32)
+    if q_pad:  # padded queries gather row 0 — cheap, discarded below
+        ids_i = jnp.pad(ids_i, ((0, q_pad), (0, 0)))
+        luts_f = jnp.pad(luts_f, ((0, q_pad), (0, 0), (0, 0)))
+    qp = ids_i.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(qp // block_q,),
+        in_specs=[
+            pl.BlockSpec((n, m), lambda i, ids: (0, 0)),        # resident
+            pl.BlockSpec((block_q, m, k), lambda i, ids: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, r), lambda i, ids: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((r, m), jnp.int32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_hop_adc_kernel, m=m, k=k, r=r, block_q=block_q),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((qp, r), jnp.float32),
+        interpret=interpret,
+    )(ids_i, codes.astype(jnp.int32), luts_f)
+    return out[:q]

@@ -1,9 +1,18 @@
 """Public, jitted entry points for the PQ kernels with backend dispatch.
 
-Call these from library code. On TPU they run the Pallas kernels; on CPU
-(this container) they run the pure-jnp oracle, which XLA fuses well — the
-Pallas path is still exercised on CPU via interpret=True in the tests and
-can be forced with use_pallas="interpret".
+Call these from library code. On TPU they run the compiled Pallas kernels;
+on CPU (this container) they run the pure-jnp oracle, which XLA fuses well
+— the Pallas path is still exercised on CPU via interpret mode in the tests
+and can be forced with ``backend="interpret"``.
+
+Backends:
+
+* ``"auto"``      — Pallas compiled on TPU, jnp oracle elsewhere (default).
+* ``"pallas"``    — force the Pallas path; interpret mode is then decided
+                    by :func:`default_interpret` (compiled only on TPU), so
+                    forcing pallas on CPU runs the interpreter, not a crash.
+* ``"interpret"`` — force the Pallas path in interpreter mode (tests).
+* ``"ref"``       — force the pure-jnp oracle from :mod:`repro.kernels.ref`.
 """
 
 from __future__ import annotations
@@ -25,10 +34,27 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def default_interpret() -> bool:
+    """The ONE backend-autodetect switch for Pallas interpret mode.
+
+    Compiled Mosaic kernels exist only on TPU; everywhere else (CPU CI,
+    laptops) the Pallas interpreter is the correct default. Kernel modules
+    resolve ``interpret=None`` through this helper instead of hardcoding
+    ``interpret=True`` (which would silently interpret on real TPUs too —
+    the bug this replaces; see DESIGN.md §3).
+    """
+    return not _on_tpu()
+
+
 def _resolve(backend: Backend) -> str:
     if backend == "auto":
         return "pallas" if _on_tpu() else "ref"
     return backend
+
+
+def _interpret_flag(mode: str) -> bool:
+    """interpret= for a resolved pallas/interpret mode."""
+    return True if mode == "interpret" else default_interpret()
 
 
 def adc_scan(codes, lut, *, backend: Backend = "auto", block_n: int = 1024):
@@ -37,7 +63,7 @@ def adc_scan(codes, lut, *, backend: Backend = "auto", block_n: int = 1024):
     if mode == "ref":
         return _ref.adc_scan_ref(codes, lut)
     return _adc.adc_scan(codes, lut, block_n=block_n,
-                         interpret=(mode == "interpret"))
+                         interpret=_interpret_flag(mode))
 
 
 def adc_scan_batch(codes, luts, *, backend: Backend = "auto",
@@ -47,17 +73,33 @@ def adc_scan_batch(codes, luts, *, backend: Backend = "auto",
     if mode == "ref":
         return _ref.adc_scan_batch_ref(codes, luts)
     return _adc.adc_scan_batch(codes, luts, block_n=block_n, block_q=block_q,
-                               interpret=(mode == "interpret"))
+                               interpret=_interpret_flag(mode))
 
 
 def hop_gather(codes, luts, *, backend: Backend = "auto", block_q: int = 8):
-    """Per-hop beam ADC: (Q, R, M) codes × (Q, M, K) LUTs → (Q, R) f32."""
+    """Per-hop beam ADC on PRE-GATHERED codes: (Q, R, M) × (Q, M, K) →
+    (Q, R) f32. Prefer :func:`hop_adc` where the ids are still at hand —
+    it fuses the gather too."""
     mode = _resolve(backend)
     if mode == "ref":
         return _ref.hop_gather_ref(codes, luts)
     from repro.kernels import hop_gather as _hg
     return _hg.hop_gather(codes, luts, block_q=block_q,
-                          interpret=(mode == "interpret"))
+                          interpret=_interpret_flag(mode))
+
+
+def hop_adc(codes, ids, luts, *, backend: Backend = "auto",
+            block_q: int = 8):
+    """FUSED per-hop beam ADC: (N, M) codes, (Q, R) ids, (Q, M, K) LUTs →
+    (Q, R) f32 — gathers the R neighbor code rows AND reduces them against
+    each query's LUT in one kernel (no (Q, R, M) HBM round-trip). All ids
+    must be valid rows in [0, N)."""
+    mode = _resolve(backend)
+    if mode == "ref":
+        return _ref.hop_adc_ref(codes, ids, luts)
+    from repro.kernels import hop_adc as _ha
+    return _ha.hop_adc(codes, ids, luts, block_q=block_q,
+                       interpret=_interpret_flag(mode))
 
 
 def pq_pairwise(x, codebook, *, backend: Backend = "auto", block_n: int = 512):
@@ -66,7 +108,7 @@ def pq_pairwise(x, codebook, *, backend: Backend = "auto", block_n: int = 512):
     if mode == "ref":
         return _ref.pq_pairwise_ref(x, codebook)
     return _pqp.pq_pairwise(x, codebook, block_n=block_n,
-                            interpret=(mode == "interpret"))
+                            interpret=_interpret_flag(mode))
 
 
 def kmeans_assign(x, centroids, *, backend: Backend = "auto"):

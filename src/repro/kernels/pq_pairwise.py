@@ -32,8 +32,14 @@ def _pq_pairwise_kernel(x_ref, cb_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def pq_pairwise(x: jax.Array, codebook: jax.Array, *, block_n: int = 512,
-                interpret: bool = True) -> jax.Array:
-    """(N, M, dsub) × (M, K, dsub) → (N, M, K) f32 squared distances."""
+                interpret: bool | None = None) -> jax.Array:
+    """(N, M, dsub) × (M, K, dsub) → (N, M, K) f32 squared distances.
+
+    ``interpret=None`` autodetects via kernels.ops.default_interpret.
+    """
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+        interpret = default_interpret()
     n, m, dsub = x.shape
     _, k, _ = codebook.shape
     n_pad = (-n) % block_n

@@ -53,6 +53,21 @@ def hop_gather_ref(codes: jax.Array, luts: jax.Array) -> jax.Array:
     return jnp.sum(gathered.astype(jnp.float32), axis=-1)
 
 
+def hop_adc_ref(codes: jax.Array, ids: jax.Array, luts: jax.Array
+                ) -> jax.Array:
+    """Fused per-hop ADC (gather + LUT reduce) — oracle for hop_adc.py.
+
+    Args:
+      codes: (N, M) integer compact codes of the (local) corpus.
+      ids:   (Q, R) int32 candidate rows per query, all in [0, N).
+      luts:  (Q, M, K) float LUTs, one per query.
+
+    Returns:
+      (Q, R) float32: out[q, i] = sum_j luts[q, j, codes[ids[q, i], j]].
+    """
+    return hop_gather_ref(codes[ids.astype(jnp.int32)], luts)
+
+
 def pq_pairwise_ref(x: jax.Array, codebook: jax.Array) -> jax.Array:
     """Per-subspace squared distances between sub-vectors and codewords.
 

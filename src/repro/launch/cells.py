@@ -470,6 +470,35 @@ def _rpq_cell(arch_id: str, shape, mesh) -> Cell:
                     (rows, shd.named(mesh, P())), None,
                     meta={"mode": "retrieval", "n_codes": n, "queries": qb})
 
+    if shape.name == "sharded_graph":
+        # graph-ROUTED scatter-gather: every shard beam-searches its OWN
+        # Vamana subgraph inside shard_map (O(hops·R) distance work per
+        # query per shard instead of the adc_bulk scan's O(N/S)); the merge
+        # is the same O(shards·k) shortlist gather. Compiles the SAME
+        # sharded_graph_topk that ShardedGraphEngine serves with.
+        n = _pad_to(dims["n_base"], n_dev)
+        qb, kk, hh, rr = (dims["query_batch"], dims["k"], dims["h"],
+                          dims["r"])
+        n_local = n // n_dev
+
+        def fn(neighbors, medoids, codes, luts):
+            gids, dists, hops, ndist = se.sharded_graph_topk(
+                mesh, all_axes, neighbors, medoids, codes, luts, k=kk,
+                h=hh, max_steps=4 * hh)
+            ids, ds = se.merge_shard_topk(gids, dists, kk)
+            return ids, ds, hops, ndist
+
+        rows3 = shd.named(mesh, shd.rpq_shard_stack_spec(mesh))
+        shards1 = shd.named(mesh, shd.rpq_shard_stack_spec(mesh, 1))
+        return Cell(arch_id, shape.name, fn,
+                    (_sds((n_dev, n_local, rr), jnp.int32),
+                     _sds((n_dev,), jnp.int32),
+                     _sds((n_dev, n_local, qcfg.m), jnp.uint8),
+                     _sds((qb, qcfg.m, qcfg.k), jnp.float32)),
+                    (rows3, shards1, rows3, shd.named(mesh, P())), None,
+                    meta={"mode": "serve", "n_base": n, "queries": qb,
+                          "beam_h": hh, "graph_r": rr})
+
     # serve_1m: scatter-gather ADC + LOCAL exact rerank per shard, then a
     # global top-k merge (DiskANN-style shortlist, faiss-style distribution)
     n = _pad_to(dims["n_base"], n_dev)

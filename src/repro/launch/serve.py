@@ -1,22 +1,38 @@
 """ANN serving driver: load a trained RPQ checkpoint and serve queries.
 
     PYTHONPATH=src python -m repro.launch.serve --ckpt-dir runs/rpq \
-        --dataset sift-small [--scenario hybrid|memory] [--h 32] [--port-stdin]
+        --dataset sift-small \
+        [--scenario hybrid|memory|sharded|sharded-graph] \
+        [--h 32] [--port-stdin]
 
 Loads the latest checkpoint written by launch/train.py, rebuilds the
 serving engine (codes are re-encoded from the checkpointed quantizer —
 deterministic), and either runs a one-shot evaluation batch or reads
 newline-delimited query vectors from stdin (toy request loop; a real
-deployment fronts this with an RPC layer). ``--scenario sharded`` serves
-through search/engine.ShardedEngine: codes + vectors row-sharded over the
-local devices per dist/sharding.rpq_rows_spec, per-shard scan + local
-rerank, dist.fault.partial_merge gather — the serve_1m dry-run cell's
-scatter-gather pattern running for real.
+deployment fronts this with an RPC layer).
+
+Scenarios (search/engine.py, DESIGN.md §5–§6):
+
+* ``memory``        — codes + PG in RAM, single device, ADC-only routing.
+* ``hybrid``        — DiskANN-style: ADC routing + exact rerank from "SSD"
+                      vectors (default).
+* ``sharded``       — graph-free scatter-gather SCAN through ShardedEngine:
+                      codes + vectors row-sharded over the local devices per
+                      dist/sharding.rpq_rows_spec, per-shard exhaustive scan
+                      + local rerank, dist.fault.partial_merge gather — the
+                      serve_1m dry-run cell's pattern running for real.
+* ``sharded-graph`` — graph-ROUTED scatter-gather through
+                      ShardedGraphEngine: one independent Vamana subgraph
+                      per device shard (graphs/partition.py, cached next to
+                      the checkpoint), the beam search itself runs inside
+                      shard_map with local exact rerank — the sharded_graph
+                      dry-run cell's pattern running for real.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -30,17 +46,38 @@ from repro.core.trainer import to_model
 from repro.data import load_dataset
 from repro.dist import checkpoint as ckpt
 from repro.graphs.knn import knn_ids
+from repro.graphs.partition import PartitionedGraph, build_partitioned_vamana
 from repro.launch.train import build_or_load_graph
 from repro.pq import base as pqbase
-from repro.search.engine import HybridEngine, InMemoryEngine, ShardedEngine
+from repro.search.engine import (HybridEngine, InMemoryEngine, ShardedEngine,
+                                 ShardedGraphEngine)
 from repro.search.metrics import measure_qps, recall_at_k
+
+
+def build_or_load_partitioned_graph(key, x, cache_path: str, n_shards: int,
+                                    r: int, l: int) -> PartitionedGraph:
+    """Per-shard Vamana subgraphs, cached next to the checkpoint (the
+    partition depends on the shard count, so the cache is keyed by it)."""
+    if cache_path and os.path.exists(cache_path):
+        z = np.load(cache_path)
+        if int(z["n_shards"]) == n_shards:
+            return PartitionedGraph(neighbors=jnp.asarray(z["neighbors"]),
+                                    medoids=jnp.asarray(z["medoids"]),
+                                    n=int(z["n"]))
+    pg = build_partitioned_vamana(key, x, n_shards, r=r, l=l)
+    if cache_path:
+        os.makedirs(os.path.dirname(cache_path) or ".", exist_ok=True)
+        np.savez(cache_path, neighbors=np.asarray(pg.neighbors),
+                 medoids=np.asarray(pg.medoids), n=pg.n, n_shards=n_shards)
+    return pg
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--ckpt-dir", required=True)
     ap.add_argument("--dataset", default="sift-small")
-    ap.add_argument("--scenario", choices=("hybrid", "memory", "sharded"),
+    ap.add_argument("--scenario",
+                    choices=("hybrid", "memory", "sharded", "sharded-graph"),
                     default="hybrid")
     ap.add_argument("--h", type=int, default=32)
     ap.add_argument("--k", type=int, default=10)
@@ -68,6 +105,15 @@ def main():
     if args.scenario == "sharded":  # graph-free scatter-gather scan
         engine = ShardedEngine(codes, lut_fn, vectors=ds.base)
         print(f"[serve] sharded over {engine.n_shards} device shard(s)")
+    elif args.scenario == "sharded-graph":  # graph-routed scatter-gather
+        n_shards = len(jax.devices())
+        pg = build_or_load_partitioned_graph(
+            jax.random.PRNGKey(0), ds.base,
+            f"{args.ckpt_dir}/graph_part{n_shards}.npz", n_shards,
+            args.graph_r, args.graph_l)
+        engine = ShardedGraphEngine(pg, codes, lut_fn, vectors=ds.base)
+        print(f"[serve] graph-routed over {engine.n_shards} device "
+              f"shard(s), {pg.n_local} rows/shard, R={pg.degree}")
     else:
         graph = build_or_load_graph(jax.random.PRNGKey(0), ds.base,
                                     f"{args.ckpt_dir}/graph_base.npz",

@@ -1,5 +1,22 @@
-"""Routing + serving: batched beam search, ADC, engines, metrics."""
+"""Routing + serving: batched beam search, ADC distance functions, the four
+serving engines (in-memory / hybrid / sharded-scan / sharded-graph), and
+evaluation metrics.
+
+Public surface:
+
+* :mod:`repro.search.beam`    — jitted batched beam search (+ traced
+  variant for the paper's Def. 6 routing features) and pluggable distance
+  functions (exact, ADC; fused hop-ADC Pallas kernel on TPU).
+* :mod:`repro.search.engine`  — ``InMemoryEngine`` / ``HybridEngine`` /
+  ``ShardedEngine`` / ``ShardedGraphEngine`` plus the shard_map scatter
+  bodies they (and launch/cells.py) compile.
+* :mod:`repro.search.metrics` — recall@k and QPS measurement.
+"""
 from repro.search.beam import (  # noqa: F401
     beam_search, beam_search_trace, SearchResult, Trace,
     make_exact_dist_fn, make_adc_dist_fn,
 )
+from repro.search.engine import (  # noqa: F401
+    HybridEngine, InMemoryEngine, ShardedEngine, ShardedGraphEngine,
+)
+from repro.search.metrics import measure_qps, recall_at_k  # noqa: F401

@@ -171,13 +171,30 @@ def make_exact_dist_fn(vectors: jax.Array) -> Callable:
     return dist_fn
 
 
-def make_adc_dist_fn(codes: jax.Array) -> Callable:
+def make_adc_dist_fn(codes: jax.Array, *, backend: str = "auto") -> Callable:
     """qdata = LUT (M, K). codes must be (N+1, M) sentinel-padded.
 
-    The per-hop gather is tiny (R ≤ 64 rows), so this is a VPU LUT lookup —
-    the bulk ADC work in benchmarks uses the Pallas scan kernel instead.
+    Backend dispatch for the per-hop hot loop (kernels.ops semantics):
+
+    * CPU (``backend="auto"`` off-TPU, or ``"ref"``): a jnp gather — the
+      per-hop read is tiny (R ≤ 64 rows) and XLA fuses it.
+    * TPU (``"auto"`` on-TPU, or ``"pallas"``/``"interpret"``): the fused
+      hop-ADC Pallas kernel (kernels/hop_adc.py) — neighbor-row gather and
+      LUT reduce in ONE kernel, so the gathered codes never round-trip HBM.
+      The kernel is batched over queries; under beam_search's vmap the
+      per-query call batches into the kernel's query grid axis.
     """
     m = codes.shape[1]
+    use_fused = backend in ("pallas", "interpret") or (
+        backend == "auto" and jax.default_backend() == "tpu")
+    if use_fused:
+        from repro.kernels import ops
+
+        def dist_fn(lut, ids):
+            return ops.hop_adc(codes, ids[None], lut[None],
+                               backend=backend)[0]
+        return dist_fn
+
     def dist_fn(lut, ids):
         c = codes[ids].astype(jnp.int32)              # (B, M)
         vals = lut[jnp.arange(m)[None, :], c]         # (B, M)

@@ -1,5 +1,5 @@
-"""Serving engines (paper §7): in-memory, SSD-hybrid (DiskANN) and sharded
-scatter-gather scenarios.
+"""Serving engines (paper §7): in-memory, SSD-hybrid (DiskANN), and the two
+sharded scatter-gather scenarios (exhaustive scan and graph-routed).
 
 All engines route with PQ-ADC distances. They accept any quantizer exposing
 the (codes, lut_fn) protocol — classic PQ / OPQ (pq.base.QuantizerModel),
@@ -14,13 +14,22 @@ the learned RPQ (core.rpq), or Catalyst.
   disk layout); the final candidates are re-ranked with exact distances.
   IO time is modeled as reads × latency (default 100 µs, ~NVMe) — reported
   separately from compute time so real-hardware numbers can be projected.
-* :class:`ShardedEngine` — multi-device scatter-gather: codes (+ vectors)
-  row-sharded over the mesh via dist.sharding.rpq_rows_spec; each shard
-  scans its rows with the ADC kernel and returns a LOCAL top-k, merged with
-  dist.fault.partial_merge so a dead/straggler shard degrades recall
-  instead of failing the query. The per-shard bodies below are the ONE
-  implementation of the scatter-gather pattern — launch/cells.py's
-  adc_bulk/serve_1m dry-run cells compile these same functions.
+* :class:`ShardedEngine` — multi-device scatter-gather SCAN: codes
+  (+ vectors) row-sharded over the mesh via dist.sharding.rpq_rows_spec;
+  each shard exhaustively scans its rows with the ADC kernel and returns a
+  LOCAL top-k, merged with dist.fault.partial_merge so a dead/straggler
+  shard degrades recall instead of failing the query.
+* :class:`ShardedGraphEngine` — multi-device graph ROUTING (DESIGN.md §6):
+  each shard owns a contiguous row range AND an independent Vamana subgraph
+  over it (graphs/partition.py); the batched beam search runs inside
+  shard_map, per-hop distances come from the fused hop-ADC Pallas kernel on
+  TPU, optional DiskANN-style local exact rerank, same partial_merge
+  gather. O(hops·R) distance work per shard per query instead of O(N/S).
+
+The per-shard bodies below are the ONE implementation of each scatter-
+gather pattern — launch/cells.py's adc_bulk / serve_1m / sharded_graph
+dry-run cells compile these same functions, and launch/serve.py serves
+them for real.
 """
 
 from __future__ import annotations
@@ -38,6 +47,7 @@ from repro._compat import shard_map
 from repro.dist import sharding as shd
 from repro.dist.fault import partial_merge
 from repro.graphs.adjacency import Graph
+from repro.graphs.partition import PartitionedGraph
 from repro.kernels import ref as kref
 from repro.search import beam
 from repro.search.beam import SearchResult
@@ -294,3 +304,263 @@ class ShardedEngine:
     def memory_bytes(self) -> int:
         # UNPADDED sizes: what the index costs, not the divisibility slack
         return self._codes_bytes + self._vec_bytes
+
+
+# ==========================================================================
+# Graph-routed sharded serving (DESIGN.md §6): every shard runs the batched
+# beam search over its OWN Vamana subgraph inside shard_map. Shared by
+# ShardedGraphEngine, launch/serve.py --scenario sharded-graph, and the
+# sharded_graph dry-run cell in launch/cells.py.
+# ==========================================================================
+
+def _shard_codes_pad(codes_l: jax.Array) -> jax.Array:
+    """(1, n_local, M) shard block → (n_local + 1, M) sentinel-padded codes
+    for beam.make_adc_dist_fn (sentinel row never read: beam masks ids)."""
+    c = codes_l[0]
+    return jnp.concatenate([c, jnp.zeros((1, c.shape[1]), c.dtype)], axis=0)
+
+
+def _local_beam(neighbors_l, medoid_l, codes_l, luts, *, h: int,
+                max_steps: int, backend: str):
+    """Route over THIS shard's subgraph with ADC distances. Returns the raw
+    per-shard beam result (local ids)."""
+    dist_fn = beam.make_adc_dist_fn(_shard_codes_pad(codes_l),
+                                    backend=backend)
+    return beam.beam_search(neighbors_l[0], medoid_l[0], luts, dist_fn,
+                            h=h, max_steps=max_steps)
+
+
+def _mask_to_global(ids, dists, *, mesh, axes, n_local: int, n_valid: int):
+    """Local beam ids → global ids; sentinel slots and divisibility-padding
+    rows become (-1, +inf) so the host merge never sees them."""
+    shard = flat_shard_index(mesh, axes)
+    n_valid_local = jnp.clip(n_valid - shard * n_local, 0, n_local)
+    ok = (ids < n_valid_local) & jnp.isfinite(dists)
+    gids = jnp.where(ok, ids + shard * n_local, -1)
+    return gids, jnp.where(ok, dists, jnp.inf)
+
+
+def _local_graph_topk(neighbors_l, medoid_l, codes_l, luts, *, mesh, axes,
+                      n_local: int, k: int, h: int, max_steps: int,
+                      n_valid: int, backend: str):
+    """One shard's scatter half: beam-search my subgraph, return LOCAL
+    top-k with GLOBAL ids. (1, Q, k) leading shard axis for the gather."""
+    res = _local_beam(neighbors_l, medoid_l, codes_l, luts, h=h,
+                      max_steps=max_steps, backend=backend)
+    gids, d = _mask_to_global(res.ids[:, :k], res.dists[:, :k], mesh=mesh,
+                              axes=axes, n_local=n_local, n_valid=n_valid)
+    return gids[None], d[None], res.hops[None], res.n_dist[None]
+
+
+def _local_graph_serve(neighbors_l, medoid_l, codes_l, vectors_l, luts,
+                       queries, *, mesh, axes, n_local: int, k: int, h: int,
+                       shortlist: int, max_steps: int, n_valid: int,
+                       backend: str):
+    """Scatter half with DiskANN-style local refinement: beam shortlist →
+    exact rerank against my vector rows → LOCAL top-k, global ids."""
+    res = _local_beam(neighbors_l, medoid_l, codes_l, luts, h=h,
+                      max_steps=max_steps, backend=backend)
+    cand = jnp.minimum(res.ids[:, :shortlist], n_local)   # clamp sentinel
+    vec_p = jnp.concatenate(
+        [vectors_l[0], jnp.zeros((1, vectors_l.shape[2]),
+                                 vectors_l.dtype)], axis=0)
+    cv = vec_p[cand]                                      # (Q, shortlist, D)
+    exact = jnp.sum((cv - queries[:, None, :]) ** 2, -1)
+    exact = jnp.where(jnp.isfinite(res.dists[:, :shortlist]), exact, jnp.inf)
+    neg, order = jax.lax.top_k(-exact, k)
+    ids = jnp.take_along_axis(cand, order, axis=1)
+    gids, d = _mask_to_global(ids, -neg, mesh=mesh, axes=axes,
+                              n_local=n_local, n_valid=n_valid)
+    return gids[None], d[None], res.hops[None], res.n_dist[None]
+
+
+def sharded_graph_topk(mesh, axes: tuple, neighbors, medoids, codes, luts, *,
+                       k: int, h: int = 32, max_steps: int = 512,
+                       n_valid: Optional[int] = None, backend: str = "auto"):
+    """Scatter: shard-stacked independent subgraphs × replicated LUTs →
+    per-shard (S, Q, k) GLOBAL ids + ADC distances (+ (S, Q) hops/n_dist).
+
+    Args:
+      mesh/axes:  device mesh and the row-sharding axes (shd.row_axes).
+      neighbors:  (S, n_local, R) stacked local adjacency (graphs/partition).
+      medoids:    (S,) local entry vertices.
+      codes:      (S, n_local, M) shard-stacked compact codes.
+      luts:       (Q, M, K) query LUTs, replicated to every shard.
+      k:          per-shard shortlist size (the gather is O(S·k)/query).
+      h/max_steps: beam width and hop cap of each LOCAL beam search.
+      n_valid:    total REAL rows (masks the last shard's padding).
+      backend:    per-hop distance backend (beam.make_adc_dist_fn).
+
+    Each shard routes ONLY over its own subgraph — no inter-shard edges, no
+    mid-search collectives; the only cross-device traffic is the O(S·Q·k)
+    shortlist gather (vs. O(Q·N/S) for the scan engine's full distances).
+    """
+    s = shd.axis_size(mesh, axes)
+    n_local = neighbors.shape[1]
+    body = partial(_local_graph_topk, mesh=mesh, axes=axes, n_local=n_local,
+                   k=k, h=h, max_steps=max_steps,
+                   n_valid=s * n_local if n_valid is None else n_valid,
+                   backend=backend)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axes, None, None), P(axes), P(axes, None, None),
+                  P(None, None, None)),
+        out_specs=(P(axes, None, None), P(axes, None, None),
+                   P(axes, None), P(axes, None)))(
+            neighbors, medoids, codes, luts)
+
+
+def sharded_graph_serve(mesh, axes: tuple, neighbors, medoids, codes,
+                        vectors, luts, queries, *, k: int, h: int = 32,
+                        shortlist: int = 0, max_steps: int = 512,
+                        n_valid: Optional[int] = None,
+                        backend: str = "auto"):
+    """Scatter with local exact rerank: like :func:`sharded_graph_topk` but
+    every shard re-ranks its beam shortlist against its resident vector
+    rows (S, n_local, D) before answering — the DiskANN shortlist pattern
+    with the SSD replaced by the shard's own HBM."""
+    s = shd.axis_size(mesh, axes)
+    n_local = neighbors.shape[1]
+    body = partial(_local_graph_serve, mesh=mesh, axes=axes,
+                   n_local=n_local, k=k, h=h,
+                   shortlist=min(shortlist or h, h), max_steps=max_steps,
+                   n_valid=s * n_local if n_valid is None else n_valid,
+                   backend=backend)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axes, None, None), P(axes), P(axes, None, None),
+                  P(axes, None, None), P(None, None, None), P(None, None)),
+        out_specs=(P(axes, None, None), P(axes, None, None),
+                   P(axes, None), P(axes, None)))(
+            neighbors, medoids, codes, vectors, luts, queries)
+
+
+def _stack_rows(x: jax.Array, n_shards: int, n_local: int) -> jax.Array:
+    """(N, ...) global rows → (S, n_local, ...) shard-stacked, zero-padded."""
+    pad = n_shards * n_local - x.shape[0]
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+    return x.reshape((n_shards, n_local) + x.shape[1:])
+
+
+@dataclasses.dataclass
+class ShardedGraphEngine:
+    """Graph-ROUTED scatter-gather serving over a device mesh.
+
+    Where :class:`ShardedEngine` exhaustively scans every shard's rows, this
+    engine routes: the dataset is partitioned into contiguous per-shard row
+    ranges with an independent Vamana subgraph per shard
+    (graphs/partition.py), and every query's beam search runs *inside*
+    ``shard_map`` — each shard walks its own subgraph with ADC distances
+    (per-hop hot loop = the fused hop-ADC Pallas kernel on TPU), optionally
+    exact-reranks its beam against its resident vector rows (DiskANN-style),
+    and answers a LOCAL top-k with GLOBAL ids. The host merges shard
+    shortlists with ``dist.fault.partial_merge``: a dead shard's row range
+    drops out of the answer (graceful recall degradation), the query never
+    fails.
+
+    Per-query distance work is O(hops·R) per shard instead of O(N/S), so
+    this is the scenario that scales ROUTING — not just scanning — with the
+    mesh. Recall is within a few points of a single-device in-memory beam
+    at equal width, because every shard is searched and the merge keeps the
+    global best (the partition can only *split* a query's true neighborhood
+    across shards, each of which still finds its part).
+
+    Attributes:
+      graph:    PartitionedGraph over the same row order as ``codes``.
+      codes:    (N, M) compact codes (global row order).
+      lut_fn:   (Q, D) queries → (Q, M, K) LUTs.
+      vectors:  optional (N, D) full vectors; enables local exact rerank.
+      mesh:     device mesh (default: all local devices on one axis).
+      backend:  per-hop kernel dispatch, see beam.make_adc_dist_fn.
+    """
+    graph: PartitionedGraph
+    codes: jax.Array
+    lut_fn: Callable
+    vectors: Optional[jax.Array] = None
+    mesh: Optional[jax.sharding.Mesh] = None
+    backend: str = "auto"
+
+    def __post_init__(self):
+        if self.mesh is None:
+            self.mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+        self._axes = shd.row_axes(self.mesh)
+        self.n_shards = shd.axis_size(self.mesh, self._axes)
+        if self.n_shards != self.graph.n_shards:
+            raise ValueError(
+                f"graph has {self.graph.n_shards} shards but the mesh has "
+                f"{self.n_shards} — partition with n_shards="
+                f"{self.n_shards}")
+        self.n = int(self.graph.n)
+        if int(self.codes.shape[0]) != self.n:
+            raise ValueError(f"codes rows {self.codes.shape[0]} != "
+                             f"graph rows {self.n}")
+        n_local = self.graph.n_local
+        rows3 = shd.named(self.mesh, shd.rpq_shard_stack_spec(self.mesh))
+        rows1 = shd.named(self.mesh, shd.rpq_shard_stack_spec(self.mesh, 1))
+        codes = jnp.asarray(self.codes)
+        self._codes_bytes = codes.size * codes.dtype.itemsize
+        self._codes_s = jax.device_put(
+            _stack_rows(codes, self.n_shards, n_local), rows3)
+        self.codes = self._codes_s
+        self._nbrs_s = jax.device_put(self.graph.neighbors, rows3)
+        self._medoids_s = jax.device_put(self.graph.medoids, rows1)
+        self._vec_bytes = 0
+        if self.vectors is not None:
+            vec = jnp.asarray(self.vectors, jnp.float32)
+            self._vec_bytes = vec.size * 4
+            self._vec_s = jax.device_put(
+                _stack_rows(vec, self.n_shards, n_local), rows3)
+            self.vectors = self._vec_s
+        self._jit_cache = {}
+
+    def _scatter(self, luts, queries, k: int, h: int, max_steps: int):
+        fn = self._jit_cache.get((k, h, max_steps))
+        if fn is None:
+            if self.vectors is None:
+                fn = jax.jit(lambda nb, md, cd, lu: sharded_graph_topk(
+                    self.mesh, self._axes, nb, md, cd, lu, k=k, h=h,
+                    max_steps=max_steps, n_valid=self.n,
+                    backend=self.backend))
+            else:
+                fn = jax.jit(
+                    lambda nb, md, cd, vc, lu, q: sharded_graph_serve(
+                        self.mesh, self._axes, nb, md, cd, vc, lu, q, k=k,
+                        h=h, shortlist=h, max_steps=max_steps,
+                        n_valid=self.n, backend=self.backend))
+            self._jit_cache[(k, h, max_steps)] = fn
+        if self.vectors is None:
+            return fn(self._nbrs_s, self._medoids_s, self._codes_s, luts)
+        return fn(self._nbrs_s, self._medoids_s, self._codes_s, self._vec_s,
+                  luts, queries)
+
+    def search(self, queries: jax.Array, *, k: int = 10, h: int = 32,
+               max_steps: int = 512,
+               alive: Optional[Sequence[bool]] = None) -> SearchResult:
+        """Route every query on every (alive) shard, merge the shortlists.
+
+        ``hops``/``n_dist`` report the SUM over alive shards — the total
+        work the mesh did for the query, comparable to a single-device
+        beam's counters.
+        """
+        queries = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
+        kk = min(k, h, self.graph.n_local)
+        luts = jnp.asarray(self.lut_fn(queries))
+        gids, dists, hops, ndist = self._scatter(luts, queries, kk, h,
+                                                 max_steps)
+        gids, dists = np.asarray(gids), np.asarray(dists)
+        if alive is None:
+            alive = [True] * self.n_shards
+        ids, ds = partial_merge(list(gids), list(dists), alive, k)
+        mask = np.asarray(alive, bool)
+        hops = np.asarray(hops)[mask].sum(0)
+        ndist = np.asarray(ndist)[mask].sum(0)
+        return SearchResult(jnp.asarray(ids), jnp.asarray(ds),
+                            hops=jnp.asarray(hops, jnp.int32),
+                            n_dist=jnp.asarray(ndist, jnp.int32))
+
+    def memory_bytes(self) -> int:
+        # UNPADDED codes + per-shard adjacency (+ vectors when resident)
+        return (self._codes_bytes
+                + self.graph.neighbors.size * 4 + self._vec_bytes)

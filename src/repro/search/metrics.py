@@ -11,9 +11,18 @@ import numpy as np
 
 
 def recall_at_k(pred_ids, gt_ids, k: int) -> float:
-    """Eq. 1: |R ∩ R̃| / k, averaged over queries.
+    """Paper Eq. 1: |R ∩ R̃| / k, averaged over queries.
 
-    pred_ids (Q, ≥k), gt_ids (Q, k). Sentinel/padding ids never match gt.
+    Args:
+      pred_ids: (Q, ≥k) predicted ids; only the first k columns count and
+        order within them is irrelevant (set intersection). Sentinel /
+        padding ids (-1 from partial_merge, N from the beam) never match
+        real ground-truth ids, so padded rows simply score lower.
+      gt_ids:   (Q, k) exact nearest-neighbor ids (graphs.knn.knn_ids).
+      k:        cutoff; must be ≤ gt_ids.shape[1].
+
+    Returns:
+      Mean recall in [0, 1] as a python float.
     """
     pred = np.asarray(pred_ids)[:, :k]
     gt = np.asarray(gt_ids)[:, :k]
@@ -25,7 +34,17 @@ def recall_at_k(pred_ids, gt_ids, k: int) -> float:
 
 def measure_qps(search_fn: Callable, queries, *, repeats: int = 3,
                 warmup: int = 1) -> tuple[float, object]:
-    """QPS of a jitted batched search callable. Returns (qps, last_result)."""
+    """Throughput of a batched search callable, compile time excluded.
+
+    Runs ``search_fn(queries)`` ``warmup`` times untimed (jit compilation,
+    caches), then ``repeats`` timed runs with ``jax.block_until_ready`` so
+    async dispatch can't fake speed. QPS = n_queries / mean wall time of
+    one batch — batch throughput, not single-query latency.
+
+    Returns:
+      (qps, last_result) — the result is returned so callers can score
+      recall on exactly what was timed.
+    """
     nq = jax.tree.leaves(queries)[0].shape[0]
     out = None
     for _ in range(warmup):

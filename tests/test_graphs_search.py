@@ -91,6 +91,61 @@ def test_trace_records_hops(clustered_data, small_graph):
     assert (valid == np.minimum(hops, 16)).all()
 
 
+def test_trace_hop_valid_semantics(clustered_data, small_graph):
+    """hop_valid[q, t] is True IFF hop t actually happened: the flags are a
+    prefix (no holes), count exactly min(hops, trace_len), and slots past
+    the last valid hop still hold the sentinel-initialized beam."""
+    x, q, _ = clustered_data
+    tr = beam_search_trace(small_graph.neighbors, small_graph.medoid, q[:8],
+                           make_exact_dist_fn(_pad(x)), h=8, trace_len=512)
+    hv = np.asarray(tr.hop_valid)
+    hops = np.asarray(tr.result.hops)
+    n = x.shape[0]
+    for qi in range(hv.shape[0]):
+        nv = hv[qi].sum()
+        assert nv == min(hops[qi], hv.shape[1])
+        assert hv[qi, :nv].all() and not hv[qi, nv:].any()  # prefix, no holes
+        # never-written slots keep the sentinel beam, written ones are real
+        assert (np.asarray(tr.beam_ids)[qi, nv:] == n).all()
+        assert (np.asarray(tr.beam_ids)[qi, :nv] < n).any(axis=1).all()
+
+
+def test_trace_overflow_keeps_last_slot(clustered_data, small_graph):
+    """Steps beyond trace_len must NOT clobber slot trace_len-1: the short
+    trace's last slot equals the long trace's slot at the same hop index,
+    not the beam at the (later) final hop."""
+    x, q, _ = clustered_data
+    f = make_exact_dist_fn(_pad(x))
+    short_len = 4
+    args = (small_graph.neighbors, small_graph.medoid, q[:8], f)
+    t_short = beam_search_trace(*args, h=8, trace_len=short_len)
+    t_long = beam_search_trace(*args, h=8, trace_len=512)
+    hops = np.asarray(t_long.result.hops)
+    assert (hops > short_len).all(), "fixture too easy to exercise overflow"
+    np.testing.assert_array_equal(np.asarray(t_short.beam_ids)[:, -1],
+                                  np.asarray(t_long.beam_ids)[:, short_len - 1])
+    np.testing.assert_array_equal(np.asarray(t_short.beam_dists)[:, -1],
+                                  np.asarray(t_long.beam_dists)[:, short_len - 1])
+    assert np.asarray(t_short.hop_valid).all()  # every slot was reached
+    # the search result itself is unaffected by the trace buffer size
+    np.testing.assert_array_equal(np.asarray(t_short.result.ids),
+                                  np.asarray(t_long.result.ids))
+
+
+def test_trace_matches_untraced_result(clustered_data, small_graph):
+    """beam_search_trace's embedded result ≡ plain beam_search."""
+    x, q, _ = clustered_data
+    f = make_exact_dist_fn(_pad(x))
+    plain = beam_search(small_graph.neighbors, small_graph.medoid, q[:8], f,
+                        h=16)
+    traced = beam_search_trace(small_graph.neighbors, small_graph.medoid,
+                               q[:8], f, h=16, trace_len=8)
+    np.testing.assert_array_equal(np.asarray(plain.ids),
+                                  np.asarray(traced.result.ids))
+    np.testing.assert_array_equal(np.asarray(plain.hops),
+                                  np.asarray(traced.result.hops))
+
+
 @pytest.mark.parametrize("builder", ["vamana", "nsg"])
 def test_builders_reach_reasonable_recall(clustered_data, builder):
     x, q, gt = clustered_data

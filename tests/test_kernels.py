@@ -81,6 +81,52 @@ def test_hop_gather_matches_ref(q, r, m, k, rng):
                                rtol=1e-6, atol=1e-5)
 
 
+@pytest.mark.parametrize("n,q,r,m,k", [(100, 5, 8, 4, 16),
+                                       (257, 16, 32, 8, 256),
+                                       (64, 33, 24, 16, 64)])
+def test_hop_adc_matches_ref(n, q, r, m, k, rng):
+    """Fused gather+reduce kernel (interpret mode) vs the jnp oracle."""
+    codes = rng.integers(0, k, (n, m)).astype(np.uint8)
+    ids = rng.integers(0, n, (q, r)).astype(np.int32)
+    luts = rng.normal(size=(q, m, k)).astype(np.float32)
+    want = ref.hop_adc_ref(codes, ids, luts)
+    got = ops.hop_adc(codes, ids, luts, backend="interpret", block_q=4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-5)
+
+
+def test_hop_adc_consistent_with_hop_gather(rng):
+    """Fused kernel == pre-gather + hop_gather (the op it replaces)."""
+    n, q, r, m, k = 120, 7, 16, 8, 32
+    codes = rng.integers(0, k, (n, m)).astype(np.uint8)
+    ids = rng.integers(0, n, (q, r)).astype(np.int32)
+    luts = rng.normal(size=(q, m, k)).astype(np.float32)
+    fused = ops.hop_adc(codes, ids, luts, backend="interpret", block_q=2)
+    unfused = ops.hop_gather(codes[ids], luts, backend="ref")
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               rtol=1e-6, atol=1e-5)
+
+
+def test_hop_adc_duplicate_and_boundary_ids(rng):
+    """Duplicate ids in one hop and rows 0 / N-1 must all resolve."""
+    n, m, k = 50, 4, 16
+    codes = rng.integers(0, k, (n, m)).astype(np.uint8)
+    ids = np.array([[0, 0, n - 1, n - 1, 7, 7, 7, 0]], np.int32)
+    luts = rng.normal(size=(1, m, k)).astype(np.float32)
+    got = np.asarray(ops.hop_adc(codes, ids, luts, backend="interpret"))
+    want = np.asarray(ref.hop_adc_ref(codes, ids, luts))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-5)
+    assert got[0, 0] == got[0, 1] == got[0, 7]
+
+
+def test_default_interpret_off_tpu():
+    """The ONE autodetect switch: interpreter everywhere except real TPU
+    (this container is CPU, so it must say True)."""
+    import jax
+    assert ops.default_interpret() == (jax.default_backend() != "tpu")
+    assert ops.default_interpret() is True  # CPU container
+
+
 def test_hop_gather_consistent_with_adc_scan(rng):
     """hop_gather on one query's R codes == adc_scan of those codes."""
     r, m, k = 16, 8, 32

@@ -1,0 +1,61 @@
+"""search/metrics.py: recall@k semantics and the QPS measurement contract."""
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.search.metrics import measure_qps, recall_at_k
+
+
+def test_recall_perfect_and_disjoint():
+    gt = np.arange(20).reshape(2, 10)
+    assert recall_at_k(gt, gt, 10) == 1.0
+    assert recall_at_k(gt + 100, gt, 10) == 0.0
+
+
+def test_recall_is_set_intersection_over_k():
+    gt = np.array([[0, 1, 2, 3]])
+    pred = np.array([[3, 2, 90, 91]])          # 2 of 4, order-insensitive
+    assert recall_at_k(pred, gt, 4) == 0.5
+    # averaged over queries
+    pred2 = np.array([[0, 1, 2, 3], [10, 11, 12, 13]])
+    gt2 = np.array([[0, 1, 2, 3], [0, 1, 2, 3]])
+    assert recall_at_k(pred2, gt2, 4) == 0.5
+
+
+def test_recall_truncates_pred_to_k():
+    gt = np.array([[0, 1]])
+    pred = np.array([[5, 6, 0, 1]])            # hits only beyond the cutoff
+    assert recall_at_k(pred, gt, 2) == 0.0
+    assert recall_at_k(np.array([[0, 9, 1]]), gt, 2) == 0.5
+
+
+def test_recall_sentinel_ids_never_match():
+    gt = np.array([[0, 1, 2]])
+    pred = np.array([[-1, -1, 0]])             # partial_merge pads with -1
+    assert recall_at_k(pred, gt, 3) == 1 / 3
+    assert recall_at_k(jnp.asarray(pred), jnp.asarray(gt), 3) == 1 / 3
+
+
+def test_measure_qps_counts_warmup_and_repeats():
+    calls = []
+
+    def search_fn(q):
+        calls.append(1)
+        return jnp.asarray(np.zeros((q.shape[0], 10)))
+
+    queries = jnp.zeros((50, 8))
+    qps, out = measure_qps(search_fn, queries, repeats=3, warmup=2)
+    assert len(calls) == 5                     # warmup runs are not timed
+    assert qps > 0
+    assert out.shape == (50, 10)               # last result is returned
+
+
+def test_measure_qps_scales_with_latency():
+    def slow(q):
+        time.sleep(0.02)
+        return jnp.zeros((q.shape[0],))
+
+    qps, _ = measure_qps(slow, jnp.zeros((10, 4)), repeats=2, warmup=0)
+    assert qps < 10 / 0.02 * 1.5               # bounded by the sleep

@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""Check that intra-repo Markdown links resolve to real files.
+
+    python tools/check_docs.py [root]
+
+Scans every tracked ``*.md`` under the repo root (skipping .git / runs /
+reports build products) for inline links and reference-style definitions,
+ignores external schemes (http/https/mailto) and pure in-page anchors, and
+verifies that each remaining target exists relative to the file that links
+it (``#fragment`` suffixes are stripped; fragment validity is not checked).
+
+Exit code 1 lists every broken link — the CI docs job runs this so README
+and DESIGN can't silently rot as files move.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+REF_RE = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.M)
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "runs", "reports",
+             "node_modules", ".eggs"}
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def md_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for f in filenames:
+            if f.endswith(".md"):
+                yield os.path.join(dirpath, f)
+
+
+def check(root: str) -> list[str]:
+    errors = []
+    for path in sorted(md_files(root)):
+        text = open(path, encoding="utf-8").read()
+        targets = LINK_RE.findall(text) + REF_RE.findall(text)
+        for t in targets:
+            if t.startswith(EXTERNAL) or t.startswith("#"):
+                continue
+            t = t.split("#", 1)[0]
+            if not t:
+                continue
+            resolved = os.path.normpath(os.path.join(os.path.dirname(path), t))
+            if not os.path.exists(resolved):
+                rel = os.path.relpath(path, root)
+                errors.append(f"{rel}: broken link -> {t}")
+    return errors
+
+
+def main() -> int:
+    root = sys.argv[1] if len(sys.argv) > 1 else "."
+    errors = check(root)
+    for e in errors:
+        print(e, file=sys.stderr)
+    n = len(list(md_files(root)))
+    print(f"check_docs: scanned {n} markdown files, "
+          f"{len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
