@@ -1,6 +1,13 @@
 """Kernel microbenchmarks: ADC scan + pairwise table (CPU wall time of the
 jitted XLA paths; the Pallas kernels target TPU and are validated in
 interpret mode by the tests — their roofline lives in EXPERIMENTS §Roofline).
+
+Fast-scan rows (DESIGN.md §8) measure the fs4 layout against the classic
+one at the SAME (N, M): packed 4-bit codes + quantized uint8 LUTs vs
+1 byte/code + f32 LUTs, for both the bulk scan and the per-hop fused
+gather+reduce. ``speedup_vs_f32`` in the derived column is the acceptance
+metric (the scan loops are memory-bound, so halving code bytes and
+quartering LUT bytes shows up directly as wall time).
 """
 
 from __future__ import annotations
@@ -12,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.pq import pack
 
 
 def _time(fn, *args, repeats=5):
@@ -27,25 +35,70 @@ def _time(fn, *args, repeats=5):
 def run():
     rng = np.random.default_rng(0)
     rows = []
-    n, m, k, q = 200_000, 16, 256, 64
+    n, m, k, q, r = 200_000, 16, 256, 64, 64
     codes = jnp.asarray(rng.integers(0, k, (n, m)), jnp.uint8)
     lut = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
     luts = jnp.asarray(rng.normal(size=(q, m, k)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, n, (q, r)), jnp.int32)
 
+    # ---- classic layout: u8 codes, f32 LUTs -----------------------------
     f1 = jax.jit(lambda c, l: ops.adc_scan(c, l, backend="ref"))
-    t = _time(f1, codes, lut)
-    rows.append(("kernel/adc_scan_1q_200k", t * 1e6,
-                 f"gcodes_per_s={n / t / 1e9:.2f}"))
+    t_f32_1q = _time(f1, codes, lut)
+    rows.append(("kernel/adc_scan_1q_200k", t_f32_1q * 1e6,
+                 f"gcodes_per_s={n / t_f32_1q / 1e9:.2f}"))
 
     f2 = jax.jit(lambda c, l: ops.adc_scan_batch(c, l, backend="ref"))
-    t = _time(f2, codes, luts)
-    rows.append(("kernel/adc_scan_batch64_200k", t * 1e6,
-                 f"gscores_per_s={n * q / t / 1e9:.2f}"))
+    t_f32_b = _time(f2, codes, luts)
+    rows.append(("kernel/adc_scan_batch64_200k", t_f32_b * 1e6,
+                 f"gscores_per_s={n * q / t_f32_b / 1e9:.2f}"))
 
+    f3 = jax.jit(lambda c, i, l: ops.hop_adc(c, i, l, backend="ref"))
+    t_hop = _time(f3, codes, ids, luts)
+    rows.append(("kernel/hop_adc_q64_r64", t_hop * 1e6,
+                 f"gscores_per_s={q * r / t_hop / 1e9:.4f}"))
+
+    # ---- fast-scan layout: fs4 packed codes, quantized uint8 LUTs -------
+    # same (N, M); K drops to 16 (4-bit sub-codes), half code bytes,
+    # quarter LUT bytes, int32 accumulation
+    codes16 = rng.integers(0, 16, (n, m)).astype(np.uint8)
+    packed = pack.pack_codes(jnp.asarray(codes16))
+    luts16 = rng.normal(size=(q, m, 16)).astype(np.float32) ** 2
+    ql = jax.tree.map(jnp.asarray, pack.quantize_luts(jnp.asarray(luts16)))
+    ql1 = jax.tree.map(lambda a: a[:1], ql)
+
+    ffs1 = jax.jit(lambda p, l, s, b: ops.adc_scan_fs(p, l, s, b,
+                                                      backend="ref"))
+    t_fs_1q = _time(ffs1, packed, ql1.lut, ql1.scale, ql1.bias)
+    rows.append(("kernel/adc_scan_fs4_1q_200k", t_fs_1q * 1e6,
+                 f"gcodes_per_s={n / t_fs_1q / 1e9:.2f} "
+                 f"speedup_vs_f32={t_f32_1q / t_fs_1q:.2f}"))
+
+    t_fs_b = _time(ffs1, packed, ql.lut, ql.scale, ql.bias)
+    rows.append(("kernel/adc_scan_fs4_batch64_200k", t_fs_b * 1e6,
+                 f"gscores_per_s={n * q / t_fs_b / 1e9:.2f} "
+                 f"speedup_vs_f32={t_f32_b / t_fs_b:.2f}"))
+
+    # isolate the LUT-quantization + packing win from the K change: same
+    # 4-bit codes scanned UNPACKED against f32 K=16 LUTs
+    codes16_j = jnp.asarray(codes16)
+    luts16_j = jnp.asarray(luts16)
+    t_k16_f32 = _time(f2, codes16_j, luts16_j)
+    rows.append(("kernel/adc_scan_batch64_200k_k16_f32lut", t_k16_f32 * 1e6,
+                 f"gscores_per_s={n * q / t_k16_f32 / 1e9:.2f} "
+                 f"fs4_speedup_same_k={t_k16_f32 / t_fs_b:.2f}"))
+
+    ffsh = jax.jit(lambda p, i, l, s, b: ops.hop_adc_fs(p, i, l, s, b,
+                                                        backend="ref"))
+    t_hop_fs = _time(ffsh, packed, ids, ql.lut, ql.scale, ql.bias)
+    rows.append(("kernel/hop_adc_fs4_q64_r64", t_hop_fs * 1e6,
+                 f"gscores_per_s={q * r / t_hop_fs / 1e9:.4f} "
+                 f"speedup_vs_f32={t_hop / t_hop_fs:.2f}"))
+
+    # ---- training-side pairwise table ----------------------------------
     x = jnp.asarray(rng.normal(size=(8192, m, 8)).astype(np.float32))
     cb = jnp.asarray(rng.normal(size=(m, k, 8)).astype(np.float32))
-    f3 = jax.jit(lambda a, b: ops.pq_pairwise(a, b, backend="ref"))
-    t = _time(f3, x, cb)
+    f4 = jax.jit(lambda a, b: ops.pq_pairwise(a, b, backend="ref"))
+    t = _time(f4, x, cb)
     rows.append(("kernel/pq_pairwise_8k", t * 1e6,
                  f"gflops={2 * 8192 * m * k * 8 / t / 1e9:.2f}"))
     return rows

@@ -1,8 +1,13 @@
 """Benchmark driver — one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig5,table67] [--list]
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,table67] [--list] \
+        [--json-dir reports/bench]
 
-Prints ``name,us_per_call,derived`` CSV rows (brief's contract). Scale via
+Prints ``name,us_per_call,derived`` CSV rows (brief's contract) AND writes a
+machine-readable ``BENCH_<section>.json`` per section to ``--json-dir`` —
+{git_sha, scale, rows: [{name, us_per_call, derived{...}}], wall_s} — so
+perf PRs can diff against a committed/uploaded baseline (CI uploads the
+``kernels`` section's artifact on every run). Scale via
 REPRO_BENCH_SCALE=quick|full (default quick: single-core-CPU sized).
 Roofline terms come from the separate dry-run pipeline:
     python -m repro.launch.dryrun && python -m benchmarks.roofline
@@ -11,6 +16,9 @@ Roofline terms come from the separate dry-run pipeline:
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
 import sys
 import time
 import traceback
@@ -37,11 +45,57 @@ def sections():
     }
 
 
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__)))).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _parse_derived(derived: str) -> dict:
+    """'gcodes_per_s=0.98 speedup_vs_f32=2.1' → typed dict (floats where
+    they parse, strings otherwise — e.g. recall curves stay strings)."""
+    out = {}
+    for tok in derived.replace(",", " ").split():
+        if "=" not in tok:
+            continue
+        key, val = tok.split("=", 1)
+        try:
+            out[key] = float(val)
+        except ValueError:
+            out[key] = val
+    return out
+
+
+def _write_json(json_dir: str, section: str, rows, wall_s: float,
+                sha: str) -> str:
+    os.makedirs(json_dir, exist_ok=True)
+    path = os.path.join(json_dir, f"BENCH_{section}.json")
+    doc = {
+        "section": section,
+        "git_sha": sha,
+        "scale": os.environ.get("REPRO_BENCH_SCALE", "quick"),
+        "wall_s": round(wall_s, 3),
+        "rows": [{"name": r[0], "us_per_call": round(float(r[1]), 2),
+                  "derived": _parse_derived(r[2]), "derived_raw": r[2]}
+                 for r in rows],
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return path
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated section names")
     ap.add_argument("--list", action="store_true")
+    ap.add_argument("--json-dir", default="reports/bench",
+                    help="directory for BENCH_<section>.json artifacts "
+                    "(empty string disables)")
     args = ap.parse_args()
 
     secs = sections()
@@ -49,6 +103,7 @@ def main() -> None:
         print("\n".join(secs))
         return
     chosen = (args.only.split(",") if args.only else list(secs))
+    sha = _git_sha()
     print("name,us_per_call,derived")
     failures = 0
     for name in chosen:
@@ -57,8 +112,12 @@ def main() -> None:
             rows = secs[name]()
             for r in rows:
                 print(f"{r[0]},{r[1]:.2f},{r[2]}", flush=True)
-            print(f"_section/{name},{(time.time()-t0)*1e6:.0f},wall_s="
-                  f"{time.time()-t0:.1f}", flush=True)
+            wall = time.time() - t0
+            print(f"_section/{name},{wall*1e6:.0f},wall_s={wall:.1f}",
+                  flush=True)
+            if args.json_dir:
+                path = _write_json(args.json_dir, name, rows, wall, sha)
+                print(f"[bench] wrote {path}", file=sys.stderr, flush=True)
         except Exception:
             failures += 1
             print(f"_section/{name},0,FAILED", flush=True)

@@ -45,6 +45,11 @@ RPQ_SHAPES = (
     base.ShapeSpec("sharded_graph", "serve",
                    dict(n_base=1_000_000, query_batch=256, k=10, h=32,
                         r=32)),
+    # same routing scenario in the FAST-SCAN layout (DESIGN.md §8):
+    # 4-bit packed codes (M/2 bytes/row resident) + uint8 QuantizedLUTs
+    base.ShapeSpec("sharded_graph_fs4", "serve",
+                   dict(n_base=1_000_000, query_batch=256, k=10, h=32,
+                        r=32)),
 )
 
 base.register(base.ArchSpec(

@@ -4,4 +4,6 @@ Layout per kernel: <name>.py holds the pl.pallas_call + BlockSpec tiling,
 ops.py the jitted public wrapper with backend dispatch, ref.py the pure-jnp
 oracle used for validation and as the CPU fallback.
 """
-from repro.kernels.ops import adc_scan, adc_scan_batch, pq_pairwise, kmeans_assign  # noqa: F401
+from repro.kernels.ops import (adc_scan, adc_scan_batch, adc_scan_fs,  # noqa: F401
+                               hop_adc, hop_adc_fs, hop_gather,
+                               kmeans_assign, pq_pairwise)

@@ -26,6 +26,12 @@ VMEM @ bq=8, R=64, M=16, K=256: LUT tile 8·16·256·4 = 512 KiB + codes +
 scratch ≪ 16 MB. Validated against ``ref.hop_adc_ref`` in interpret mode by
 tests/test_kernels.py; ``ops.hop_adc`` dispatches Pallas-on-TPU / jnp-ref
 elsewhere.
+
+``hop_adc_fs`` below is the FAST-SCAN twin (DESIGN.md §8): the resident
+codes block holds 4-bit-packed bytes (half the bytes), the LUT tile is
+uint8 with a per-query affine (1/256th of the tile above — K drops to 16
+AND the entries to 1 byte), nibbles unpack in-register, and accumulation is
+exact int32; the dequant lives in ``ops.hop_adc_fs``.
 """
 
 from __future__ import annotations
@@ -75,8 +81,10 @@ def hop_adc(codes: jax.Array, ids: jax.Array, luts: jax.Array, *,
     ``out[q, i] = sum_j luts[q, j, codes[ids[q, i], j]]`` — the distance of
     query q to its i-th candidate neighbor. All ids must be valid rows in
     ``[0, N)`` (the beam passes masked-to-0 ids for dead lanes and infs the
-    distances afterwards). ``interpret=None`` autodetects: compiled Pallas
-    on TPU, interpreter elsewhere (kernels.ops.default_interpret).
+    distances afterwards). Codes/ids arrive int32, LUTs f32 — the ONE cast
+    from caller dtypes (uint8 codes etc.) lives in kernels.ops, the
+    dispatch boundary. ``interpret=None`` autodetects: compiled Pallas on
+    TPU, interpreter elsewhere (kernels.ops.default_interpret).
     """
     if interpret is None:
         from repro.kernels.ops import default_interpret
@@ -107,4 +115,83 @@ def hop_adc(codes: jax.Array, ids: jax.Array, luts: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((qp, r), jnp.float32),
         interpret=interpret,
     )(ids_i, codes.astype(jnp.int32), luts_f)
+    return out[:q]
+
+
+# --------------------------------------------------------------------------
+# Fast-scan variant: 4-bit packed codes + uint8 LUTs (DESIGN.md §8)
+# --------------------------------------------------------------------------
+
+def _hop_adc_fs_kernel(ids_ref, codes_ref, luts_ref, out_ref, gathered,
+                       *, m: int, mb: int, r: int, block_q: int):
+    """Packed twin of ``_hop_adc_kernel``: the resident codes block and the
+    gather scratch hold PACKED bytes (half the VMEM), the LUT tile is uint8
+    (a quarter), nibbles unpack in-register, and the reduce accumulates
+    int32 — dequantization happens once in the wrapper."""
+    q0 = pl.program_id(0) * block_q
+
+    def q_body(qi, _):
+        def g_body(ri, __):
+            row = ids_ref[q0 + qi, ri]
+            gathered[pl.ds(ri, 1), :] = codes_ref[pl.ds(row, 1), :]
+            return __
+
+        jax.lax.fori_loop(0, r, g_body, 0)
+        p = gathered[...].astype(jnp.int32)                # (R, Mb) packed
+        nib = jnp.stack([p & 0xF, (p >> 4) & 0xF], axis=-1)
+        rows = nib.reshape(r, 2 * mb)[:, :m]               # (R, M)
+        lut = luts_ref[pl.ds(qi, 1)][0].astype(jnp.int32)  # (M, 16)
+        iota = jax.lax.broadcasted_iota(jnp.int32, (r, 16), 1)
+        acc = jnp.zeros((r,), jnp.int32)
+        for j in range(m):                                 # M static unroll
+            mask = rows[:, j:j + 1] == iota                # (R, 16)
+            acc = acc + jnp.sum(jnp.where(mask, lut[j, :][None, :], 0),
+                                axis=1)
+        out_ref[pl.ds(qi, 1), :] = acc[None]
+        return _
+
+    jax.lax.fori_loop(0, block_q, q_body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "block_q", "interpret"))
+def hop_adc_fs(packed: jax.Array, ids: jax.Array, luts_u8: jax.Array, *,
+               m: int, block_q: int = 8,
+               interpret: bool | None = None) -> jax.Array:
+    """Fused per-hop fast-scan ADC: (N, ceil(M/2)) packed codes, (Q, R)
+    ids, (Q, M, 16) u8 LUTs → (Q, R) int32 exact accumulators.
+
+    Pure-integer on purpose — the per-query dequant affine is applied by
+    ``ops.hop_adc_fs`` so the float op sequence matches the oracle
+    ``ref.hop_adc_fs_ref`` exactly on every backend. Canonical dtypes
+    (uint8 packed, int32 ids) are enforced by kernels.ops.
+    """
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+        interpret = default_interpret()
+    q, r = ids.shape
+    n, mb = packed.shape
+    q_pad = (-q) % block_q
+    ids_i = ids.astype(jnp.int32)
+    luts_q = luts_u8
+    if q_pad:  # padded queries gather row 0 — cheap, discarded below
+        ids_i = jnp.pad(ids_i, ((0, q_pad), (0, 0)))
+        luts_q = jnp.pad(luts_q, ((0, q_pad), (0, 0), (0, 0)))
+    qp = ids_i.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(qp // block_q,),
+        in_specs=[
+            pl.BlockSpec((n, mb), lambda i, ids: (0, 0)),       # resident
+            pl.BlockSpec((block_q, m, 16), lambda i, ids: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, r), lambda i, ids: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((r, mb), jnp.uint8)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_hop_adc_fs_kernel, m=m, mb=mb, r=r,
+                          block_q=block_q),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((qp, r), jnp.int32),
+        interpret=interpret,
+    )(ids_i, packed, luts_q)
     return out[:q]

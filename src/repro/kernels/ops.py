@@ -13,6 +13,12 @@ Backends:
                     forcing pallas on CPU runs the interpreter, not a crash.
 * ``"interpret"`` — force the Pallas path in interpreter mode (tests).
 * ``"ref"``       — force the pure-jnp oracle from :mod:`repro.kernels.ref`.
+
+Dtype boundary: callers hand in codes in whatever integer dtype they store
+(uint8 for K ≤ 256 indices, uint8 packed bytes for the fs4 layout, int32
+ids) and THIS module casts once to the canonical kernel dtypes — int32
+plain codes/ids, uint8 packed codes, f32 LUTs. Kernel modules and oracles
+assume the canonical dtypes; no per-call casting in callers.
 """
 
 from __future__ import annotations
@@ -23,11 +29,39 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+# Submodules are imported EAGERLY (not inside the dispatch functions):
+# kernels/__init__ re-exports same-named functions (adc_scan_fs, hop_adc,
+# hop_gather), and a lazy first import of the submodule would setattr the
+# MODULE over the package-level function binding, breaking the API
+# mid-session. Importing them all here, before __init__ binds the
+# functions, keeps the package attributes deterministic.
 from repro.kernels import adc_scan as _adc
+from repro.kernels import adc_scan_fs as _adcfs
+from repro.kernels import hop_adc as _hop
+from repro.kernels import hop_gather as _hopg
 from repro.kernels import pq_pairwise as _pqp
 from repro.kernels import ref as _ref
 
 Backend = Literal["auto", "pallas", "interpret", "ref"]
+
+
+def _codes_i32(codes) -> jax.Array:
+    """Canonicalize plain (unpacked) codes / id arrays: any int → int32."""
+    return jnp.asarray(codes).astype(jnp.int32)
+
+
+def _codes_u8(packed) -> jax.Array:
+    """Canonicalize fs4 packed code bytes: any int → uint8."""
+    return jnp.asarray(packed).astype(jnp.uint8)
+
+
+def _dequant(acc, scale, bias, m: int) -> jax.Array:
+    """Per-query affine undo for fs4 int32 accumulators: (Q, X) int32 +
+    (Q,) scale/bias → (Q, X) f32. The SAME eager op sequence as the tail of
+    the fs oracles, so pallas and ref paths agree bitwise (an in-kernel
+    dequant could be FMA-fused under jit and drift an ulp)."""
+    return (jnp.asarray(scale, jnp.float32)[:, None] * acc.astype(jnp.float32)
+            + m * jnp.asarray(bias, jnp.float32)[:, None])
 
 
 def _on_tpu() -> bool:
@@ -60,6 +94,7 @@ def _interpret_flag(mode: str) -> bool:
 def adc_scan(codes, lut, *, backend: Backend = "auto", block_n: int = 1024):
     """One-query ADC scan: (N, M) codes × (M, K) LUT → (N,) f32."""
     mode = _resolve(backend)
+    codes = _codes_i32(codes)
     if mode == "ref":
         return _ref.adc_scan_ref(codes, lut)
     return _adc.adc_scan(codes, lut, block_n=block_n,
@@ -70,10 +105,32 @@ def adc_scan_batch(codes, luts, *, backend: Backend = "auto",
                    block_n: int = 256, block_q: int = 128):
     """Batched ADC scan: (N, M) codes × (Q, M, K) LUTs → (Q, N) f32."""
     mode = _resolve(backend)
+    codes = _codes_i32(codes)
     if mode == "ref":
         return _ref.adc_scan_batch_ref(codes, luts)
     return _adc.adc_scan_batch(codes, luts, block_n=block_n, block_q=block_q,
                                interpret=_interpret_flag(mode))
+
+
+def adc_scan_fs(packed, luts_u8, scale, bias, *, backend: Backend = "auto",
+                block_n: int = 512, block_q: int = 64):
+    """Batched FAST-SCAN ADC: (N, ceil(M/2)) 4-bit-packed codes ×
+    (Q, M, 16) uint8 LUTs + per-query (Q,) (scale, bias) → (Q, N) f32.
+
+    The fs4 serving layout (DESIGN.md §8): half the code bytes, a quarter
+    of the LUT bytes, exact int32 accumulation, one dequant per output.
+    Pack codes with ``repro.pq.pack.pack_codes`` and quantize LUTs with
+    ``repro.pq.pack.quantize_luts``.
+    """
+    mode = _resolve(backend)
+    packed = _codes_u8(packed)
+    luts_u8 = _codes_u8(luts_u8)
+    if mode == "ref":
+        return _ref.adc_scan_fs_ref(packed, luts_u8, scale, bias)
+    acc = _adcfs.adc_scan_fs(packed, luts_u8, block_n=block_n,
+                             block_q=block_q,
+                             interpret=_interpret_flag(mode))
+    return _dequant(acc, scale, bias, luts_u8.shape[1])
 
 
 def hop_gather(codes, luts, *, backend: Backend = "auto", block_q: int = 8):
@@ -81,11 +138,11 @@ def hop_gather(codes, luts, *, backend: Backend = "auto", block_q: int = 8):
     (Q, R) f32. Prefer :func:`hop_adc` where the ids are still at hand —
     it fuses the gather too."""
     mode = _resolve(backend)
+    codes = _codes_i32(codes)
     if mode == "ref":
         return _ref.hop_gather_ref(codes, luts)
-    from repro.kernels import hop_gather as _hg
-    return _hg.hop_gather(codes, luts, block_q=block_q,
-                          interpret=_interpret_flag(mode))
+    return _hopg.hop_gather(codes, luts, block_q=block_q,
+                            interpret=_interpret_flag(mode))
 
 
 def hop_adc(codes, ids, luts, *, backend: Backend = "auto",
@@ -95,11 +152,30 @@ def hop_adc(codes, ids, luts, *, backend: Backend = "auto",
     each query's LUT in one kernel (no (Q, R, M) HBM round-trip). All ids
     must be valid rows in [0, N)."""
     mode = _resolve(backend)
+    codes = _codes_i32(codes)
+    ids = _codes_i32(ids)
     if mode == "ref":
         return _ref.hop_adc_ref(codes, ids, luts)
-    from repro.kernels import hop_adc as _ha
-    return _ha.hop_adc(codes, ids, luts, block_q=block_q,
-                       interpret=_interpret_flag(mode))
+    return _hop.hop_adc(codes, ids, luts, block_q=block_q,
+                        interpret=_interpret_flag(mode))
+
+
+def hop_adc_fs(packed, ids, luts_u8, scale, bias, *,
+               backend: Backend = "auto", block_q: int = 8):
+    """FUSED per-hop FAST-SCAN ADC: (N, ceil(M/2)) packed codes, (Q, R)
+    ids, (Q, M, 16) uint8 LUTs + (Q,) (scale, bias) → (Q, R) f32 — the
+    packed twin of :func:`hop_adc` (same gather fusion, half the resident
+    code bytes, quarter LUT bytes, int32 accumulation)."""
+    mode = _resolve(backend)
+    packed = _codes_u8(packed)
+    ids = _codes_i32(ids)
+    luts_u8 = _codes_u8(luts_u8)
+    if mode == "ref":
+        return _ref.hop_adc_fs_ref(packed, ids, luts_u8, scale, bias)
+    m = luts_u8.shape[1]
+    acc = _hop.hop_adc_fs(packed, ids, luts_u8, m=m, block_q=block_q,
+                          interpret=_interpret_flag(mode))
+    return _dequant(acc, scale, bias, m)
 
 
 def pq_pairwise(x, codebook, *, backend: Backend = "auto", block_n: int = 512):

@@ -68,6 +68,78 @@ def hop_adc_ref(codes: jax.Array, ids: jax.Array, luts: jax.Array
     return hop_gather_ref(codes[ids.astype(jnp.int32)], luts)
 
 
+# --------------------------------------------------------------------------
+# Fast-scan (fs4) oracles: two 4-bit codes per byte, uint8 LUTs, exact int32
+# accumulation, one affine dequant per output (DESIGN.md §8).
+# --------------------------------------------------------------------------
+
+def _pair_lut(luts_u8: jax.Array) -> jax.Array:
+    """(..., M, 16) u8 LUT → (..., ceil(M/2), 256) int32 PAIRED table.
+
+    ``pair[..., b, byte] = lut[..., 2b, byte & 15] + lut[..., 2b+1, byte >> 4]``
+    so ONE gather with the raw packed byte scores TWO sub-codes — the
+    fast-scan idiom that halves gather traffic (nibble convention =
+    :mod:`repro.pq.pack`, re-derived here so the kernels package keeps
+    zero intra-repo imports). Odd M pads a zero row. Integer sums are
+    associative, so this is exactly the per-nibble sum.
+    """
+    m = luts_u8.shape[-2]
+    li = luts_u8.astype(jnp.int32)
+    if m % 2:
+        li = jnp.pad(li, [(0, 0)] * (li.ndim - 2) + [(0, 1), (0, 0)])
+    byte = jnp.arange(256)
+    return li[..., 0::2, byte & 0xF] + li[..., 1::2, byte >> 4]
+
+
+def adc_scan_fs_ref(packed: jax.Array, luts_u8: jax.Array, scale: jax.Array,
+                    bias: jax.Array) -> jax.Array:
+    """Batched fast-scan ADC — oracle for kernels/adc_scan_fs.py.
+
+    Args:
+      packed:  (N, ceil(M/2)) uint8 packed codes (pq.pack convention).
+      luts_u8: (Q, M, 16) uint8 quantized LUTs.
+      scale:   (Q,) float32 per-query dequant step.
+      bias:    (Q,) float32 per-query dequant offset.
+
+    Returns:
+      (Q, N) float32: ``scale[q] * sum_j luts_u8[q, j, code_j] + M * bias[q]``
+      with the inner sum in exact int32.
+    """
+    q, m, _ = luts_u8.shape
+    pair = _pair_lut(luts_u8)                              # (Q, Mb, 256)
+    mb = pair.shape[1]
+    qi = jnp.arange(q)[:, None, None]
+    bi = jnp.arange(mb)[None, None, :]
+    vals = pair[qi, bi, packed.astype(jnp.int32)[None]]    # (Q, N, Mb)
+    acc = jnp.sum(vals, axis=-1)                           # (Q, N) int32
+    return (jnp.asarray(scale, jnp.float32)[:, None] * acc.astype(jnp.float32)
+            + m * jnp.asarray(bias, jnp.float32)[:, None])
+
+
+def hop_adc_fs_ref(packed: jax.Array, ids: jax.Array, luts_u8: jax.Array,
+                   scale: jax.Array, bias: jax.Array) -> jax.Array:
+    """Fused per-hop fast-scan ADC — oracle for hop_adc.py's packed variant.
+
+    Args:
+      packed:  (N, ceil(M/2)) uint8 packed codes of the (local) corpus.
+      ids:     (Q, R) int32 candidate rows per query, all in [0, N).
+      luts_u8: (Q, M, 16) uint8 quantized LUTs.
+      scale/bias: (Q,) float32 per-query dequant affine.
+
+    Returns:
+      (Q, R) float32 dequantized distances (exact int32 accumulation).
+    """
+    q, m, _ = luts_u8.shape
+    pair = _pair_lut(luts_u8)                              # (Q, Mb, 256)
+    mb = pair.shape[1]
+    rows = packed.astype(jnp.int32)[ids.astype(jnp.int32)]  # (Q, R, Mb)
+    qi = jnp.arange(q)[:, None, None]
+    bi = jnp.arange(mb)[None, None, :]
+    acc = jnp.sum(pair[qi, bi, rows], axis=-1)             # (Q, R) int32
+    return (jnp.asarray(scale, jnp.float32)[:, None] * acc.astype(jnp.float32)
+            + m * jnp.asarray(bias, jnp.float32)[:, None])
+
+
 def pq_pairwise_ref(x: jax.Array, codebook: jax.Array) -> jax.Array:
     """Per-subspace squared distances between sub-vectors and codewords.
 

@@ -470,16 +470,21 @@ def _rpq_cell(arch_id: str, shape, mesh) -> Cell:
                     (rows, shd.named(mesh, P())), None,
                     meta={"mode": "retrieval", "n_codes": n, "queries": qb})
 
-    if shape.name == "sharded_graph":
+    if shape.name in ("sharded_graph", "sharded_graph_fs4"):
         # graph-ROUTED scatter-gather: every shard beam-searches its OWN
         # Vamana subgraph inside shard_map (O(hops·R) distance work per
         # query per shard instead of the adc_bulk scan's O(N/S)); the merge
         # is the same O(shards·k) shortlist gather. Compiles the SAME
-        # sharded_graph_topk that ShardedGraphEngine serves with.
+        # sharded_graph_topk that ShardedGraphEngine serves with. The fs4
+        # variant feeds the fast-scan layout (DESIGN.md §8): 4-bit packed
+        # codes at ceil(M/2) bytes/row + a pq.pack.QuantizedLUT pytree.
+        from repro.pq.pack import QuantizedLUT, packed_width
+
         n = _pad_to(dims["n_base"], n_dev)
         qb, kk, hh, rr = (dims["query_batch"], dims["k"], dims["h"],
                           dims["r"])
         n_local = n // n_dev
+        fs4 = shape.name.endswith("_fs4")
 
         def fn(neighbors, medoids, codes, luts):
             gids, dists, hops, ndist = se.sharded_graph_topk(
@@ -488,16 +493,29 @@ def _rpq_cell(arch_id: str, shape, mesh) -> Cell:
             ids, ds = se.merge_shard_topk(gids, dists, kk)
             return ids, ds, hops, ndist
 
+        rep = shd.named(mesh, P())
+        if fs4:
+            m_codes = packed_width(qcfg.m)
+            luts_spec = QuantizedLUT(
+                lut=_sds((qb, qcfg.m, 16), jnp.uint8),
+                scale=_sds((qb,), jnp.float32),
+                bias=_sds((qb,), jnp.float32))
+            luts_sh = QuantizedLUT(lut=rep, scale=rep, bias=rep)
+        else:
+            m_codes = qcfg.m
+            luts_spec = _sds((qb, qcfg.m, qcfg.k), jnp.float32)
+            luts_sh = rep
         rows3 = shd.named(mesh, shd.rpq_shard_stack_spec(mesh))
         shards1 = shd.named(mesh, shd.rpq_shard_stack_spec(mesh, 1))
         return Cell(arch_id, shape.name, fn,
                     (_sds((n_dev, n_local, rr), jnp.int32),
                      _sds((n_dev,), jnp.int32),
-                     _sds((n_dev, n_local, qcfg.m), jnp.uint8),
-                     _sds((qb, qcfg.m, qcfg.k), jnp.float32)),
-                    (rows3, shards1, rows3, shd.named(mesh, P())), None,
+                     _sds((n_dev, n_local, m_codes), jnp.uint8),
+                     luts_spec),
+                    (rows3, shards1, rows3, luts_sh), None,
                     meta={"mode": "serve", "n_base": n, "queries": qb,
-                          "beam_h": hh, "graph_r": rr})
+                          "beam_h": hh, "graph_r": rr, "layout":
+                          "fs4" if fs4 else "u8"})
 
     # serve_1m: scatter-gather ADC + LOCAL exact rerank per shard, then a
     # global top-k merge (DiskANN-style shortlist, faiss-style distribution)

@@ -3,7 +3,12 @@
     PYTHONPATH=src python -m repro.launch.serve --ckpt-dir runs/rpq \
         --dataset sift-small \
         [--scenario hybrid|memory|sharded|sharded-graph] \
-        [--h 32] [--port-stdin]
+        [--codes u8|fs4] [--h 32] [--port-stdin]
+
+``--codes fs4`` serves the fast-scan layout (DESIGN.md §8) — 4-bit packed
+codes + quantized uint8 LUTs — through ANY scenario; it needs a quantizer
+trained with K ≤ 16 sub-codewords (e.g. ``train.py --m 16 --k 16`` for the
+same bytes/vector as M=8, K=256).
 
 Loads the latest checkpoint written by launch/train.py, rebuilds the
 serving engine (codes are re-encoded from the checkpointed quantizer —
@@ -49,6 +54,7 @@ from repro.graphs.knn import knn_ids
 from repro.graphs.partition import PartitionedGraph, build_partitioned_vamana
 from repro.launch.train import build_or_load_graph
 from repro.pq import base as pqbase
+from repro.pq import pack
 from repro.search.engine import (HybridEngine, InMemoryEngine, ShardedEngine,
                                  ShardedGraphEngine)
 from repro.search.metrics import measure_qps, recall_at_k
@@ -79,6 +85,10 @@ def main():
     ap.add_argument("--scenario",
                     choices=("hybrid", "memory", "sharded", "sharded-graph"),
                     default="hybrid")
+    ap.add_argument("--codes", choices=("u8", "fs4"), default="u8",
+                    help="serving layout: u8 = 1 byte/sub-code + f32 LUTs; "
+                    "fs4 = fast-scan 4-bit packed codes + quantized uint8 "
+                    "LUTs (requires a checkpoint trained with K <= 16)")
     ap.add_argument("--h", type=int, default=32)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--graph-r", type=int, default=24)
@@ -101,7 +111,21 @@ def main():
           f"(M={m}, K={k}) from {args.ckpt_dir}")
 
     codes = pqbase.encode(model, ds.base)
-    lut_fn = lambda q: pqbase.build_lut(model, q)
+    if args.codes == "fs4":
+        # fast-scan layout (DESIGN.md §8): nibble-packed codes + uint8 LUTs.
+        # Every scenario below accepts it — the engines dispatch on the
+        # QuantizedLUT type that build_lut(quantize=True) returns.
+        if k > 16:
+            raise SystemExit(
+                f"--codes fs4 needs 4-bit sub-codes (K <= 16); this "
+                f"checkpoint was trained with K={k}. Re-train with --k 16 "
+                f"(double M to keep the byte budget).")
+        codes = pack.pack_codes(codes)
+        lut_fn = lambda q: pqbase.build_lut(model, q, quantize=True)
+        print(f"[serve] fast-scan fs4 layout: {codes.shape[1]} packed "
+              f"bytes/vector, uint8 LUTs")
+    else:
+        lut_fn = lambda q: pqbase.build_lut(model, q)
     if args.scenario == "sharded":  # graph-free scatter-gather scan
         engine = ShardedEngine(codes, lut_fn, vectors=ds.base)
         print(f"[serve] sharded over {engine.n_shards} device shard(s)")

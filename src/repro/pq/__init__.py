@@ -1,5 +1,7 @@
 """Baseline quantizers (PQ / OPQ / Catalyst) + the shared serving model."""
 from repro.pq.base import QuantizerModel, encode, decode, build_lut, adc, distortion  # noqa: F401
-from repro.pq.pq import train_pq  # noqa: F401
+from repro.pq.pq import train_pq, train_pq_fs4  # noqa: F401
 from repro.pq.opq import train_opq  # noqa: F401
 from repro.pq.kmeans import kmeans, kmeans_multi  # noqa: F401
+from repro.pq.pack import (QuantizedLUT, pack_codes, packed_width,  # noqa: F401
+                           quantize_luts, unpack_codes)

@@ -62,10 +62,21 @@ def decode(model: QuantizerModel, codes: jax.Array) -> jax.Array:
     return sub.reshape(codes.shape[0], -1) @ model.r
 
 
-def build_lut(model: QuantizerModel, queries: jax.Array) -> jax.Array:
-    """(Q, D) → (Q, M, K) per-query ADC lookup tables."""
+def build_lut(model: QuantizerModel, queries: jax.Array, *,
+              quantize: bool = False):
+    """(Q, D) → (Q, M, K) per-query ADC lookup tables.
+
+    ``quantize=True`` returns a :class:`repro.pq.pack.QuantizedLUT`
+    instead — (Q, M, 16) uint8 tables + per-query (scale, bias) — for the
+    fast-scan serving layout (requires K ≤ 16; pair with
+    ``pack.pack_codes(encode(model, x))``).
+    """
     qs = rotate_split(model, jnp.atleast_2d(queries))
-    return kops.pq_pairwise(qs, model.codebooks, backend="ref")
+    luts = kops.pq_pairwise(qs, model.codebooks, backend="ref")
+    if not quantize:
+        return luts
+    from repro.pq.pack import quantize_luts
+    return quantize_luts(luts)
 
 
 def adc(model: QuantizerModel, codes: jax.Array, queries: jax.Array,

@@ -20,8 +20,14 @@ from repro.kernels import ops as kops
 @functools.partial(jax.jit, static_argnames=("k", "iters", "block"))
 def kmeans(key: jax.Array, x: jax.Array, k: int, *, iters: int = 20,
            block: int = 8192) -> tuple[jax.Array, jax.Array]:
-    """Lloyd's algorithm. Returns (centroids (K, D), assignments (N,))."""
+    """Lloyd's algorithm. Returns (centroids (K, D), assignments (N,)).
+
+    Any K ≤ N works — K=256 byte codes and K=16 fast-scan nibble codes are
+    the two serving regimes (small K leans harder on the empty-cluster
+    re-seeding below: 16 seeds land in few visible clusters more often).
+    """
     n, d = x.shape
+    assert k <= n, f"kmeans needs K <= N, got K={k} > N={n}"
     x = x.astype(jnp.float32)
     perm = jax.random.permutation(key, n)
     cent0 = x[perm[:k]]

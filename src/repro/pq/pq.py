@@ -15,10 +15,26 @@ from repro.pq.kmeans import kmeans_multi
 
 def train_pq(key: jax.Array, x: jax.Array, m: int, k: int, *,
              iters: int = 20, rotation: jax.Array | None = None) -> base.QuantizerModel:
-    """Train a PQ codebook on x (N, D). Optional fixed rotation (for OPQ)."""
+    """Train a PQ codebook on x (N, D). Optional fixed rotation (for OPQ).
+
+    K is free: the classic byte-code regime is K=256, the fast-scan packed
+    regime is K=16 (4-bit codes, two per byte — see :func:`train_pq_fs4`).
+    """
     n, d = x.shape
     assert d % m == 0, f"D={d} % M={m} != 0"
     r = base.identity_rotation(d) if rotation is None else rotation
     xr = (x @ r.T).reshape(n, m, d // m).transpose(1, 0, 2)  # (M, N, dsub)
     codebooks = kmeans_multi(key, xr, k, iters=iters)
     return base.QuantizerModel(r=r, codebooks=codebooks)
+
+
+def train_pq_fs4(key: jax.Array, x: jax.Array, m: int, *, iters: int = 20,
+                 rotation: jax.Array | None = None) -> base.QuantizerModel:
+    """K=16 PQ for the fast-scan layout (DESIGN.md §8).
+
+    At the same bytes-per-vector budget as K=256, double M (e.g. M=8,K=256
+    → M=16,K=16): codes from ``encode`` then ``pack.pack_codes`` occupy
+    M/2 bytes/vector, and ``build_lut(..., quantize=True)`` emits the
+    matching uint8 tables.
+    """
+    return train_pq(key, x, m, 16, iters=iters, rotation=rotation)

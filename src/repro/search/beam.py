@@ -44,14 +44,25 @@ def _bit_get(bits: jax.Array, idx: jax.Array) -> jax.Array:
 
 
 def _scatter_or(bits, word, mask):
-    """OR `mask[i]` into `bits[word[i]]` (duplicate-word safe).
+    """OR `mask[i]` into `bits[word[i]]` (duplicate-safe), vectorized.
 
-    jnp has no scatter-or primitive; a fori over the ≤R ids is cheap and
-    correct even when several ids land in the same 32-bit word.
+    jnp has no scatter-or primitive, and the old O(R) ``fori_loop`` of
+    read-modify-writes serialized the visited-set update on every hop of
+    every query. Vectorized equivalent: single-bit masks whose (word, bit)
+    pairs are distinct sum to their OR, so deduplicate repeated entries
+    (each mask[i] is one bit — equal masks in the same word are the only
+    collision case), scatter-ADD into a zero array (one XLA scatter), and
+    OR the per-word contribution into ``bits``.
     """
-    def body(i, b):
-        return b.at[word[i]].set(b[word[i]] | mask[i])
-    return jax.lax.fori_loop(0, word.shape[0], body, bits)
+    r = word.shape[0]
+    # drop duplicates of an earlier (word, mask) pair — strictly-lower
+    # triangular compare over the ≤R entries, O(R²) lanes, no loop
+    same = (word[:, None] == word[None, :]) & (mask[:, None] == mask[None, :])
+    first = ~jnp.any(same & (jnp.arange(r)[:, None] > jnp.arange(r)[None, :]),
+                     axis=1)
+    contrib = jnp.zeros_like(bits).at[word].add(
+        jnp.where(first, mask, jnp.uint32(0)))
+    return bits | contrib
 
 
 def _single_query(neighbors: jax.Array, entry: jax.Array, qdata,
@@ -171,22 +182,49 @@ def make_exact_dist_fn(vectors: jax.Array) -> Callable:
     return dist_fn
 
 
-def make_adc_dist_fn(codes: jax.Array, *, backend: str = "auto") -> Callable:
-    """qdata = LUT (M, K). codes must be (N+1, M) sentinel-padded.
+def make_adc_dist_fn(codes: jax.Array, *, packed: bool = False,
+                     backend: str = "auto") -> Callable:
+    """qdata = LUT (M, K) — or a per-query ``pq.pack.QuantizedLUT``
+    ((M, 16) u8 lut, scale, bias) when ``packed=True``. codes must be
+    (N+1, M) sentinel-padded (fs4: (N+1, ceil(M/2)) packed bytes).
 
     Backend dispatch for the per-hop hot loop (kernels.ops semantics):
 
     * CPU (``backend="auto"`` off-TPU, or ``"ref"``): a jnp gather — the
-      per-hop read is tiny (R ≤ 64 rows) and XLA fuses it.
+      per-hop read is tiny (R ≤ 64 rows) and XLA fuses it. The fs4 path
+      nibble-unpacks the gathered bytes and accumulates the uint8 LUT in
+      int32 before the one affine dequant.
     * TPU (``"auto"`` on-TPU, or ``"pallas"``/``"interpret"``): the fused
-      hop-ADC Pallas kernel (kernels/hop_adc.py) — neighbor-row gather and
-      LUT reduce in ONE kernel, so the gathered codes never round-trip HBM.
-      The kernel is batched over queries; under beam_search's vmap the
-      per-query call batches into the kernel's query grid axis.
+      hop-ADC Pallas kernel (kernels/hop_adc.py; packed twin for fs4) —
+      neighbor-row gather and LUT reduce in ONE kernel, so the gathered
+      codes never round-trip HBM. The kernel is batched over queries;
+      under beam_search's vmap the per-query call batches into the
+      kernel's query grid axis.
     """
-    m = codes.shape[1]
     use_fused = backend in ("pallas", "interpret") or (
         backend == "auto" and jax.default_backend() == "tpu")
+    if packed:
+        if use_fused:
+            from repro.kernels import ops
+
+            def dist_fn(qlut, ids):
+                return ops.hop_adc_fs(codes, ids[None], qlut.lut[None],
+                                      qlut.scale[None], qlut.bias[None],
+                                      backend=backend)[0]
+            return dist_fn
+
+        def dist_fn(qlut, ids):
+            lut, scale, bias = qlut                   # (M, 16) u8, (), ()
+            m = lut.shape[0]
+            p = codes[ids].astype(jnp.int32)          # (B, ceil(M/2))
+            nib = jnp.stack([p & 0xF, (p >> 4) & 0xF], axis=-1)
+            c = nib.reshape(p.shape[0], -1)[:, :m]    # (B, M)
+            vals = lut.astype(jnp.int32)[jnp.arange(m)[None, :], c]
+            acc = jnp.sum(vals, axis=-1)              # (B,) int32, exact
+            return scale * acc.astype(jnp.float32) + m * bias
+        return dist_fn
+
+    m = codes.shape[1]
     if use_fused:
         from repro.kernels import ops
 

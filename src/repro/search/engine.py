@@ -48,9 +48,46 @@ from repro.dist import sharding as shd
 from repro.dist.fault import partial_merge
 from repro.graphs.adjacency import Graph
 from repro.graphs.partition import PartitionedGraph
+from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.pq.pack import QuantizedLUT
 from repro.search import beam
 from repro.search.beam import SearchResult
+
+# Layout dispatch: every engine accepts EITHER the classic u8 layout
+# ((N, M) byte codes + (Q, M, K) f32 LUTs) or the fast-scan fs4 layout
+# ((N, ceil(M/2)) packed nibble codes + pq.pack.QuantizedLUT uint8 tables,
+# DESIGN.md §8). The lut_fn's return type is the single source of truth —
+# a QuantizedLUT means the codes are packed; no separate flag to desync.
+
+
+def _is_packed(luts) -> bool:
+    return isinstance(luts, QuantizedLUT)
+
+
+def _bulk_adc(codes_l, luts) -> jax.Array:
+    """(n_local, M|Mb) codes × (Q,...) LUTs → (Q, n_local) ADC distances,
+    dispatching on layout (the one switch for the scan engines)."""
+    if _is_packed(luts):
+        return kops.adc_scan_fs(codes_l, luts.lut, luts.scale, luts.bias)
+    return kref.adc_scan_batch_ref(codes_l, luts)
+
+
+def _lut_specs(luts):
+    """Replicated shard_map in_specs for a LUT input that may be a plain
+    (Q, M, K) array or a QuantizedLUT pytree."""
+    return jax.tree.map(lambda a: P(*([None] * jnp.ndim(a))), luts)
+
+
+def _cached_dist_fn(cache: dict, codes_p, luts):
+    """Per-layout hop dist fn, cached so beam_search's jit sees ONE static
+    callable per layout (u8 vs fs4-packed, decided by the lut type)."""
+    packed = _is_packed(luts)
+    fn = cache.get(packed)
+    if fn is None:
+        fn = beam.make_adc_dist_fn(codes_p, packed=packed)
+        cache[packed] = fn
+    return fn
 
 
 def _pad_codes(codes: jax.Array) -> jax.Array:
@@ -71,15 +108,16 @@ class InMemoryEngine:
 
     def __post_init__(self):
         self._codes_p = _pad_codes(self.codes)
-        self._dist_fn = beam.make_adc_dist_fn(self._codes_p)
+        self._dist_fns = {}
 
     def search(self, queries: jax.Array, *, k: int = 10, h: int = 32,
                max_steps: int = 512) -> SearchResult:
         luts = self.lut_fn(queries)
+        dist_fn = _cached_dist_fn(self._dist_fns, self._codes_p, luts)
         entry = (self.entry_fn(queries) if self.entry_fn is not None
                  else self.graph.medoid)
         res = beam.beam_search(self.graph.neighbors, entry, luts,
-                               self._dist_fn, h=h, max_steps=max_steps)
+                               dist_fn, h=h, max_steps=max_steps)
         return SearchResult(res.ids[:, :k], res.dists[:, :k], res.hops,
                             res.n_dist)
 
@@ -101,7 +139,7 @@ class HybridEngine:
     def __post_init__(self):
         self._codes_p = _pad_codes(self.codes)
         self._vec_p = _pad_vectors(jnp.asarray(self.vectors, jnp.float32))
-        self._dist_fn = beam.make_adc_dist_fn(self._codes_p)
+        self._dist_fns = {}
 
     def search(self, queries: jax.Array, *, k: int = 10, h: int = 32,
                max_steps: int = 512, rerank: int = 0) -> SearchResult:
@@ -109,10 +147,11 @@ class HybridEngine:
         rerank = rerank or h
         k = min(k, rerank)  # cannot return more results than candidates
         luts = self.lut_fn(queries)
+        dist_fn = _cached_dist_fn(self._dist_fns, self._codes_p, luts)
         entry = (self.entry_fn(queries) if self.entry_fn is not None
                  else self.graph.medoid)
         res = beam.beam_search(self.graph.neighbors, entry, luts,
-                               self._dist_fn, h=h, max_steps=max_steps)
+                               dist_fn, h=h, max_steps=max_steps)
         ids, dists = _exact_rerank(self._vec_p, queries, res.ids, rerank, k)
         return SearchResult(ids, dists, res.hops, res.n_dist)
 
@@ -147,7 +186,7 @@ def _local_adc_topk(codes_l, luts, *, mesh, axes, n_local: int, k: int,
                     n_valid: Optional[int]):
     """One shard's scatter half: ADC-scan my rows, return LOCAL top-k with
     GLOBAL ids. (1, Q, k) leading shard axis for the gather."""
-    d = kref.adc_scan_batch_ref(codes_l, luts)            # (Q, N_local)
+    d = _bulk_adc(codes_l, luts)                          # (Q, N_local)
     shard = flat_shard_index(mesh, axes)
     if n_valid is not None:  # mask divisibility-padding rows
         gid_row = shard * n_local + jnp.arange(n_local)
@@ -161,7 +200,7 @@ def _local_adc_serve(codes_l, vectors_l, luts, queries, *, mesh, axes,
                      n_valid: Optional[int]):
     """Scatter half with DiskANN-style local refinement: ADC shortlist →
     exact rerank against my vector rows → LOCAL top-k, global ids."""
-    d = kref.adc_scan_batch_ref(codes_l, luts)            # (Q, N_local)
+    d = _bulk_adc(codes_l, luts)                          # (Q, N_local)
     shard = flat_shard_index(mesh, axes)
     if n_valid is not None:
         gid_row = shard * n_local + jnp.arange(n_local)
@@ -188,7 +227,7 @@ def sharded_adc_scan(mesh, axes: tuple, codes, luts, *, k: int,
                    k=k, n_valid=n_valid)
     return shard_map(
         body, mesh=mesh,
-        in_specs=(P(axes, None), P(None, None, None)),
+        in_specs=(P(axes, None), _lut_specs(luts)),
         out_specs=(P(axes, None, None), P(axes, None, None)))(codes, luts)
 
 
@@ -202,7 +241,7 @@ def sharded_adc_serve(mesh, axes: tuple, codes, vectors, luts, queries, *,
                    k=k, shortlist=min(shortlist, n_local), n_valid=n_valid)
     return shard_map(
         body, mesh=mesh,
-        in_specs=(P(axes, None), P(axes, None), P(None, None, None),
+        in_specs=(P(axes, None), P(axes, None), _lut_specs(luts),
                   P(None, None)),
         out_specs=(P(axes, None, None), P(axes, None, None)))(
             codes, vectors, luts, queries)
@@ -289,7 +328,7 @@ class ShardedEngine:
         queries = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
         n_local = self._codes_s.shape[0] // self.n_shards
         kk = min(k, n_local)
-        luts = jnp.asarray(self.lut_fn(queries))
+        luts = jax.tree.map(jnp.asarray, self.lut_fn(queries))
         gids, dists = self._scatter(luts, queries, kk)
         gids, dists = np.asarray(gids), np.asarray(dists)
         if alive is None:
@@ -322,10 +361,11 @@ def _shard_codes_pad(codes_l: jax.Array) -> jax.Array:
 
 def _local_beam(neighbors_l, medoid_l, codes_l, luts, *, h: int,
                 max_steps: int, backend: str):
-    """Route over THIS shard's subgraph with ADC distances. Returns the raw
-    per-shard beam result (local ids)."""
+    """Route over THIS shard's subgraph with ADC distances (u8 or fs4-
+    packed layout, decided by the lut type). Returns the raw per-shard
+    beam result (local ids)."""
     dist_fn = beam.make_adc_dist_fn(_shard_codes_pad(codes_l),
-                                    backend=backend)
+                                    packed=_is_packed(luts), backend=backend)
     return beam.beam_search(neighbors_l[0], medoid_l[0], luts, dist_fn,
                             h=h, max_steps=max_steps)
 
@@ -404,7 +444,7 @@ def sharded_graph_topk(mesh, axes: tuple, neighbors, medoids, codes, luts, *,
     return shard_map(
         body, mesh=mesh,
         in_specs=(P(axes, None, None), P(axes), P(axes, None, None),
-                  P(None, None, None)),
+                  _lut_specs(luts)),
         out_specs=(P(axes, None, None), P(axes, None, None),
                    P(axes, None), P(axes, None)))(
             neighbors, medoids, codes, luts)
@@ -429,7 +469,7 @@ def sharded_graph_serve(mesh, axes: tuple, neighbors, medoids, codes,
     return shard_map(
         body, mesh=mesh,
         in_specs=(P(axes, None, None), P(axes), P(axes, None, None),
-                  P(axes, None, None), P(None, None, None), P(None, None)),
+                  P(axes, None, None), _lut_specs(luts), P(None, None)),
         out_specs=(P(axes, None, None), P(axes, None, None),
                    P(axes, None), P(axes, None)))(
             neighbors, medoids, codes, vectors, luts, queries)
@@ -546,7 +586,7 @@ class ShardedGraphEngine:
         """
         queries = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
         kk = min(k, h, self.graph.n_local)
-        luts = jnp.asarray(self.lut_fn(queries))
+        luts = jax.tree.map(jnp.asarray, self.lut_fn(queries))
         gids, dists, hops, ndist = self._scatter(luts, queries, kk, h,
                                                  max_steps)
         gids, dists = np.asarray(gids), np.asarray(dists)

@@ -18,6 +18,7 @@ CELLS = [
     ("gat-cora", "molecule"),
     ("deepfm", "serve_p99"),
     ("rpq", "adc_bulk"),
+    ("rpq", "sharded_graph_fs4"),   # fast-scan packed serving layout
     ("granite-moe-1b-a400m", "long_500k"),
 ]
 

@@ -1,0 +1,86 @@
+"""End-to-end fast-scan serving: the fs4 layout (packed codes + quantized
+LUTs) must match the u8 layout's recall through every engine — the layout
+changes bytes, not answers (LUT quantization costs < 2 recall points)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.pq import base, pack, train_pq_fs4
+from repro.search.engine import (InMemoryEngine, ShardedEngine,
+                                 ShardedGraphEngine)
+from repro.search.metrics import recall_at_k
+
+
+@pytest.fixture(scope="module")
+def fs4_quantizer(clustered_data):
+    x, _, _ = clustered_data
+    model = train_pq_fs4(jax.random.PRNGKey(3), x, 8, iters=8)
+    codes = base.encode(model, x)
+    assert int(codes.max()) < 16          # 4-bit codes by construction
+    return model, codes, pack.pack_codes(codes)
+
+
+def test_inmemory_recall_parity(clustered_data, small_graph, fs4_quantizer):
+    """Same K=16 model served u8 vs fs4: recall@10 within 2 points."""
+    x, q, gt = clustered_data
+    model, codes, packed = fs4_quantizer
+    e_u8 = InMemoryEngine(small_graph, codes,
+                          lambda qq: base.build_lut(model, qq))
+    e_fs = InMemoryEngine(small_graph, packed,
+                          lambda qq: base.build_lut(model, qq, quantize=True))
+    r_u8 = recall_at_k(e_u8.search(q, k=10, h=32).ids, gt, 10)
+    r_fs = recall_at_k(e_fs.search(q, k=10, h=32).ids, gt, 10)
+    assert abs(r_u8 - r_fs) <= 0.02, (r_u8, r_fs)
+
+
+def test_sharded_scan_recall_parity(clustered_data, fs4_quantizer):
+    """The exhaustive scan engine in fs4 (ops.adc_scan_fs under shard_map)
+    vs u8; with exact local rerank both layouts converge further."""
+    x, q, gt = clustered_data
+    model, codes, packed = fs4_quantizer
+    e_u8 = ShardedEngine(codes, lambda qq: base.build_lut(model, qq))
+    e_fs = ShardedEngine(packed,
+                         lambda qq: base.build_lut(model, qq, quantize=True))
+    r_u8 = recall_at_k(e_u8.search(q, k=10).ids, gt, 10)
+    r_fs = recall_at_k(e_fs.search(q, k=10).ids, gt, 10)
+    assert abs(r_u8 - r_fs) <= 0.02, (r_u8, r_fs)
+    assert e_fs.memory_bytes() < e_u8.memory_bytes()
+
+
+def test_sharded_graph_fs4(clustered_data, fs4_quantizer):
+    """Graph-routed serving accepts the packed layout end to end (packed
+    codes through shard_map, QuantizedLUT through the beam's dist fn)."""
+    from repro.graphs.partition import build_partitioned_vamana
+
+    x, q, gt = clustered_data
+    model, codes, packed = fs4_quantizer
+    pg = build_partitioned_vamana(jax.random.PRNGKey(0), x, 1, r=16, l=32)
+    e_fs = ShardedGraphEngine(pg, packed,
+                              lambda qq: base.build_lut(model, qq,
+                                                        quantize=True),
+                              vectors=x)
+    e_u8 = ShardedGraphEngine(pg, codes,
+                              lambda qq: base.build_lut(model, qq),
+                              vectors=x)
+    res_fs = e_fs.search(q, k=10, h=32)
+    r_fs = recall_at_k(res_fs.ids, gt, 10)
+    r_u8 = recall_at_k(e_u8.search(q, k=10, h=32).ids, gt, 10)
+    assert abs(r_u8 - r_fs) <= 0.02, (r_u8, r_fs)
+    assert int(res_fs.hops.min()) > 0
+
+
+def test_fs4_bulk_adc_close_to_f32(clustered_data, fs4_quantizer):
+    """Engine-level distances: fs4 bulk scan within M·scale of f32 ADC."""
+    x, q, _ = clustered_data
+    model, codes, packed = fs4_quantizer
+    ql = base.build_lut(model, q[:8], quantize=True)
+    luts = base.build_lut(model, q[:8])
+    from repro.kernels import ops
+
+    fs = np.asarray(ops.adc_scan_fs(packed, ql.lut, ql.scale, ql.bias,
+                                    backend="ref"))
+    f32 = np.asarray(ops.adc_scan_batch(codes, luts, backend="ref"))
+    bound = model.m * np.asarray(ql.scale)[:, None] + 1e-4
+    assert (np.abs(fs - f32) <= bound).all()

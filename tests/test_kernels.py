@@ -95,6 +95,95 @@ def test_hop_adc_matches_ref(n, q, r, m, k, rng):
                                rtol=1e-6, atol=1e-5)
 
 
+FS_SHAPES = [
+    # (N, M, Q, R)
+    (100, 4, 3, 8),
+    (257, 16, 5, 32),
+    (64, 5, 9, 24),    # odd M: last byte's high nibble is padding
+    (33, 1, 2, 6),
+]
+
+
+def _fs_inputs(rng, n, m, q):
+    from repro.pq import pack
+
+    codes = rng.integers(0, 16, (n, m)).astype(np.uint8)
+    packed = pack.pack_codes(jnp.asarray(codes))
+    luts = rng.normal(size=(q, m, 16)).astype(np.float32) ** 2
+    ql = pack.quantize_luts(jnp.asarray(luts))
+    return codes, packed, ql
+
+
+@pytest.mark.parametrize("shape", FS_SHAPES)
+def test_adc_scan_fs_matches_ref_bitexact(shape, rng):
+    """Fast-scan bulk kernel (interpret mode) vs the jnp oracle must be
+    BIT-exact: integer accumulation + one shared dequant expression."""
+    n, m, q, _ = shape
+    _, packed, ql = _fs_inputs(rng, n, m, q)
+    want = ref.adc_scan_fs_ref(packed, ql.lut, ql.scale, ql.bias)
+    got = ops.adc_scan_fs(packed, ql.lut, ql.scale, ql.bias,
+                          backend="interpret", block_n=64, block_q=4)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("shape", FS_SHAPES)
+def test_hop_adc_fs_matches_ref_bitexact(shape, rng):
+    """Packed fused gather+reduce kernel (interpret mode) vs its oracle."""
+    n, m, q, r = shape
+    _, packed, ql = _fs_inputs(rng, n, m, q)
+    ids = rng.integers(0, n, (q, r)).astype(np.int32)
+    want = ref.hop_adc_fs_ref(packed, jnp.asarray(ids), ql.lut, ql.scale,
+                              ql.bias)
+    got = ops.hop_adc_fs(packed, ids, ql.lut, ql.scale, ql.bias,
+                         backend="interpret", block_q=4)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_adc_scan_fs_consistent_with_unpacked_scan(rng):
+    """fs4 accumulation == scanning the UNPACKED codes against the uint8
+    LUT cast to f32, then the same affine — ties the packed path to the
+    classic scan's semantics exactly (all-integer, so equality is exact)."""
+    n, m, q = 120, 8, 4
+    codes, packed, ql = _fs_inputs(rng, n, m, q)
+    fs = np.asarray(ops.adc_scan_fs(packed, ql.lut, ql.scale, ql.bias,
+                                    backend="ref"))
+    acc = np.asarray(ref.adc_scan_batch_ref(
+        jnp.asarray(codes), ql.lut.astype(jnp.float32)))
+    want = (np.asarray(ql.scale)[:, None] * acc
+            + m * np.asarray(ql.bias)[:, None])
+    np.testing.assert_allclose(fs, want, rtol=1e-6, atol=1e-5)
+
+
+def test_hop_adc_fs_duplicate_and_boundary_ids(rng):
+    """Duplicate ids in one hop and rows 0 / N-1 must all resolve."""
+    n, m, q = 50, 4, 1
+    _, packed, ql = _fs_inputs(rng, n, m, q)
+    ids = np.array([[0, 0, n - 1, n - 1, 7, 7, 7, 0]], np.int32)
+    got = np.asarray(ops.hop_adc_fs(packed, ids, ql.lut, ql.scale, ql.bias,
+                                    backend="interpret"))
+    want = np.asarray(ref.hop_adc_fs_ref(packed, jnp.asarray(ids), ql.lut,
+                                         ql.scale, ql.bias))
+    np.testing.assert_array_equal(got, want)
+    assert got[0, 0] == got[0, 1] == got[0, 7]
+
+
+def test_ops_accept_any_int_dtype(rng):
+    """The dispatch boundary canonicalizes code dtypes: uint8 and int32
+    callers get identical answers from every op (the one-cast rule)."""
+    n, m, k, q, r = 80, 4, 16, 3, 8
+    codes = rng.integers(0, k, (n, m))
+    lut = rng.normal(size=(m, k)).astype(np.float32)
+    luts = rng.normal(size=(q, m, k)).astype(np.float32)
+    ids = rng.integers(0, n, (q, r))
+    for a, b in [(np.uint8, np.int32), (np.int32, np.uint8)]:
+        s1 = ops.adc_scan(codes.astype(a), lut, backend="ref")
+        s2 = ops.adc_scan(codes.astype(b), lut, backend="ref")
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+        h1 = ops.hop_adc(codes.astype(a), ids.astype(a), luts, backend="ref")
+        h2 = ops.hop_adc(codes.astype(b), ids.astype(b), luts, backend="ref")
+        np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+
+
 def test_hop_adc_consistent_with_hop_gather(rng):
     """Fused kernel == pre-gather + hop_gather (the op it replaces)."""
     n, q, r, m, k = 120, 7, 16, 8, 32

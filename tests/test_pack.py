@@ -1,0 +1,115 @@
+"""Fast-scan layout properties: 4-bit pack/unpack roundtrip, LUT
+quantization error bounds, and the fs4-vs-f32 ADC distance bound
+(DESIGN.md §8)."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.pq import pack
+
+
+@pytest.mark.parametrize("n,m", [(1, 1), (7, 2), (64, 5), (33, 16),
+                                 (100, 15), (256, 8)])
+def test_pack_roundtrip(n, m, rng):
+    codes = rng.integers(0, 16, (n, m)).astype(np.uint8)
+    packed = pack.pack_codes(jnp.asarray(codes))
+    assert packed.shape == (n, pack.packed_width(m))
+    assert packed.dtype == jnp.uint8
+    back = pack.unpack_codes(packed, m)
+    assert (np.asarray(back) == codes).all()
+
+
+def test_pack_odd_m_high_nibble_zero(rng):
+    """Odd M leaves the last byte's high nibble zero (the sentinel slot)."""
+    codes = rng.integers(0, 16, (20, 5)).astype(np.uint8)
+    packed = np.asarray(pack.pack_codes(jnp.asarray(codes)))
+    assert (packed[:, -1] >> 4 == 0).all()
+
+
+def test_pack_sentinel_rows_roundtrip():
+    """All-zero sentinel rows (the engines' padding) survive packing."""
+    codes = np.zeros((3, 7), np.uint8)
+    packed = pack.pack_codes(jnp.asarray(codes))
+    assert (np.asarray(packed) == 0).all()
+    assert (np.asarray(pack.unpack_codes(packed, 7)) == 0).all()
+
+
+def test_pack_masks_out_of_range():
+    """Values ≥ 16 are masked to 4 bits, never corrupt the neighbor code."""
+    codes = np.array([[0x1F, 3]], np.uint8)    # 31 → 15
+    back = np.asarray(pack.unpack_codes(pack.pack_codes(jnp.asarray(codes)), 2))
+    assert back.tolist() == [[15, 3]]
+
+
+def test_pack_roundtrip_property(rng):
+    """Property sweep over random shapes (hypothesis when available)."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(1, 40), st.integers(1, 20), st.integers(0, 2**31 - 1))
+    def prop(n, m, seed):
+        r = np.random.default_rng(seed)
+        codes = r.integers(0, 16, (n, m)).astype(np.uint8)
+        back = pack.unpack_codes(pack.pack_codes(jnp.asarray(codes)), m)
+        assert (np.asarray(back) == codes).all()
+
+    prop()
+
+
+@pytest.mark.parametrize("k", [16, 8, 3])
+def test_quantize_luts_bounds(k, rng):
+    """Per-entry dequant error ≤ scale/2; K < 16 pads to 16 columns."""
+    luts = rng.normal(size=(5, 8, k)).astype(np.float32) ** 2
+    ql = pack.quantize_luts(jnp.asarray(luts))
+    assert ql.lut.shape == (5, 8, 16)
+    assert ql.lut.dtype == jnp.uint8
+    deq = np.asarray(ql.dequantize())[:, :, :k]
+    err = np.abs(deq - luts)
+    bound = np.asarray(ql.scale)[:, None, None] / 2 + 1e-6
+    assert (err <= bound).all()
+
+
+def test_quantize_luts_constant_table():
+    """A constant LUT must not divide by zero; dequant stays exact."""
+    luts = jnp.full((2, 4, 16), 3.25, jnp.float32)
+    ql = pack.quantize_luts(luts)
+    assert np.isfinite(np.asarray(ql.scale)).all()
+    np.testing.assert_allclose(np.asarray(ql.dequantize()), 3.25)
+
+
+def test_quantize_luts_rejects_wide_k():
+    with pytest.raises(ValueError):
+        pack.quantize_luts(jnp.zeros((1, 4, 17), jnp.float32))
+
+
+def test_fs_adc_error_bound(rng):
+    """fs4 ADC distance within M·scale of the f32 ADC distance — the bound
+    the LUT quantization math guarantees (M entries × ≤ scale/2 each, plus
+    headroom for the affine rounding)."""
+    n, m, q = 500, 8, 6
+    codes = rng.integers(0, 16, (n, m)).astype(np.uint8)
+    packed = pack.pack_codes(jnp.asarray(codes))
+    luts = rng.normal(size=(q, m, 16)).astype(np.float32) ** 2
+    ql = pack.quantize_luts(jnp.asarray(luts))
+    fs = np.asarray(ref.adc_scan_fs_ref(packed, ql.lut, ql.scale, ql.bias))
+    f32 = np.asarray(ref.adc_scan_batch_ref(jnp.asarray(codes),
+                                            jnp.asarray(luts)))
+    err = np.abs(fs - f32)
+    bound = m * np.asarray(ql.scale)[:, None] + 1e-4
+    assert (err <= bound).all(), (err.max(), bound.max())
+
+
+def test_paired_lut_equals_nibble_sum(rng):
+    """The oracle's paired-byte table == summing the two nibble entries."""
+    m = 7
+    luts = rng.integers(0, 256, (3, m, 16)).astype(np.uint8)
+    pair = np.asarray(ref._pair_lut(jnp.asarray(luts)))
+    li = luts.astype(np.int64)
+    for byte in (0, 17, 128, 255):
+        lo, hi = byte & 0xF, byte >> 4
+        want = li[:, 0::2, lo].copy()
+        want[:, : m // 2] += li[:, 1::2, hi]
+        assert (pair[:, :, byte] == want).all()
