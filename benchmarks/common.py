@@ -100,16 +100,27 @@ def quantizer(method: str):
         {"wall_s": wall, "bytes": size}
 
 
-def sweep_engine(engine, queries, gt, beams=BEAMS, k: int = 10):
-    """Beam sweep → list of {h, recall, qps, hops}."""
+def sweep_engine(engine, queries, gt, beams=BEAMS, k: int = 10,
+                 expand: int = 1):
+    """Beam sweep → list of {h, expand, recall, qps, hops, rounds}.
+
+    ``expand`` is the frontier batch size E (DESIGN.md §9) forwarded to
+    every ``engine.search`` call — sweep it alongside ``h`` to chart the
+    QPS-vs-recall frontier of frontier batching.
+    """
     from repro.search.metrics import measure_qps, recall_at_k
 
     out = []
     for h in beams:
-        qps, res = measure_qps(lambda q: engine.search(q, k=k, h=h), queries,
-                               repeats=2, warmup=1)
-        out.append({"h": h, "recall": recall_at_k(res.ids, gt, k),
-                    "qps": qps, "hops": float(np.mean(np.asarray(res.hops)))})
+        qps, res = measure_qps(
+            lambda q: engine.search(q, k=k, h=h, expand=expand), queries,
+            repeats=2, warmup=1)
+        hops = float(np.mean(np.asarray(res.hops)))
+        out.append({"h": h, "expand": expand,
+                    "recall": recall_at_k(res.ids, gt, k),
+                    "qps": qps, "hops": hops,
+                    "rounds": (float(np.mean(np.asarray(res.rounds)))
+                               if res.rounds is not None else hops)})
     return out
 
 

@@ -8,6 +8,12 @@ one at the SAME (N, M): packed 4-bit codes + quantized uint8 LUTs vs
 gather+reduce. ``speedup_vs_f32`` in the derived column is the acceptance
 metric (the scan loops are memory-bound, so halving code bytes and
 quartering LUT bytes shows up directly as wall time).
+
+Hop-width sweep rows (DESIGN.md §9) measure the frontier-batched hop: the
+fused call at R' ∈ {64, 128, 256} for both layouts, with ``per_dist_ns``
+(call time / candidates scored) and ``speedup_vs_4x64`` (one E·R = 256-wide
+call vs E = 4 separate 64-wide calls — the per-round cost ratio of
+``beam_search(expand=4)`` against the classic beam).
 """
 
 from __future__ import annotations
@@ -30,6 +36,19 @@ def _time(fn, *args, repeats=5):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / repeats
+
+
+def _time_median(fn, *args, repeats=15):
+    """Median-of-repeats — the sweep rows feed a CI-asserted derived metric
+    and must survive a noisy shared-CPU host (mean-of-5 was seen swinging
+    2× under load)."""
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
 
 
 def run():
@@ -93,6 +112,27 @@ def run():
     rows.append(("kernel/hop_adc_fs4_q64_r64", t_hop_fs * 1e6,
                  f"gscores_per_s={q * r / t_hop_fs / 1e9:.4f} "
                  f"speedup_vs_f32={t_hop / t_hop_fs:.2f}"))
+
+    # ---- frontier-width sweep (DESIGN.md §9) ----------------------------
+    # multi-expansion beam rounds feed ONE R' = E·R wide hop call instead
+    # of E narrow ones; per_dist_ns is the per-candidate cost of the call
+    # and speedup_vs_4x64 the acceptance metric (one 256-wide call vs four
+    # 64-wide calls, per layout). CI asserts these rows reach the artifact.
+    t_wide = {}
+    for rp in (64, 128, 256):
+        ids_w = jnp.asarray(rng.integers(0, n, (q, rp)), jnp.int32)
+        t_u8 = _time_median(f3, codes, ids_w, luts)
+        t_wide[("u8", rp)] = t_u8
+        rows.append((f"kernel/hop_adc_u8_q64_rp{rp}", t_u8 * 1e6,
+                     f"per_dist_ns={t_u8 / (q * rp) * 1e9:.2f}"))
+        t_fs = _time_median(ffsh, packed, ids_w, ql.lut, ql.scale, ql.bias)
+        t_wide[("fs4", rp)] = t_fs
+        rows.append((f"kernel/hop_adc_fs4_q64_rp{rp}", t_fs * 1e6,
+                     f"per_dist_ns={t_fs / (q * rp) * 1e9:.2f}"))
+    for layout in ("u8", "fs4"):
+        t64, t256 = t_wide[(layout, 64)], t_wide[(layout, 256)]
+        rows.append((f"kernel/hop_adc_{layout}_wide4_vs_4x64", t256 * 1e6,
+                     f"speedup_vs_4x64={4 * t64 / t256:.2f}"))
 
     # ---- training-side pairwise table ----------------------------------
     x = jnp.asarray(rng.normal(size=(8192, m, 8)).astype(np.float32))

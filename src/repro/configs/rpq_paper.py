@@ -50,6 +50,11 @@ RPQ_SHAPES = (
     base.ShapeSpec("sharded_graph_fs4", "serve",
                    dict(n_base=1_000_000, query_batch=256, k=10, h=32,
                         r=32)),
+    # FRONTIER-BATCHED routing (DESIGN.md §9): expand=4 beam over an R=64
+    # subgraph — every round is one E·R = 256-wide fused hop-ADC call
+    base.ShapeSpec("sharded_graph_wide", "serve",
+                   dict(n_base=1_000_000, query_batch=256, k=10, h=32,
+                        r=64, expand=4)),
 )
 
 base.register(base.ArchSpec(

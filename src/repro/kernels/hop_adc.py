@@ -1,15 +1,28 @@
 """Fused Pallas TPU kernel: gather + ADC reduce for one beam-search hop.
 
 The per-hop hot loop of graph-routed serving does two things per query:
-gather the compact code rows of its R candidate neighbors, then reduce each
-row against the query's LUT. As two XLA ops that round-trips a (Q, R, M)
+gather the compact code rows of its R′ candidate neighbors, then reduce each
+row against the query's LUT. As two XLA ops that round-trips a (Q, R′, M)
 gathered-codes array through HBM between the gather and the reduce
 (`hop_gather.py` only covers the reduce half). This kernel fuses both: the
 ids never leave SMEM, the gathered rows never leave VMEM.
 
-Layout (DESIGN.md §6):
+R′ is the FRONTIER width: the adjacency degree R classically, E·R under
+multi-expansion beam search (``search/beam.py`` with ``expand=E``,
+DESIGN.md §9). The kernel is width-agnostic; two knobs keep the wide rows
+efficient:
 
-* ``ids`` (Q, R) int32 ride in as a scalar-prefetch argument — they live in
+* the per-row scalar gather loop is UNROLLED ×8 — each ``fori_loop`` trip
+  issues 8 independent row copies (SMEM id read + VMEM dynamic slice), so
+  the copies pipeline instead of serializing one loop trip per row (the
+  trip count at R′=256 drops 256 → 32);
+* ``block_q`` auto-tunes to the width (``_auto_block_q``): the query tile
+  shrinks 8 → 4 → 2 as R′ grows 64 → 128 → 256 so the LUT tile + out tile
+  + gather scratch VMEM working set stays roughly constant.
+
+Layout (DESIGN.md §6, §9):
+
+* ``ids`` (Q, R′) int32 ride in as a scalar-prefetch argument — they live in
   SMEM, where scalars are readable before/without a VMEM DMA, and drive the
   row gather directly (the embedding-lookup idiom of
   ``PrefetchScalarGridSpec``).
@@ -20,12 +33,13 @@ Layout (DESIGN.md §6):
 * ``luts`` (bq, M, K) f32 tile per grid step; per query the reduce is the
   same K-lane iota-compare as adc_scan's VPU formulation (M static unroll).
 * grid = (Q / bq,); per-(query, neighbor) row gathers are dynamic slices
-  into the resident codes block, staged through an (R, M) VMEM scratch.
+  into the resident codes block, staged through an (R′, M) VMEM scratch.
 
-VMEM @ bq=8, R=64, M=16, K=256: LUT tile 8·16·256·4 = 512 KiB + codes +
-scratch ≪ 16 MB. Validated against ``ref.hop_adc_ref`` in interpret mode by
-tests/test_kernels.py; ``ops.hop_adc`` dispatches Pallas-on-TPU / jnp-ref
-elsewhere.
+VMEM @ bq=8, R′=64, M=16, K=256: LUT tile 8·16·256·4 = 128 KiB + codes +
+scratch ≪ 16 MB; @ bq=2, R′=256 the LUT tile is 32 KiB and the scratch
+16 KiB (budget table in DESIGN.md §9). Validated against ``ref.hop_adc_ref``
+in interpret mode by tests/test_kernels.py; ``ops.hop_adc`` dispatches
+Pallas-on-TPU / jnp-ref elsewhere.
 
 ``hop_adc_fs`` below is the FAST-SCAN twin (DESIGN.md §8): the resident
 codes block holds 4-bit-packed bytes (half the bytes), the LUT tile is
@@ -43,28 +57,58 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Rows gathered per fori_loop trip — 8 independent dynamic slices per trip
+# pipeline where a 1-row loop serialized (the ids wrapper pads R′ up to a
+# multiple of this; pad rows gather row 0 and are sliced off the output).
+GATHER_UNROLL = 8
+
+
+def _auto_block_q(r: int) -> int:
+    """Default query tile for a frontier of width ``r``: 8 at R′ ≤ 64,
+    4 at 128, 2 at 256+ — keeps the LUT tile + out tile + gather scratch
+    working set roughly constant as multi-expansion widens the hop
+    (DESIGN.md §9 VMEM budget)."""
+    return max(1, 512 // max(r, 64))
+
+
+def _pad_ids_rows(ids_i: jax.Array) -> jax.Array:
+    """Pad the frontier axis to a GATHER_UNROLL multiple (pad lanes gather
+    row 0 — cheap, discarded by the caller's output slice)."""
+    r_pad = (-ids_i.shape[1]) % GATHER_UNROLL
+    if r_pad:
+        ids_i = jnp.pad(ids_i, ((0, 0), (0, r_pad)))
+    return ids_i
+
+
+def _gather_rows(ids_ref, codes_ref, gathered, q_abs, rp: int):
+    """Copy the rp neighbor code rows of query ``q_abs`` into scratch,
+    GATHER_UNROLL independent row copies per loop trip."""
+    def g_body(gi, _):
+        base = gi * GATHER_UNROLL
+        for j in range(GATHER_UNROLL):     # static unroll
+            row = ids_ref[q_abs, base + j]
+            gathered[pl.ds(base + j, 1), :] = codes_ref[pl.ds(row, 1), :]
+        return _
+
+    jax.lax.fori_loop(0, rp // GATHER_UNROLL, g_body, 0)
+
 
 def _hop_adc_kernel(ids_ref, codes_ref, luts_ref, out_ref, gathered,
-                    *, m: int, k: int, r: int, block_q: int):
-    """One grid step: block_q queries × R fused gather-reduce."""
+                    *, m: int, k: int, rp: int, block_q: int):
+    """One grid step: block_q queries × R′ fused gather-reduce."""
     q0 = pl.program_id(0) * block_q
 
     def q_body(qi, _):
-        # 1. gather this query's R neighbor code rows into VMEM scratch;
+        # 1. gather this query's R′ neighbor code rows into VMEM scratch;
         #    the row index comes straight from SMEM (no VMEM round-trip).
-        def g_body(ri, __):
-            row = ids_ref[q0 + qi, ri]
-            gathered[pl.ds(ri, 1), :] = codes_ref[pl.ds(row, 1), :]
-            return __
-
-        jax.lax.fori_loop(0, r, g_body, 0)
-        rows = gathered[...]                               # (R, M) int32
+        _gather_rows(ids_ref, codes_ref, gathered, q0 + qi, rp)
+        rows = gathered[...]                               # (R′, M) int32
         lut = luts_ref[pl.ds(qi, 1)][0]                    # (M, K) f32
         # 2. LUT reduce: K-lane iota compare per subspace (VPU formulation)
-        iota = jax.lax.broadcasted_iota(jnp.int32, (r, k), 1)
-        acc = jnp.zeros((r,), jnp.float32)
+        iota = jax.lax.broadcasted_iota(jnp.int32, (rp, k), 1)
+        acc = jnp.zeros((rp,), jnp.float32)
         for j in range(m):                                 # M static unroll
-            mask = rows[:, j:j + 1] == iota                # (R, K)
+            mask = rows[:, j:j + 1] == iota                # (R′, K)
             acc = acc + jnp.sum(
                 jnp.where(mask, lut[j, :][None, :], 0.0), axis=1)
         out_ref[pl.ds(qi, 1), :] = acc[None]
@@ -75,16 +119,19 @@ def _hop_adc_kernel(ids_ref, codes_ref, luts_ref, out_ref, gathered,
 
 @functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
 def hop_adc(codes: jax.Array, ids: jax.Array, luts: jax.Array, *,
-            block_q: int = 8, interpret: bool | None = None) -> jax.Array:
-    """Fused per-hop ADC: (N, M) codes, (Q, R) ids, (Q, M, K) LUTs → (Q, R).
+            block_q: int | None = None,
+            interpret: bool | None = None) -> jax.Array:
+    """Fused per-hop ADC: (N, M) codes, (Q, R′) ids, (Q, M, K) LUTs → (Q, R′).
 
     ``out[q, i] = sum_j luts[q, j, codes[ids[q, i], j]]`` — the distance of
     query q to its i-th candidate neighbor. All ids must be valid rows in
     ``[0, N)`` (the beam passes masked-to-0 ids for dead lanes and infs the
     distances afterwards). Codes/ids arrive int32, LUTs f32 — the ONE cast
     from caller dtypes (uint8 codes etc.) lives in kernels.ops, the
-    dispatch boundary. ``interpret=None`` autodetects: compiled Pallas on
-    TPU, interpreter elsewhere (kernels.ops.default_interpret).
+    dispatch boundary. ``block_q=None`` auto-tunes the query tile to the
+    frontier width (``_auto_block_q``); ``interpret=None`` autodetects:
+    compiled Pallas on TPU, interpreter elsewhere
+    (kernels.ops.default_interpret).
     """
     if interpret is None:
         from repro.kernels.ops import default_interpret
@@ -92,8 +139,11 @@ def hop_adc(codes: jax.Array, ids: jax.Array, luts: jax.Array, *,
     q, r = ids.shape
     n, m = codes.shape
     _, _, k = luts.shape
+    if block_q is None:
+        block_q = _auto_block_q(r)
     q_pad = (-q) % block_q
-    ids_i = ids.astype(jnp.int32)
+    ids_i = _pad_ids_rows(ids.astype(jnp.int32))
+    rp = ids_i.shape[1]
     luts_f = luts.astype(jnp.float32)
     if q_pad:  # padded queries gather row 0 — cheap, discarded below
         ids_i = jnp.pad(ids_i, ((0, q_pad), (0, 0)))
@@ -106,16 +156,16 @@ def hop_adc(codes: jax.Array, ids: jax.Array, luts: jax.Array, *,
             pl.BlockSpec((n, m), lambda i, ids: (0, 0)),        # resident
             pl.BlockSpec((block_q, m, k), lambda i, ids: (i, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((block_q, r), lambda i, ids: (i, 0)),
-        scratch_shapes=[pltpu.VMEM((r, m), jnp.int32)],
+        out_specs=pl.BlockSpec((block_q, rp), lambda i, ids: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((rp, m), jnp.int32)],
     )
     out = pl.pallas_call(
-        functools.partial(_hop_adc_kernel, m=m, k=k, r=r, block_q=block_q),
+        functools.partial(_hop_adc_kernel, m=m, k=k, rp=rp, block_q=block_q),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((qp, r), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((qp, rp), jnp.float32),
         interpret=interpret,
     )(ids_i, codes.astype(jnp.int32), luts_f)
-    return out[:q]
+    return out[:q, :r]
 
 
 # --------------------------------------------------------------------------
@@ -123,7 +173,7 @@ def hop_adc(codes: jax.Array, ids: jax.Array, luts: jax.Array, *,
 # --------------------------------------------------------------------------
 
 def _hop_adc_fs_kernel(ids_ref, codes_ref, luts_ref, out_ref, gathered,
-                       *, m: int, mb: int, r: int, block_q: int):
+                       *, m: int, mb: int, rp: int, block_q: int):
     """Packed twin of ``_hop_adc_kernel``: the resident codes block and the
     gather scratch hold PACKED bytes (half the VMEM), the LUT tile is uint8
     (a quarter), nibbles unpack in-register, and the reduce accumulates
@@ -131,20 +181,15 @@ def _hop_adc_fs_kernel(ids_ref, codes_ref, luts_ref, out_ref, gathered,
     q0 = pl.program_id(0) * block_q
 
     def q_body(qi, _):
-        def g_body(ri, __):
-            row = ids_ref[q0 + qi, ri]
-            gathered[pl.ds(ri, 1), :] = codes_ref[pl.ds(row, 1), :]
-            return __
-
-        jax.lax.fori_loop(0, r, g_body, 0)
-        p = gathered[...].astype(jnp.int32)                # (R, Mb) packed
+        _gather_rows(ids_ref, codes_ref, gathered, q0 + qi, rp)
+        p = gathered[...].astype(jnp.int32)                # (R′, Mb) packed
         nib = jnp.stack([p & 0xF, (p >> 4) & 0xF], axis=-1)
-        rows = nib.reshape(r, 2 * mb)[:, :m]               # (R, M)
+        rows = nib.reshape(rp, 2 * mb)[:, :m]              # (R′, M)
         lut = luts_ref[pl.ds(qi, 1)][0].astype(jnp.int32)  # (M, 16)
-        iota = jax.lax.broadcasted_iota(jnp.int32, (r, 16), 1)
-        acc = jnp.zeros((r,), jnp.int32)
+        iota = jax.lax.broadcasted_iota(jnp.int32, (rp, 16), 1)
+        acc = jnp.zeros((rp,), jnp.int32)
         for j in range(m):                                 # M static unroll
-            mask = rows[:, j:j + 1] == iota                # (R, 16)
+            mask = rows[:, j:j + 1] == iota                # (R′, 16)
             acc = acc + jnp.sum(jnp.where(mask, lut[j, :][None, :], 0),
                                 axis=1)
         out_ref[pl.ds(qi, 1), :] = acc[None]
@@ -155,23 +200,27 @@ def _hop_adc_fs_kernel(ids_ref, codes_ref, luts_ref, out_ref, gathered,
 
 @functools.partial(jax.jit, static_argnames=("m", "block_q", "interpret"))
 def hop_adc_fs(packed: jax.Array, ids: jax.Array, luts_u8: jax.Array, *,
-               m: int, block_q: int = 8,
+               m: int, block_q: int | None = None,
                interpret: bool | None = None) -> jax.Array:
-    """Fused per-hop fast-scan ADC: (N, ceil(M/2)) packed codes, (Q, R)
-    ids, (Q, M, 16) u8 LUTs → (Q, R) int32 exact accumulators.
+    """Fused per-hop fast-scan ADC: (N, ceil(M/2)) packed codes, (Q, R′)
+    ids, (Q, M, 16) u8 LUTs → (Q, R′) int32 exact accumulators.
 
     Pure-integer on purpose — the per-query dequant affine is applied by
     ``ops.hop_adc_fs`` so the float op sequence matches the oracle
     ``ref.hop_adc_fs_ref`` exactly on every backend. Canonical dtypes
-    (uint8 packed, int32 ids) are enforced by kernels.ops.
+    (uint8 packed, int32 ids) are enforced by kernels.ops. ``block_q=None``
+    auto-tunes the query tile to the frontier width.
     """
     if interpret is None:
         from repro.kernels.ops import default_interpret
         interpret = default_interpret()
     q, r = ids.shape
     n, mb = packed.shape
+    if block_q is None:
+        block_q = _auto_block_q(r)
     q_pad = (-q) % block_q
-    ids_i = ids.astype(jnp.int32)
+    ids_i = _pad_ids_rows(ids.astype(jnp.int32))
+    rp = ids_i.shape[1]
     luts_q = luts_u8
     if q_pad:  # padded queries gather row 0 — cheap, discarded below
         ids_i = jnp.pad(ids_i, ((0, q_pad), (0, 0)))
@@ -184,14 +233,14 @@ def hop_adc_fs(packed: jax.Array, ids: jax.Array, luts_u8: jax.Array, *,
             pl.BlockSpec((n, mb), lambda i, ids: (0, 0)),       # resident
             pl.BlockSpec((block_q, m, 16), lambda i, ids: (i, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((block_q, r), lambda i, ids: (i, 0)),
-        scratch_shapes=[pltpu.VMEM((r, mb), jnp.uint8)],
+        out_specs=pl.BlockSpec((block_q, rp), lambda i, ids: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((rp, mb), jnp.uint8)],
     )
     out = pl.pallas_call(
-        functools.partial(_hop_adc_fs_kernel, m=m, mb=mb, r=r,
+        functools.partial(_hop_adc_fs_kernel, m=m, mb=mb, rp=rp,
                           block_q=block_q),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((qp, r), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((qp, rp), jnp.int32),
         interpret=interpret,
     )(ids_i, packed, luts_q)
-    return out[:q]
+    return out[:q, :r]

@@ -146,11 +146,14 @@ def hop_gather(codes, luts, *, backend: Backend = "auto", block_q: int = 8):
 
 
 def hop_adc(codes, ids, luts, *, backend: Backend = "auto",
-            block_q: int = 8):
-    """FUSED per-hop beam ADC: (N, M) codes, (Q, R) ids, (Q, M, K) LUTs →
-    (Q, R) f32 — gathers the R neighbor code rows AND reduces them against
-    each query's LUT in one kernel (no (Q, R, M) HBM round-trip). All ids
-    must be valid rows in [0, N)."""
+            block_q: int | None = None):
+    """FUSED per-hop beam ADC: (N, M) codes, (Q, R′) ids, (Q, M, K) LUTs →
+    (Q, R′) f32 — gathers the R′ neighbor code rows AND reduces them against
+    each query's LUT in one kernel (no (Q, R′, M) HBM round-trip). R′ is the
+    beam's frontier width — the graph degree R classically, E·R under
+    multi-expansion (beam_search(expand=E), DESIGN.md §9); ``block_q=None``
+    lets the kernel pick its query tile from R′. All ids must be valid rows
+    in [0, N)."""
     mode = _resolve(backend)
     codes = _codes_i32(codes)
     ids = _codes_i32(ids)
@@ -161,11 +164,12 @@ def hop_adc(codes, ids, luts, *, backend: Backend = "auto",
 
 
 def hop_adc_fs(packed, ids, luts_u8, scale, bias, *,
-               backend: Backend = "auto", block_q: int = 8):
-    """FUSED per-hop FAST-SCAN ADC: (N, ceil(M/2)) packed codes, (Q, R)
-    ids, (Q, M, 16) uint8 LUTs + (Q,) (scale, bias) → (Q, R) f32 — the
+               backend: Backend = "auto", block_q: int | None = None):
+    """FUSED per-hop FAST-SCAN ADC: (N, ceil(M/2)) packed codes, (Q, R′)
+    ids, (Q, M, 16) uint8 LUTs + (Q,) (scale, bias) → (Q, R′) f32 — the
     packed twin of :func:`hop_adc` (same gather fusion, half the resident
-    code bytes, quarter LUT bytes, int32 accumulation)."""
+    code bytes, quarter LUT bytes, int32 accumulation, same frontier-width
+    auto-tuning at ``block_q=None``)."""
     mode = _resolve(backend)
     packed = _codes_u8(packed)
     ids = _codes_i32(ids)

@@ -57,13 +57,17 @@ def hop_adc_ref(codes: jax.Array, ids: jax.Array, luts: jax.Array
                 ) -> jax.Array:
     """Fused per-hop ADC (gather + LUT reduce) — oracle for hop_adc.py.
 
+    Width-agnostic in R′: the semantics contract covers the classic R ≤ 64
+    hop and the multi-expansion frontier R′ = E·R up to 256+ alike
+    (DESIGN.md §9) — one gather + reduce, whatever the row count.
+
     Args:
       codes: (N, M) integer compact codes of the (local) corpus.
-      ids:   (Q, R) int32 candidate rows per query, all in [0, N).
+      ids:   (Q, R′) int32 candidate rows per query, all in [0, N).
       luts:  (Q, M, K) float LUTs, one per query.
 
     Returns:
-      (Q, R) float32: out[q, i] = sum_j luts[q, j, codes[ids[q, i], j]].
+      (Q, R′) float32: out[q, i] = sum_j luts[q, j, codes[ids[q, i], j]].
     """
     return hop_gather_ref(codes[ids.astype(jnp.int32)], luts)
 
@@ -118,16 +122,17 @@ def adc_scan_fs_ref(packed: jax.Array, luts_u8: jax.Array, scale: jax.Array,
 
 def hop_adc_fs_ref(packed: jax.Array, ids: jax.Array, luts_u8: jax.Array,
                    scale: jax.Array, bias: jax.Array) -> jax.Array:
-    """Fused per-hop fast-scan ADC — oracle for hop_adc.py's packed variant.
+    """Fused per-hop fast-scan ADC — oracle for hop_adc.py's packed variant
+    (width-agnostic in R′, like :func:`hop_adc_ref`).
 
     Args:
       packed:  (N, ceil(M/2)) uint8 packed codes of the (local) corpus.
-      ids:     (Q, R) int32 candidate rows per query, all in [0, N).
+      ids:     (Q, R′) int32 candidate rows per query, all in [0, N).
       luts_u8: (Q, M, 16) uint8 quantized LUTs.
       scale/bias: (Q,) float32 per-query dequant affine.
 
     Returns:
-      (Q, R) float32 dequantized distances (exact int32 accumulation).
+      (Q, R′) float32 dequantized distances (exact int32 accumulation).
     """
     q, m, _ = luts_u8.shape
     pair = _pair_lut(luts_u8)                              # (Q, Mb, 256)

@@ -470,7 +470,8 @@ def _rpq_cell(arch_id: str, shape, mesh) -> Cell:
                     (rows, shd.named(mesh, P())), None,
                     meta={"mode": "retrieval", "n_codes": n, "queries": qb})
 
-    if shape.name in ("sharded_graph", "sharded_graph_fs4"):
+    if shape.name in ("sharded_graph", "sharded_graph_fs4",
+                      "sharded_graph_wide"):
         # graph-ROUTED scatter-gather: every shard beam-searches its OWN
         # Vamana subgraph inside shard_map (O(hops·R) distance work per
         # query per shard instead of the adc_bulk scan's O(N/S)); the merge
@@ -478,20 +479,24 @@ def _rpq_cell(arch_id: str, shape, mesh) -> Cell:
         # sharded_graph_topk that ShardedGraphEngine serves with. The fs4
         # variant feeds the fast-scan layout (DESIGN.md §8): 4-bit packed
         # codes at ceil(M/2) bytes/row + a pq.pack.QuantizedLUT pytree.
+        # The _wide variant proves the frontier-batched beam (DESIGN.md §9):
+        # expand=4 over an R=64 subgraph, so every round feeds one
+        # E·R = 256-wide fused hop-ADC call.
         from repro.pq.pack import QuantizedLUT, packed_width
 
         n = _pad_to(dims["n_base"], n_dev)
         qb, kk, hh, rr = (dims["query_batch"], dims["k"], dims["h"],
                           dims["r"])
+        ee = dims.get("expand", 1)
         n_local = n // n_dev
         fs4 = shape.name.endswith("_fs4")
 
         def fn(neighbors, medoids, codes, luts):
-            gids, dists, hops, ndist = se.sharded_graph_topk(
+            gids, dists, hops, ndist, rounds = se.sharded_graph_topk(
                 mesh, all_axes, neighbors, medoids, codes, luts, k=kk,
-                h=hh, max_steps=4 * hh)
+                h=hh, max_steps=4 * hh, expand=ee)
             ids, ds = se.merge_shard_topk(gids, dists, kk)
-            return ids, ds, hops, ndist
+            return ids, ds, hops, ndist, rounds
 
         rep = shd.named(mesh, P())
         if fs4:
@@ -514,8 +519,8 @@ def _rpq_cell(arch_id: str, shape, mesh) -> Cell:
                      luts_spec),
                     (rows3, shards1, rows3, luts_sh), None,
                     meta={"mode": "serve", "n_base": n, "queries": qb,
-                          "beam_h": hh, "graph_r": rr, "layout":
-                          "fs4" if fs4 else "u8"})
+                          "beam_h": hh, "graph_r": rr, "expand": ee,
+                          "layout": "fs4" if fs4 else "u8"})
 
     # serve_1m: scatter-gather ADC + LOCAL exact rerank per shard, then a
     # global top-k merge (DiskANN-style shortlist, faiss-style distribution)

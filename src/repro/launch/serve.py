@@ -90,6 +90,11 @@ def main():
                     "fs4 = fast-scan 4-bit packed codes + quantized uint8 "
                     "LUTs (requires a checkpoint trained with K <= 16)")
     ap.add_argument("--h", type=int, default=32)
+    ap.add_argument("--expand", type=int, default=1,
+                    help="frontier batch size E (DESIGN.md §9): nodes "
+                    "expanded per beam round — each round scores one "
+                    "E*R-wide fused hop-ADC call instead of E narrow ones "
+                    "(the sharded scenario has no beam and ignores it)")
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--graph-r", type=int, default=24)
     ap.add_argument("--graph-l", type=int, default=48)
@@ -160,7 +165,8 @@ def main():
                 print(f"!! expected {ds.dim} floats, got {vals.size}")
                 continue
             t0 = time.perf_counter()
-            res = engine.search(jnp.asarray(vals)[None], k=args.k, h=args.h)
+            res = engine.search(jnp.asarray(vals)[None], k=args.k, h=args.h,
+                                expand=args.expand)
             dt = (time.perf_counter() - t0) * 1e3
             ids = np.asarray(res.ids[0]).tolist()
             print(f"ids={ids} dists={np.asarray(res.dists[0]).round(3).tolist()} "
@@ -168,11 +174,14 @@ def main():
         return
 
     gt, _ = knn_ids(ds.base, ds.queries, args.k)
-    qps, res = measure_qps(lambda q: engine.search(q, k=args.k, h=args.h),
+    qps, res = measure_qps(lambda q: engine.search(q, k=args.k, h=args.h,
+                                                   expand=args.expand),
                            ds.queries)
+    rounds = (f"rounds={float(res.rounds.mean()):.1f} "
+              if res.rounds is not None else "")
     print(f"[serve] {args.scenario}: recall@{args.k}="
           f"{recall_at_k(res.ids, gt, args.k):.4f} qps={qps:.1f} "
-          f"hops={float(res.hops.mean()):.1f} "
+          f"hops={float(res.hops.mean()):.1f} {rounds}"
           f"resident={engine.memory_bytes()/1e6:.1f}MB")
 
 

@@ -1,7 +1,7 @@
 """Batched graph beam search — the routing engine (paper §3.1, Alg. 2 core).
 
-TPU/JAX adaptation (DESIGN.md §3): instead of a scalar CPU heap per query we
-run a *fixed-shape* best-first beam entirely in `jax.lax`:
+TPU/JAX adaptation (DESIGN.md §3, §9): instead of a scalar CPU heap per query
+we run a *fixed-shape* best-first beam entirely in `jax.lax`:
 
 * beam = three (h,) arrays (ids, dists, expanded) kept sorted by merge+top_k;
 * visited set = uint32 bitset (N/32 words) — O(1) membership, vmappable;
@@ -10,14 +10,26 @@ run a *fixed-shape* best-first beam entirely in `jax.lax`:
 * distances come from a pluggable `dist_fn` (ADC LUT gather or exact), so the
   same engine serves PQ-routing and exact-routing.
 
+**Frontier batching** (`expand=E`, DESIGN.md §9): every `while_loop` round
+expands the E best unexpanded beam entries at once — their E·R neighbor ids
+are deduplicated (against each other and the visited bitset; width-adaptive
+first-occurrence, sort-based once the frontier outgrows the all-pairs
+compare's sweet spot) and scored in ONE `dist_fn` call, then merged in a
+single (h + E·R)-wide top-k.
+This is DiskANN's beam-width trick aimed at the TPU's expensive medium: the
+kernel invocation. Sequential trip count drops from `hops` to `rounds`
+(≈ hops/E) and the vmapped lockstep-convergence tail shrinks with it.
+`expand=1` (the default) is bit-identical to the classic one-hop-per-step
+beam. `SearchResult.rounds` reports the measured round count.
+
 `beam_search_trace` additionally records the ranked candidate beam at every
-hop — exactly the paper's Definition 6 routing features.
+round — exactly the paper's Definition 6 routing features.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,12 +42,17 @@ class SearchResult(NamedTuple):
     dists: jax.Array   # (Q, h) f32
     hops: jax.Array    # (Q,) int32 — number of node expansions
     n_dist: jax.Array  # (Q,) int32 — number of distance computations
+    # (Q,) int32 — while_loop rounds (sequential trips). With expand=E each
+    # round expands up to E nodes, so rounds ∈ [ceil(hops/E), hops]; at
+    # expand=1, rounds == hops. None for results that never ran a beam
+    # (hand-built tuples, pure-scan engines).
+    rounds: Optional[jax.Array] = None
 
 
 class Trace(NamedTuple):
-    beam_ids: jax.Array    # (Q, T, h) beam AFTER each hop's merge
+    beam_ids: jax.Array    # (Q, T, h) beam AFTER each round's merge
     beam_dists: jax.Array  # (Q, T, h)
-    hop_valid: jax.Array   # (Q, T) bool — hop actually happened
+    hop_valid: jax.Array   # (Q, T) bool — round actually happened
     result: SearchResult
 
 
@@ -43,42 +60,76 @@ def _bit_get(bits: jax.Array, idx: jax.Array) -> jax.Array:
     return (bits[idx >> 5] >> (idx & 31)) & 1
 
 
-def _scatter_or(bits, word, mask):
-    """OR `mask[i]` into `bits[word[i]]` (duplicate-safe), vectorized.
+# Width where the sort-based first-occurrence overtakes the all-pairs
+# compare. Measured on the CPU CI host (Q=200 vmapped): all-pairs 4.1 ms vs
+# sort 19.5 ms at W=256, 61 ms vs 40 ms at W=512 — quadratic lanes are
+# VPU/SIMD-parallel and beat the sort's large constant until W ≈ 256-512;
+# past that the O(W log W) sort keeps very wide frontiers cheap.
+_SORT_DEDUP_MIN_W = 257
 
-    jnp has no scatter-or primitive, and the old O(R) ``fori_loop`` of
-    read-modify-writes serialized the visited-set update on every hop of
-    every query. Vectorized equivalent: single-bit masks whose (word, bit)
-    pairs are distinct sum to their OR, so deduplicate repeated entries
-    (each mask[i] is one bit — equal masks in the same word are the only
-    collision case), scatter-ADD into a zero array (one XLA scatter), and
-    OR the per-word contribution into ``bits``.
+
+def _first_occurrence(idx: jax.Array, on: jax.Array) -> jax.Array:
+    """True for the FIRST ``on`` lane holding each distinct id, else False.
+
+    Width-adaptive (see ``_SORT_DEDUP_MIN_W``): up to W = 256 the strictly-
+    lower-triangular all-pairs compare (the pre-PR ``_scatter_or`` idiom,
+    O(W²) lanes but embarrassingly lane-parallel); beyond that, stable-
+    argsort the ids (off lanes pushed to +max so they sort last), mark lanes
+    equal to their sorted predecessor as duplicates, and scatter the flags
+    back — O(W log W), so frontier dedup stays cheap however wide
+    ``expand``·R grows.
     """
-    r = word.shape[0]
-    # drop duplicates of an earlier (word, mask) pair — strictly-lower
-    # triangular compare over the ≤R entries, O(R²) lanes, no loop
-    same = (word[:, None] == word[None, :]) & (mask[:, None] == mask[None, :])
-    first = ~jnp.any(same & (jnp.arange(r)[:, None] > jnp.arange(r)[None, :]),
-                     axis=1)
-    contrib = jnp.zeros_like(bits).at[word].add(
-        jnp.where(first, mask, jnp.uint32(0)))
-    return bits | contrib
+    w = idx.shape[0]
+    idx = idx.astype(jnp.int32)
+    if w < _SORT_DEDUP_MIN_W:
+        same = (idx[:, None] == idx[None, :]) & on[None, :]
+        tri = jnp.arange(w)[:, None] > jnp.arange(w)[None, :]
+        return on & ~jnp.any(same & tri, axis=1)
+    key = jnp.where(on, idx, jnp.int32(2**31 - 1))
+    order = jnp.argsort(key)                      # stable → first = lowest lane
+    sk = key[order]
+    first_sorted = jnp.concatenate(
+        [jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+    return jnp.zeros((w,), bool).at[order].set(first_sorted) & on
+
+
+def _scatter_bits(bits: jax.Array, idx: jax.Array, on: jax.Array) -> jax.Array:
+    """OR bit ``idx[i]`` into the bitset for every ``on`` lane.
+
+    Precondition: the ``on`` lanes hold DISTINCT ids. Then every (word, bit)
+    contribution is unique, so a single scatter-ADD into a zero array equals
+    the (missing) scatter-OR primitive.
+    """
+    word = jnp.where(on, idx >> 5, 0)
+    mask = jnp.where(on, jnp.uint32(1) << (idx & 31).astype(jnp.uint32),
+                     jnp.uint32(0))
+    return bits | jnp.zeros_like(bits).at[word].add(mask)
+
+
+def _scatter_or(bits: jax.Array, idx: jax.Array, on: jax.Array) -> jax.Array:
+    """OR bit ``idx[i]`` into the bitset for every ``on`` lane, duplicate-safe
+    (sort-based first-occurrence dedup + one scatter-add)."""
+    return _scatter_bits(bits, idx, _first_occurrence(idx, on))
 
 
 def _single_query(neighbors: jax.Array, entry: jax.Array, qdata,
                   dist_fn: Callable, h: int, max_steps: int,
-                  trace_len: int = 0):
+                  trace_len: int = 0, expand: int = 1):
     """Search for ONE query; built to be vmapped. Returns result (+trace)."""
     n = neighbors.shape[0]
     r = neighbors.shape[1]
-    nwords = (n + 32) // 32 + 1
+    e = max(1, min(expand, h))
+    # sentinel-inclusive id range is [0, n]: word(n) = n//32, so n//32 + 1
+    # words always suffice ((n+31)//32 + 1 is a safe ceiling of that; the
+    # old (n+32)//32 + 1 over-allocated a word for most n)
+    nwords = (n + 31) // 32 + 1
 
     ids0 = jnp.full((h,), n, jnp.int32).at[0].set(entry)
     d_entry = dist_fn(qdata, entry[None])[0]
     dists0 = jnp.full((h,), INF).at[0].set(d_entry)
     exp0 = jnp.ones((h,), bool).at[0].set(False)
-    visited0 = _scatter_or(jnp.zeros((nwords,), jnp.uint32),
-                           (entry >> 5)[None], (jnp.uint32(1) << (entry & 31).astype(jnp.uint32))[None])
+    visited0 = _scatter_or(jnp.zeros((nwords,), jnp.uint32), entry[None],
+                           jnp.ones((1,), bool))
 
     do_trace = trace_len > 0
     tb_ids0 = jnp.full((max(trace_len, 1), h), n, jnp.int32)
@@ -91,31 +142,46 @@ def _single_query(neighbors: jax.Array, entry: jax.Array, qdata,
 
     def body(state):
         step, ids, dists, exp, visited, hops, ndist, tbi, tbd, tbv = state
-        # 1. pick best unexpanded beam entry
+        # 1. pick the best `e` unexpanded beam entries (e=1 ≡ argmin; top_k
+        #    breaks ties toward the lowest index, like argmin)
         cand = jnp.where(~exp & (dists < INF), dists, INF)
-        sel = jnp.argmin(cand)
+        neg_sel, sel = jax.lax.top_k(-cand, e)
+        sel_ok = -neg_sel < INF                    # lanes actually selected
+        # non-ok lanes are already expanded or INF slots (exp True by the
+        # merge invariant below), so the unconditional set is a no-op there
         exp = exp.at[sel].set(True)
-        hops = hops + 1
-        # 2. expand: gather neighbors, drop pads & visited
-        nbr = neighbors[ids[sel]]                       # (R,)
-        valid = nbr < n
-        seen = _bit_get(visited, jnp.where(valid, nbr, 0)).astype(bool)
+        hops = hops + jnp.sum(sel_ok.astype(jnp.int32))
+        # 2. expand the frontier: gather e·R neighbor ids, drop pads,
+        #    visited vertices, and (e>1) cross-row duplicates
+        nbr = neighbors[jnp.where(sel_ok, ids[sel], 0)]      # (e, R)
+        flat = nbr.reshape(e * r)
+        valid = (sel_ok[:, None] & (nbr < n)).reshape(e * r)
+        seen = _bit_get(visited, jnp.where(valid, flat, 0)).astype(bool)
         fresh = valid & ~seen
-        visited = _scatter_or(
-            visited, jnp.where(fresh, nbr, n) >> 5,
-            jnp.where(fresh, jnp.uint32(1) << (nbr & 31).astype(jnp.uint32), jnp.uint32(0)))
-        nd = dist_fn(qdata, jnp.where(fresh, nbr, 0))
+        if e > 1:
+            # two frontier rows may share a neighbor; keep the first lane
+            # (then every fresh id is distinct — _scatter_bits suffices)
+            fresh = _first_occurrence(flat, fresh)
+            visited = _scatter_bits(visited, flat, fresh)
+        else:
+            # legacy semantics exactly: fresh keeps theoretical in-row dups
+            # (scored twice, like the pre-PR beam), dedup only inside the
+            # duplicate-safe scatter — bit-identical regression contract
+            visited = _scatter_or(visited, flat, fresh)
+        # 3. ONE dist_fn call for the whole e·R frontier (on TPU: one fused
+        #    hop-ADC kernel invocation instead of e narrow ones)
+        nd = dist_fn(qdata, jnp.where(fresh, flat, 0))
         nd = jnp.where(fresh, nd, INF)
         ndist = ndist + jnp.sum(fresh.astype(jnp.int32))
-        # 3. merge beam ∪ neighbors, keep top-h by distance
-        all_ids = jnp.concatenate([ids, jnp.where(fresh, nbr, n)])
+        # 4. merge beam ∪ frontier in a single (h + e·R)-wide top-k
+        all_ids = jnp.concatenate([ids, jnp.where(fresh, flat, n)])
         all_d = jnp.concatenate([dists, nd])
-        all_e = jnp.concatenate([exp, jnp.zeros((r,), bool)])
+        all_e = jnp.concatenate([exp, jnp.zeros((e * r,), bool)])
         neg, order = jax.lax.top_k(-all_d, h)
         ids = all_ids[order]
         dists = -neg
         exp = all_e[order] | (dists == INF)
-        # 4. trace the ranked candidate beam (paper Def. 6); steps beyond
+        # 5. trace the ranked candidate beam (paper Def. 6); rounds beyond
         #    trace_len must NOT clobber the last recorded slot
         if do_trace:
             ti = jnp.minimum(step, trace_len - 1)
@@ -129,14 +195,15 @@ def _single_query(neighbors: jax.Array, entry: jax.Array, qdata,
              jnp.int32(0), jnp.int32(1), tb_ids0, tb_d0, tb_v0)
     step, ids, dists, exp, visited, hops, ndist, tbi, tbd, tbv = \
         jax.lax.while_loop(cond, body, state)
-    res = (ids, dists, hops, ndist)
+    res = (ids, dists, hops, ndist, step)
     return res + ((tbi, tbd, tbv) if do_trace else ())
 
 
-@functools.partial(jax.jit, static_argnames=("dist_fn", "h", "max_steps"))
+@functools.partial(jax.jit,
+                   static_argnames=("dist_fn", "h", "max_steps", "expand"))
 def beam_search(neighbors: jax.Array, entry: jax.Array, qdatas,
                 dist_fn: Callable, *, h: int = 32,
-                max_steps: int = 256) -> SearchResult:
+                max_steps: int = 256, expand: int = 1) -> SearchResult:
     """Batched beam search.
 
     Args:
@@ -144,30 +211,45 @@ def beam_search(neighbors: jax.Array, entry: jax.Array, qdatas,
       entry:     () int32 entry vertex (shared) — the PG medoid.
       qdatas:    per-query pytree, leading axis Q (e.g. LUTs (Q, M, K) for ADC
                  routing or raw queries (Q, D) for exact routing).
-      dist_fn:   (qdata, ids (B,)) -> (B,) f32 distances for one query.
+      dist_fn:   (qdata, ids (B,)) -> (B,) f32 distances for one query; B is
+                 the frontier width expand·R.
       h:         beam width (the paper's global candidate set size).
-      max_steps: hop cap (safety for pathological graphs).
+      max_steps: ROUND cap (safety for pathological graphs). With expand=E a
+                 round expands up to E nodes, so the hop budget it implies is
+                 max_steps·E.
+      expand:    frontier batch size E — nodes expanded per round
+                 (DESIGN.md §9). 1 (default) is the classic, bit-identical
+                 best-first beam; larger E trades a few wasted expansions for
+                 ~E× fewer sequential trips.
     """
     entry = jnp.asarray(entry, jnp.int32)
     nq = jax.tree.leaves(qdatas)[0].shape[0]
     entries = jnp.broadcast_to(entry, (nq,)) if entry.ndim == 0 else entry
-    fn = lambda e, qd: _single_query(neighbors, e, qd, dist_fn, h, max_steps)
-    ids, dists, hops, ndist = jax.vmap(fn)(entries, qdatas)
-    return SearchResult(ids, dists, hops, ndist)
+    fn = lambda e, qd: _single_query(neighbors, e, qd, dist_fn, h, max_steps,
+                                     expand=expand)
+    ids, dists, hops, ndist, rounds = jax.vmap(fn)(entries, qdatas)
+    return SearchResult(ids, dists, hops, ndist, rounds)
 
 
-@functools.partial(jax.jit, static_argnames=("dist_fn", "h", "max_steps", "trace_len"))
+@functools.partial(jax.jit, static_argnames=("dist_fn", "h", "max_steps",
+                                             "trace_len", "expand"))
 def beam_search_trace(neighbors: jax.Array, entry: jax.Array, qdatas,
                       dist_fn: Callable, *, h: int = 32, max_steps: int = 256,
-                      trace_len: int = 64) -> Trace:
-    """Beam search that also records the ranked beam at every hop."""
+                      trace_len: int = 64, expand: int = 1) -> Trace:
+    """Beam search that also records the ranked beam at every round.
+
+    ``hop_valid[q, t]`` flags ROUNDS (while_loop trips): with expand=E one
+    valid slot covers up to E expansions, and the flagged prefix counts
+    min(rounds, trace_len) — at expand=1 that is min(hops, trace_len).
+    """
     entry = jnp.asarray(entry, jnp.int32)
     nq = jax.tree.leaves(qdatas)[0].shape[0]
     entries = jnp.broadcast_to(entry, (nq,)) if entry.ndim == 0 else entry
     fn = lambda e, qd: _single_query(neighbors, e, qd, dist_fn, h, max_steps,
-                                     trace_len=trace_len)
-    ids, dists, hops, ndist, tbi, tbd, tbv = jax.vmap(fn)(entries, qdatas)
-    return Trace(tbi, tbd, tbv, SearchResult(ids, dists, hops, ndist))
+                                     trace_len=trace_len, expand=expand)
+    ids, dists, hops, ndist, rounds, tbi, tbd, tbv = \
+        jax.vmap(fn)(entries, qdatas)
+    return Trace(tbi, tbd, tbv, SearchResult(ids, dists, hops, ndist, rounds))
 
 
 # --------------------------------------------------------------------------
@@ -188,10 +270,14 @@ def make_adc_dist_fn(codes: jax.Array, *, packed: bool = False,
     ((M, 16) u8 lut, scale, bias) when ``packed=True``. codes must be
     (N+1, M) sentinel-padded (fs4: (N+1, ceil(M/2)) packed bytes).
 
+    The ids vector is ONE beam frontier — width R classically, E·R under
+    multi-expansion (``beam_search(expand=E)``); the fused kernels auto-tune
+    their query tile to the width (kernels/hop_adc.py).
+
     Backend dispatch for the per-hop hot loop (kernels.ops semantics):
 
     * CPU (``backend="auto"`` off-TPU, or ``"ref"``): a jnp gather — the
-      per-hop read is tiny (R ≤ 64 rows) and XLA fuses it. The fs4 path
+      per-round read is small (≤ E·R rows) and XLA fuses it. The fs4 path
       nibble-unpacks the gathered bytes and accumulates the uint8 LUT in
       int32 before the one affine dequant.
     * TPU (``"auto"`` on-TPU, or ``"pallas"``/``"interpret"``): the fused

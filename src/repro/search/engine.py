@@ -5,6 +5,11 @@ All engines route with PQ-ADC distances. They accept any quantizer exposing
 the (codes, lut_fn) protocol — classic PQ / OPQ (pq.base.QuantizerModel),
 the learned RPQ (core.rpq), or Catalyst.
 
+All beam-routed engines also thread ``expand`` (frontier batching,
+DESIGN.md §9): each beam round expands E nodes through one E·R-wide fused
+hop-ADC call, and results report ``rounds`` (sequential trips) next to
+``hops`` (expansions).
+
 * :class:`InMemoryEngine` — codes + codebook + PG in RAM; next-hop selection
   and the final top-k use ONLY PQ distances (no rerank). Memory = N·M bytes
   + graph.
@@ -111,15 +116,16 @@ class InMemoryEngine:
         self._dist_fns = {}
 
     def search(self, queries: jax.Array, *, k: int = 10, h: int = 32,
-               max_steps: int = 512) -> SearchResult:
+               max_steps: int = 512, expand: int = 1) -> SearchResult:
         luts = self.lut_fn(queries)
         dist_fn = _cached_dist_fn(self._dist_fns, self._codes_p, luts)
         entry = (self.entry_fn(queries) if self.entry_fn is not None
                  else self.graph.medoid)
         res = beam.beam_search(self.graph.neighbors, entry, luts,
-                               dist_fn, h=h, max_steps=max_steps)
+                               dist_fn, h=h, max_steps=max_steps,
+                               expand=expand)
         return SearchResult(res.ids[:, :k], res.dists[:, :k], res.hops,
-                            res.n_dist)
+                            res.n_dist, res.rounds)
 
     def memory_bytes(self) -> int:
         return (self.codes.size * self.codes.dtype.itemsize
@@ -142,7 +148,8 @@ class HybridEngine:
         self._dist_fns = {}
 
     def search(self, queries: jax.Array, *, k: int = 10, h: int = 32,
-               max_steps: int = 512, rerank: int = 0) -> SearchResult:
+               max_steps: int = 512, rerank: int = 0,
+               expand: int = 1) -> SearchResult:
         """rerank = how many beam candidates to re-rank exactly (0 → h)."""
         rerank = rerank or h
         k = min(k, rerank)  # cannot return more results than candidates
@@ -151,13 +158,23 @@ class HybridEngine:
         entry = (self.entry_fn(queries) if self.entry_fn is not None
                  else self.graph.medoid)
         res = beam.beam_search(self.graph.neighbors, entry, luts,
-                               dist_fn, h=h, max_steps=max_steps)
+                               dist_fn, h=h, max_steps=max_steps,
+                               expand=expand)
         ids, dists = _exact_rerank(self._vec_p, queries, res.ids, rerank, k)
-        return SearchResult(ids, dists, res.hops, res.n_dist)
+        return SearchResult(ids, dists, res.hops, res.n_dist, res.rounds)
 
-    def io_time(self, res: SearchResult) -> jax.Array:
-        """Modeled SSD time per query: one 4 KiB block read per expansion."""
-        return res.hops.astype(jnp.float32) * self.io_latency_s
+    def io_time(self, res: SearchResult, *, expand: int = 1) -> jax.Array:
+        """Modeled SSD time per query: one 4 KiB block read per expansion,
+        but with frontier batching (``expand=E``) the ≤E reads of a round
+        are issued CONCURRENTLY — DiskANN's beam-width IO batching — so the
+        wall-clock is ROUNDS × latency, not hops × latency. Uses the
+        measured per-query round count when the result carries one, else
+        the ceil(hops/E) model."""
+        if res.rounds is not None:
+            rounds = res.rounds.astype(jnp.float32)
+        else:
+            rounds = jnp.ceil(res.hops.astype(jnp.float32) / expand)
+        return rounds * self.io_latency_s
 
     def memory_bytes(self) -> int:
         # resident = codes (+ codebook, negligible); graph+vectors on SSD
@@ -321,10 +338,11 @@ class ShardedEngine:
 
     def search(self, queries: jax.Array, *, k: int = 10,
                alive: Optional[Sequence[bool]] = None,
-               h: Optional[int] = None) -> SearchResult:
-        """Exhaustive sharded scan (``h`` accepted for engine-protocol
-        compatibility and ignored — there is no beam)."""
-        del h
+               h: Optional[int] = None,
+               expand: Optional[int] = None) -> SearchResult:
+        """Exhaustive sharded scan (``h``/``expand`` accepted for
+        engine-protocol compatibility and ignored — there is no beam)."""
+        del h, expand
         queries = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
         n_local = self._codes_s.shape[0] // self.n_shards
         kk = min(k, n_local)
@@ -338,7 +356,8 @@ class ShardedEngine:
         scanned = n_local * sum(bool(a) for a in alive)
         return SearchResult(jnp.asarray(ids), jnp.asarray(ds),
                             hops=jnp.zeros((q,), jnp.int32),
-                            n_dist=jnp.full((q,), scanned, jnp.int32))
+                            n_dist=jnp.full((q,), scanned, jnp.int32),
+                            rounds=jnp.zeros((q,), jnp.int32))
 
     def memory_bytes(self) -> int:
         # UNPADDED sizes: what the index costs, not the divisibility slack
@@ -360,14 +379,14 @@ def _shard_codes_pad(codes_l: jax.Array) -> jax.Array:
 
 
 def _local_beam(neighbors_l, medoid_l, codes_l, luts, *, h: int,
-                max_steps: int, backend: str):
+                max_steps: int, backend: str, expand: int):
     """Route over THIS shard's subgraph with ADC distances (u8 or fs4-
     packed layout, decided by the lut type). Returns the raw per-shard
     beam result (local ids)."""
     dist_fn = beam.make_adc_dist_fn(_shard_codes_pad(codes_l),
                                     packed=_is_packed(luts), backend=backend)
     return beam.beam_search(neighbors_l[0], medoid_l[0], luts, dist_fn,
-                            h=h, max_steps=max_steps)
+                            h=h, max_steps=max_steps, expand=expand)
 
 
 def _mask_to_global(ids, dists, *, mesh, axes, n_local: int, n_valid: int):
@@ -382,24 +401,25 @@ def _mask_to_global(ids, dists, *, mesh, axes, n_local: int, n_valid: int):
 
 def _local_graph_topk(neighbors_l, medoid_l, codes_l, luts, *, mesh, axes,
                       n_local: int, k: int, h: int, max_steps: int,
-                      n_valid: int, backend: str):
+                      n_valid: int, backend: str, expand: int):
     """One shard's scatter half: beam-search my subgraph, return LOCAL
     top-k with GLOBAL ids. (1, Q, k) leading shard axis for the gather."""
     res = _local_beam(neighbors_l, medoid_l, codes_l, luts, h=h,
-                      max_steps=max_steps, backend=backend)
+                      max_steps=max_steps, backend=backend, expand=expand)
     gids, d = _mask_to_global(res.ids[:, :k], res.dists[:, :k], mesh=mesh,
                               axes=axes, n_local=n_local, n_valid=n_valid)
-    return gids[None], d[None], res.hops[None], res.n_dist[None]
+    return gids[None], d[None], res.hops[None], res.n_dist[None], \
+        res.rounds[None]
 
 
 def _local_graph_serve(neighbors_l, medoid_l, codes_l, vectors_l, luts,
                        queries, *, mesh, axes, n_local: int, k: int, h: int,
                        shortlist: int, max_steps: int, n_valid: int,
-                       backend: str):
+                       backend: str, expand: int):
     """Scatter half with DiskANN-style local refinement: beam shortlist →
     exact rerank against my vector rows → LOCAL top-k, global ids."""
     res = _local_beam(neighbors_l, medoid_l, codes_l, luts, h=h,
-                      max_steps=max_steps, backend=backend)
+                      max_steps=max_steps, backend=backend, expand=expand)
     cand = jnp.minimum(res.ids[:, :shortlist], n_local)   # clamp sentinel
     vec_p = jnp.concatenate(
         [vectors_l[0], jnp.zeros((1, vectors_l.shape[2]),
@@ -411,14 +431,17 @@ def _local_graph_serve(neighbors_l, medoid_l, codes_l, vectors_l, luts,
     ids = jnp.take_along_axis(cand, order, axis=1)
     gids, d = _mask_to_global(ids, -neg, mesh=mesh, axes=axes,
                               n_local=n_local, n_valid=n_valid)
-    return gids[None], d[None], res.hops[None], res.n_dist[None]
+    return gids[None], d[None], res.hops[None], res.n_dist[None], \
+        res.rounds[None]
 
 
 def sharded_graph_topk(mesh, axes: tuple, neighbors, medoids, codes, luts, *,
                        k: int, h: int = 32, max_steps: int = 512,
-                       n_valid: Optional[int] = None, backend: str = "auto"):
+                       n_valid: Optional[int] = None, backend: str = "auto",
+                       expand: int = 1):
     """Scatter: shard-stacked independent subgraphs × replicated LUTs →
-    per-shard (S, Q, k) GLOBAL ids + ADC distances (+ (S, Q) hops/n_dist).
+    per-shard (S, Q, k) GLOBAL ids + ADC distances (+ (S, Q)
+    hops/n_dist/rounds).
 
     Args:
       mesh/axes:  device mesh and the row-sharding axes (shd.row_axes).
@@ -427,9 +450,12 @@ def sharded_graph_topk(mesh, axes: tuple, neighbors, medoids, codes, luts, *,
       codes:      (S, n_local, M) shard-stacked compact codes.
       luts:       (Q, M, K) query LUTs, replicated to every shard.
       k:          per-shard shortlist size (the gather is O(S·k)/query).
-      h/max_steps: beam width and hop cap of each LOCAL beam search.
+      h/max_steps: beam width and round cap of each LOCAL beam search.
       n_valid:    total REAL rows (masks the last shard's padding).
       backend:    per-hop distance backend (beam.make_adc_dist_fn).
+      expand:     frontier batch size E of each local beam (DESIGN.md §9) —
+                  every round scores one E·R-wide fused hop-ADC call
+                  instead of E narrow ones.
 
     Each shard routes ONLY over its own subgraph — no inter-shard edges, no
     mid-search collectives; the only cross-device traffic is the O(S·Q·k)
@@ -440,13 +466,13 @@ def sharded_graph_topk(mesh, axes: tuple, neighbors, medoids, codes, luts, *,
     body = partial(_local_graph_topk, mesh=mesh, axes=axes, n_local=n_local,
                    k=k, h=h, max_steps=max_steps,
                    n_valid=s * n_local if n_valid is None else n_valid,
-                   backend=backend)
+                   backend=backend, expand=expand)
     return shard_map(
         body, mesh=mesh,
         in_specs=(P(axes, None, None), P(axes), P(axes, None, None),
                   _lut_specs(luts)),
         out_specs=(P(axes, None, None), P(axes, None, None),
-                   P(axes, None), P(axes, None)))(
+                   P(axes, None), P(axes, None), P(axes, None)))(
             neighbors, medoids, codes, luts)
 
 
@@ -454,7 +480,7 @@ def sharded_graph_serve(mesh, axes: tuple, neighbors, medoids, codes,
                         vectors, luts, queries, *, k: int, h: int = 32,
                         shortlist: int = 0, max_steps: int = 512,
                         n_valid: Optional[int] = None,
-                        backend: str = "auto"):
+                        backend: str = "auto", expand: int = 1):
     """Scatter with local exact rerank: like :func:`sharded_graph_topk` but
     every shard re-ranks its beam shortlist against its resident vector
     rows (S, n_local, D) before answering — the DiskANN shortlist pattern
@@ -465,13 +491,13 @@ def sharded_graph_serve(mesh, axes: tuple, neighbors, medoids, codes,
                    n_local=n_local, k=k, h=h,
                    shortlist=min(shortlist or h, h), max_steps=max_steps,
                    n_valid=s * n_local if n_valid is None else n_valid,
-                   backend=backend)
+                   backend=backend, expand=expand)
     return shard_map(
         body, mesh=mesh,
         in_specs=(P(axes, None, None), P(axes), P(axes, None, None),
                   P(axes, None, None), _lut_specs(luts), P(None, None)),
         out_specs=(P(axes, None, None), P(axes, None, None),
-                   P(axes, None), P(axes, None)))(
+                   P(axes, None), P(axes, None), P(axes, None)))(
             neighbors, medoids, codes, vectors, luts, queries)
 
 
@@ -555,40 +581,44 @@ class ShardedGraphEngine:
             self.vectors = self._vec_s
         self._jit_cache = {}
 
-    def _scatter(self, luts, queries, k: int, h: int, max_steps: int):
-        fn = self._jit_cache.get((k, h, max_steps))
+    def _scatter(self, luts, queries, k: int, h: int, max_steps: int,
+                 expand: int):
+        fn = self._jit_cache.get((k, h, max_steps, expand))
         if fn is None:
             if self.vectors is None:
                 fn = jax.jit(lambda nb, md, cd, lu: sharded_graph_topk(
                     self.mesh, self._axes, nb, md, cd, lu, k=k, h=h,
                     max_steps=max_steps, n_valid=self.n,
-                    backend=self.backend))
+                    backend=self.backend, expand=expand))
             else:
                 fn = jax.jit(
                     lambda nb, md, cd, vc, lu, q: sharded_graph_serve(
                         self.mesh, self._axes, nb, md, cd, vc, lu, q, k=k,
                         h=h, shortlist=h, max_steps=max_steps,
-                        n_valid=self.n, backend=self.backend))
-            self._jit_cache[(k, h, max_steps)] = fn
+                        n_valid=self.n, backend=self.backend,
+                        expand=expand))
+            self._jit_cache[(k, h, max_steps, expand)] = fn
         if self.vectors is None:
             return fn(self._nbrs_s, self._medoids_s, self._codes_s, luts)
         return fn(self._nbrs_s, self._medoids_s, self._codes_s, self._vec_s,
                   luts, queries)
 
     def search(self, queries: jax.Array, *, k: int = 10, h: int = 32,
-               max_steps: int = 512,
+               max_steps: int = 512, expand: int = 1,
                alive: Optional[Sequence[bool]] = None) -> SearchResult:
         """Route every query on every (alive) shard, merge the shortlists.
 
         ``hops``/``n_dist`` report the SUM over alive shards — the total
         work the mesh did for the query, comparable to a single-device
-        beam's counters.
+        beam's counters. ``rounds`` reports the MAX over alive shards: the
+        shards route concurrently, so the slowest shard's sequential trip
+        count is the query's latency proxy.
         """
         queries = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
         kk = min(k, h, self.graph.n_local)
         luts = jax.tree.map(jnp.asarray, self.lut_fn(queries))
-        gids, dists, hops, ndist = self._scatter(luts, queries, kk, h,
-                                                 max_steps)
+        gids, dists, hops, ndist, rounds = self._scatter(
+            luts, queries, kk, h, max_steps, expand)
         gids, dists = np.asarray(gids), np.asarray(dists)
         if alive is None:
             alive = [True] * self.n_shards
@@ -596,9 +626,11 @@ class ShardedGraphEngine:
         mask = np.asarray(alive, bool)
         hops = np.asarray(hops)[mask].sum(0)
         ndist = np.asarray(ndist)[mask].sum(0)
+        rounds = np.asarray(rounds)[mask].max(0)
         return SearchResult(jnp.asarray(ids), jnp.asarray(ds),
                             hops=jnp.asarray(hops, jnp.int32),
-                            n_dist=jnp.asarray(ndist, jnp.int32))
+                            n_dist=jnp.asarray(ndist, jnp.int32),
+                            rounds=jnp.asarray(rounds, jnp.int32))
 
     def memory_bytes(self) -> int:
         # UNPADDED codes + per-shard adjacency (+ vectors when resident)

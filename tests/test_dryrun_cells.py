@@ -19,6 +19,7 @@ CELLS = [
     ("deepfm", "serve_p99"),
     ("rpq", "adc_bulk"),
     ("rpq", "sharded_graph_fs4"),   # fast-scan packed serving layout
+    ("rpq", "sharded_graph_wide"),  # frontier-batched beam (expand=4, R'=256)
     ("granite-moe-1b-a400m", "long_500k"),
 ]
 

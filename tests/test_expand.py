@@ -1,0 +1,401 @@
+"""Frontier-batched beam search (DESIGN.md §9).
+
+* ``expand=1`` must be BIT-identical to the pre-PR one-hop-per-step beam —
+  the legacy implementation is embedded below verbatim (old ``_scatter_or``
+  all-pairs dedup, old over-allocated bitset) and compared field by field,
+  trace included.
+* ``expand>1`` must hold recall@10 at an equal n_dist budget through every
+  engine, report ``rounds ∈ [ceil(hops/E), hops]``, and keep the trace's
+  hop_valid prefix semantics (one slot per ROUND).
+* visited-bitset boundary ids {0, 31, 32, n−1, n} exercise the word-count
+  fix ((n+31)//32 + 1 sentinel-inclusive words).
+* ``HybridEngine.io_time`` models per-round batched SSD reads.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.graphs import build_vamana
+from repro.graphs.partition import build_partitioned_vamana
+from repro.pq import base as pqbase
+from repro.pq.pq import train_pq
+from repro.search import beam_search, beam_search_trace
+from repro.search.beam import (INF, _bit_get, _first_occurrence, _scatter_or,
+                               make_adc_dist_fn, make_exact_dist_fn)
+from repro.search.engine import (HybridEngine, InMemoryEngine, SearchResult,
+                                 ShardedEngine, ShardedGraphEngine)
+from repro.search.metrics import recall_at_k
+
+
+# =========================================================================
+# The PRE-PR beam, verbatim (git f4285bc src/repro/search/beam.py) — the
+# regression oracle for expand=1 bit-identity.
+# =========================================================================
+
+def _legacy_scatter_or(bits, word, mask):
+    r = word.shape[0]
+    same = (word[:, None] == word[None, :]) & (mask[:, None] == mask[None, :])
+    first = ~jnp.any(same & (jnp.arange(r)[:, None] > jnp.arange(r)[None, :]),
+                     axis=1)
+    contrib = jnp.zeros_like(bits).at[word].add(
+        jnp.where(first, mask, jnp.uint32(0)))
+    return bits | contrib
+
+
+def _legacy_single_query(neighbors, entry, qdata, dist_fn, h, max_steps,
+                         trace_len=0):
+    n = neighbors.shape[0]
+    r = neighbors.shape[1]
+    nwords = (n + 32) // 32 + 1
+
+    ids0 = jnp.full((h,), n, jnp.int32).at[0].set(entry)
+    d_entry = dist_fn(qdata, entry[None])[0]
+    dists0 = jnp.full((h,), INF).at[0].set(d_entry)
+    exp0 = jnp.ones((h,), bool).at[0].set(False)
+    visited0 = _legacy_scatter_or(
+        jnp.zeros((nwords,), jnp.uint32), (entry >> 5)[None],
+        (jnp.uint32(1) << (entry & 31).astype(jnp.uint32))[None])
+
+    do_trace = trace_len > 0
+    tb_ids0 = jnp.full((max(trace_len, 1), h), n, jnp.int32)
+    tb_d0 = jnp.full((max(trace_len, 1), h), INF)
+    tb_v0 = jnp.zeros((max(trace_len, 1),), bool)
+
+    def cond(state):
+        step, ids, dists, exp, visited, hops, ndist, tbi, tbd, tbv = state
+        return jnp.logical_and(step < max_steps, jnp.any(~exp & (dists < INF)))
+
+    def body(state):
+        step, ids, dists, exp, visited, hops, ndist, tbi, tbd, tbv = state
+        cand = jnp.where(~exp & (dists < INF), dists, INF)
+        sel = jnp.argmin(cand)
+        exp = exp.at[sel].set(True)
+        hops = hops + 1
+        nbr = neighbors[ids[sel]]
+        valid = nbr < n
+        seen = _bit_get(visited, jnp.where(valid, nbr, 0)).astype(bool)
+        fresh = valid & ~seen
+        visited = _legacy_scatter_or(
+            visited, jnp.where(fresh, nbr, n) >> 5,
+            jnp.where(fresh, jnp.uint32(1) << (nbr & 31).astype(jnp.uint32),
+                      jnp.uint32(0)))
+        nd = dist_fn(qdata, jnp.where(fresh, nbr, 0))
+        nd = jnp.where(fresh, nd, INF)
+        ndist = ndist + jnp.sum(fresh.astype(jnp.int32))
+        all_ids = jnp.concatenate([ids, jnp.where(fresh, nbr, n)])
+        all_d = jnp.concatenate([dists, nd])
+        all_e = jnp.concatenate([exp, jnp.zeros((r,), bool)])
+        neg, order = jax.lax.top_k(-all_d, h)
+        ids = all_ids[order]
+        dists = -neg
+        exp = all_e[order] | (dists == INF)
+        if do_trace:
+            ti = jnp.minimum(step, trace_len - 1)
+            in_range = step < trace_len
+            tbi = tbi.at[ti].set(jnp.where(in_range, ids, tbi[ti]))
+            tbd = tbd.at[ti].set(jnp.where(in_range, dists, tbd[ti]))
+            tbv = tbv.at[ti].set(tbv[ti] | in_range)
+        return (step + 1, ids, dists, exp, visited, hops, ndist, tbi, tbd, tbv)
+
+    state = (jnp.int32(0), ids0, dists0, exp0, visited0,
+             jnp.int32(0), jnp.int32(1), tb_ids0, tb_d0, tb_v0)
+    step, ids, dists, exp, visited, hops, ndist, tbi, tbd, tbv = \
+        jax.lax.while_loop(cond, body, state)
+    res = (ids, dists, hops, ndist)
+    return res + ((tbi, tbd, tbv) if do_trace else ())
+
+
+def _legacy_beam_search(neighbors, entry, qdatas, dist_fn, *, h, max_steps,
+                        trace_len=0):
+    entry = jnp.asarray(entry, jnp.int32)
+    nq = jax.tree.leaves(qdatas)[0].shape[0]
+    entries = jnp.broadcast_to(entry, (nq,)) if entry.ndim == 0 else entry
+    fn = jax.jit(jax.vmap(
+        lambda e, qd: _legacy_single_query(neighbors, e, qd, dist_fn, h,
+                                           max_steps, trace_len=trace_len)))
+    return fn(entries, qdatas)
+
+
+# =========================================================================
+# fixtures
+# =========================================================================
+
+@pytest.fixture(scope="module")
+def pq_setup(clustered_data, small_graph):
+    x, q, gt = clustered_data
+    model = train_pq(jax.random.PRNGKey(0), x, 8, 64, iters=8)
+    codes = pqbase.encode(model, x)
+    lut_fn = lambda qq: pqbase.build_lut(model, qq)
+    return dict(x=x, q=q, gt=np.asarray(gt), model=model, codes=codes,
+                lut_fn=lut_fn, graph=small_graph)
+
+
+def _pad(x):
+    return jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)])
+
+
+# =========================================================================
+# expand=1 bit-identity vs the pre-PR beam
+# =========================================================================
+
+def test_expand1_bit_identical_to_legacy_adc(pq_setup):
+    """ids, dists, hops, n_dist all bitwise-equal on the ADC routing path
+    (and rounds == hops at expand=1)."""
+    g, q = pq_setup["graph"], pq_setup["q"]
+    luts = pq_setup["lut_fn"](q)
+    dist_fn = make_adc_dist_fn(_pad(pq_setup["codes"]))
+    new = beam_search(g.neighbors, g.medoid, luts, dist_fn, h=32,
+                      max_steps=512, expand=1)
+    ids, dists, hops, ndist = _legacy_beam_search(
+        g.neighbors, g.medoid, luts, dist_fn, h=32, max_steps=512)
+    np.testing.assert_array_equal(np.asarray(new.ids), np.asarray(ids))
+    np.testing.assert_array_equal(np.asarray(new.dists), np.asarray(dists))
+    np.testing.assert_array_equal(np.asarray(new.hops), np.asarray(hops))
+    np.testing.assert_array_equal(np.asarray(new.n_dist), np.asarray(ndist))
+    np.testing.assert_array_equal(np.asarray(new.rounds), np.asarray(hops))
+
+
+def test_expand1_bit_identical_to_legacy_exact(clustered_data, small_graph):
+    """Same bit-identity on the exact-distance routing path."""
+    x, q, _ = clustered_data
+    g = small_graph
+    dist_fn = make_exact_dist_fn(_pad(x))
+    new = beam_search(g.neighbors, g.medoid, q, dist_fn, h=16, max_steps=512)
+    ids, dists, hops, ndist = _legacy_beam_search(
+        g.neighbors, g.medoid, q, dist_fn, h=16, max_steps=512)
+    np.testing.assert_array_equal(np.asarray(new.ids), np.asarray(ids))
+    np.testing.assert_array_equal(np.asarray(new.dists), np.asarray(dists))
+    np.testing.assert_array_equal(np.asarray(new.hops), np.asarray(hops))
+    np.testing.assert_array_equal(np.asarray(new.n_dist), np.asarray(ndist))
+
+
+def test_expand1_trace_bit_identical_to_legacy(clustered_data, small_graph):
+    """The recorded trace (beam_ids/beam_dists/hop_valid) is unchanged."""
+    x, q, _ = clustered_data
+    g = small_graph
+    dist_fn = make_exact_dist_fn(_pad(x))
+    tr = beam_search_trace(g.neighbors, g.medoid, q[:16], dist_fn, h=8,
+                           trace_len=16, max_steps=512, expand=1)
+    ids, dists, hops, ndist, tbi, tbd, tbv = _legacy_beam_search(
+        g.neighbors, g.medoid, q[:16], dist_fn, h=8, max_steps=512,
+        trace_len=16)
+    np.testing.assert_array_equal(np.asarray(tr.beam_ids), np.asarray(tbi))
+    np.testing.assert_array_equal(np.asarray(tr.beam_dists), np.asarray(tbd))
+    np.testing.assert_array_equal(np.asarray(tr.hop_valid), np.asarray(tbv))
+    np.testing.assert_array_equal(np.asarray(tr.result.ids), np.asarray(ids))
+
+
+# =========================================================================
+# expand>1 semantics
+# =========================================================================
+
+@pytest.mark.parametrize("e", [2, 4])
+def test_expand_rounds_bounds_and_recall(pq_setup, e):
+    """rounds ∈ [ceil(hops/E), hops], and recall@10 within 2 points of the
+    classic beam at an EQUAL n_dist budget (the E>1 run's round cap is set
+    so its expansion budget matches the E=1 run's measured hops)."""
+    g, q, gt = pq_setup["graph"], pq_setup["q"], pq_setup["gt"]
+    luts = pq_setup["lut_fn"](q)
+    dist_fn = make_adc_dist_fn(_pad(pq_setup["codes"]))
+    r1 = beam_search(g.neighbors, g.medoid, luts, dist_fn, h=32,
+                     max_steps=512, expand=1)
+    budget = int(np.ceil(float(np.asarray(r1.hops).max()) / e))
+    re = beam_search(g.neighbors, g.medoid, luts, dist_fn, h=32,
+                     max_steps=budget, expand=e)
+    hops = np.asarray(re.hops)
+    rounds = np.asarray(re.rounds)
+    assert (rounds <= hops).all()
+    assert (rounds >= np.ceil(hops / e) - 1e-9).all()
+    rec1 = recall_at_k(r1.ids, gt, 10)
+    rece = recall_at_k(re.ids, gt, 10)
+    assert rece >= rec1 - 0.02, (rece, rec1)
+
+
+def test_expand_trace_hop_valid_counts_rounds(pq_setup):
+    """Under multi-expansion hop_valid flags ROUNDS: a prefix with no
+    holes, exactly min(rounds, trace_len) slots, result unchanged vs the
+    untraced search."""
+    g, q = pq_setup["graph"], pq_setup["q"]
+    luts = jax.tree.map(lambda a: a[:16], pq_setup["lut_fn"](q))
+    dist_fn = make_adc_dist_fn(_pad(pq_setup["codes"]))
+    kw = dict(h=16, max_steps=512, expand=4)
+    tr = beam_search_trace(g.neighbors, g.medoid, luts, dist_fn,
+                           trace_len=8, **kw)
+    plain = beam_search(g.neighbors, g.medoid, luts, dist_fn, **kw)
+    hv = np.asarray(tr.hop_valid)
+    rounds = np.asarray(tr.result.rounds)
+    hops = np.asarray(tr.result.hops)
+    for qi in range(hv.shape[0]):
+        nv = hv[qi].sum()
+        assert nv == min(rounds[qi], hv.shape[1])
+        assert hv[qi, :nv].all() and not hv[qi, nv:].any()
+        assert rounds[qi] < hops[qi]  # E=4 really batched some rounds
+    np.testing.assert_array_equal(np.asarray(tr.result.ids),
+                                  np.asarray(plain.ids))
+    np.testing.assert_array_equal(np.asarray(tr.result.rounds),
+                                  np.asarray(plain.rounds))
+
+
+def test_expand_caps_at_beam_width(pq_setup):
+    """expand > h must clamp (can never select more than h entries)."""
+    g, q = pq_setup["graph"], pq_setup["q"]
+    luts = jax.tree.map(lambda a: a[:8], pq_setup["lut_fn"](q))
+    dist_fn = make_adc_dist_fn(_pad(pq_setup["codes"]))
+    big = beam_search(g.neighbors, g.medoid, luts, dist_fn, h=8,
+                      max_steps=256, expand=64)
+    capped = beam_search(g.neighbors, g.medoid, luts, dist_fn, h=8,
+                         max_steps=256, expand=8)
+    np.testing.assert_array_equal(np.asarray(big.ids), np.asarray(capped.ids))
+
+
+# =========================================================================
+# engines: expand threads end to end
+# =========================================================================
+
+@pytest.mark.parametrize("e", [2, 4])
+def test_inmemory_and_hybrid_recall_no_worse(pq_setup, e):
+    x, q, gt = pq_setup["x"], pq_setup["q"], pq_setup["gt"]
+    mem = InMemoryEngine(pq_setup["graph"], pq_setup["codes"],
+                         pq_setup["lut_fn"])
+    r1 = mem.search(q, k=10, h=32, expand=1)
+    re = mem.search(q, k=10, h=32, expand=e)
+    assert recall_at_k(re.ids, gt, 10) >= recall_at_k(r1.ids, gt, 10) - 0.02
+    assert float(np.asarray(re.rounds).mean()) < \
+        float(np.asarray(r1.rounds).mean())
+    hyb = HybridEngine(pq_setup["graph"], pq_setup["codes"],
+                       pq_setup["lut_fn"], vectors=x)
+    h1 = hyb.search(q, k=10, h=32, expand=1)
+    he = hyb.search(q, k=10, h=32, expand=e)
+    assert recall_at_k(he.ids, gt, 10) >= recall_at_k(h1.ids, gt, 10) - 0.02
+
+
+def test_sharded_graph_engine_expand(pq_setup):
+    """Single-shard ShardedGraphEngine threads expand through shard_map and
+    reports summed hops / max rounds."""
+    x, q, gt = pq_setup["x"], pq_setup["q"], pq_setup["gt"]
+    pg = build_partitioned_vamana(jax.random.PRNGKey(1), x, 1, r=16, l=32)
+    eng = ShardedGraphEngine(pg, pq_setup["codes"], pq_setup["lut_fn"])
+    r1 = eng.search(q, k=10, h=32, expand=1)
+    r4 = eng.search(q, k=10, h=32, expand=4)
+    assert recall_at_k(r4.ids, gt, 10) >= recall_at_k(r1.ids, gt, 10) - 0.02
+    assert (np.asarray(r4.rounds) <= np.asarray(r4.hops)).all()
+    assert (np.asarray(r4.rounds) >=
+            np.ceil(np.asarray(r4.hops) / 4) - 1e-9).all()
+    np.testing.assert_array_equal(np.asarray(r1.rounds),
+                                  np.asarray(r1.hops))
+
+
+def test_sharded_scan_engine_ignores_expand(pq_setup):
+    """ShardedEngine has no beam: expand is accepted and a no-op."""
+    q = pq_setup["q"]
+    eng = ShardedEngine(pq_setup["codes"], pq_setup["lut_fn"])
+    a = eng.search(q, k=10)
+    b = eng.search(q, k=10, expand=4)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    assert (np.asarray(b.rounds) == 0).all()
+
+
+# =========================================================================
+# HybridEngine.io_time: per-round batched SSD reads
+# =========================================================================
+
+def test_hybrid_io_time_rounds_model(pq_setup):
+    x, q = pq_setup["x"], pq_setup["q"]
+    hyb = HybridEngine(pq_setup["graph"], pq_setup["codes"],
+                       pq_setup["lut_fn"], vectors=x)
+    res = hyb.search(q, k=10, h=32, expand=4)
+    hops = np.asarray(res.hops, np.float32)
+    rounds = np.asarray(res.rounds, np.float32)
+    io = np.asarray(hyb.io_time(res))
+    # measured rounds drive the model: E concurrent reads per round
+    np.testing.assert_allclose(io, rounds * hyb.io_latency_s, rtol=1e-6)
+    assert (io <= hops * hyb.io_latency_s + 1e-12).all()
+    assert (rounds >= np.ceil(hops / 4) - 1e-9).all()
+    # both counters reported so QPS projections stay honest
+    assert res.hops.shape == res.rounds.shape
+    # a result without a round count falls back to the ceil(hops/E) model
+    bare = SearchResult(res.ids, res.dists, res.hops, res.n_dist)
+    io_bare = np.asarray(hyb.io_time(bare, expand=4))
+    np.testing.assert_allclose(io_bare,
+                               np.ceil(hops / 4) * hyb.io_latency_s,
+                               rtol=1e-6)
+    # expand=1: one read per expansion, the pre-PR model
+    r1 = hyb.search(q, k=10, h=32, expand=1)
+    np.testing.assert_allclose(np.asarray(hyb.io_time(r1)),
+                               np.asarray(r1.hops) * hyb.io_latency_s,
+                               rtol=1e-6)
+
+
+# =========================================================================
+# visited bitset: word count + boundary ids
+# =========================================================================
+
+@pytest.mark.parametrize("n", [31, 32, 33, 64, 95, 100])
+def test_scatter_or_boundary_ids(n):
+    """ids {0, 31, 32, n−1, n} must all land in allocated words — including
+    the sentinel n, the id the (n+31)//32 + 1 sizing must still cover."""
+    nwords = (n + 31) // 32 + 1
+    cases = sorted({0, min(31, n), min(32, n), n - 1, n})
+    idx = jnp.asarray(cases, jnp.int32)
+    bits = _scatter_or(jnp.zeros((nwords,), jnp.uint32), idx,
+                       jnp.ones((len(cases),), bool))
+    got = np.asarray(_bit_get(bits, idx))
+    assert (got == 1).all()
+    # exactly those bits set — nothing carried into a neighbor bit/word
+    popcount = np.unpackbits(np.asarray(bits).view(np.uint8)).sum()
+    assert popcount == len(cases)
+
+
+def test_scatter_or_duplicates_sort_dedup():
+    """Duplicate ids in one call must OR, not carry into neighbor bits —
+    the sort-based first-occurrence dedup replacing the O(W²) compare."""
+    n = 100
+    nwords = (n + 31) // 32 + 1
+    idx = jnp.asarray([5, 5, 5, 37, 37, 5, 99, 0, 0, 99], jnp.int32)
+    on = jnp.ones((10,), bool)
+    bits = np.asarray(_scatter_or(jnp.zeros((nwords,), jnp.uint32), idx, on))
+    want = np.zeros((nwords,), np.uint32)
+    for i in {5, 37, 99, 0}:
+        want[i // 32] |= np.uint32(1) << (i % 32)
+    np.testing.assert_array_equal(bits, want)
+    # masked lanes contribute nothing
+    bits2 = np.asarray(_scatter_or(jnp.zeros((nwords,), jnp.uint32), idx,
+                                   jnp.zeros((10,), bool)))
+    assert (bits2 == 0).all()
+
+
+def test_first_occurrence_matches_numpy():
+    rng = np.random.default_rng(0)
+    for w in (1, 7, 64, 256):
+        idx = rng.integers(0, 40, (w,)).astype(np.int32)
+        on = rng.random(w) < 0.7
+        got = np.asarray(_first_occurrence(jnp.asarray(idx),
+                                           jnp.asarray(on)))
+        seen = set()
+        want = np.zeros((w,), bool)
+        for i in range(w):
+            if on[i] and idx[i] not in seen:
+                want[i] = True
+                seen.add(idx[i])
+        np.testing.assert_array_equal(got, want)
+
+
+def test_beam_on_word_boundary_corpus():
+    """A corpus whose size straddles a 32-bit word boundary routes
+    correctly (the old sizing masked off-by-one errors with slack)."""
+    rng = np.random.default_rng(5)
+    for n in (32, 33, 64):
+        x = jnp.asarray(rng.normal(size=(n, 8)).astype(np.float32))
+        g = build_vamana(jax.random.PRNGKey(0), x, r=8, l=16)
+        res = beam_search(g.neighbors, g.medoid, x[:4],
+                          make_exact_dist_fn(_pad(x)), h=n, max_steps=4 * n)
+        ids = np.asarray(res.ids)
+        # every query must find itself at distance 0
+        assert (ids[:, 0] == np.arange(4)).all()
+        for e in (2, 4):
+            re = beam_search(g.neighbors, g.medoid, x[:4],
+                             make_exact_dist_fn(_pad(x)), h=n,
+                             max_steps=4 * n, expand=e)
+            assert (np.asarray(re.ids)[:, 0] == np.arange(4)).all()
