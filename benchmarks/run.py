@@ -26,7 +26,7 @@ import traceback
 
 def sections():
     from benchmarks import kernel_adc, paper_tables as pt
-    from benchmarks import sharded_serving
+    from benchmarks import sharded_serving, streaming
 
     return {
         "kernels": kernel_adc.run,
@@ -42,6 +42,9 @@ def sections():
         # run `python -m benchmarks.sharded_serving` standalone for a
         # forced 4-shard host split
         "sharded": sharded_serving.run,
+        # streaming mutable index under churn (DESIGN.md §10): recall/QPS
+        # at 0/5/10% inserts+deletes, before and after consolidation
+        "streaming": streaming.run,
     }
 
 
@@ -57,9 +60,11 @@ def _git_sha() -> str:
 
 def _parse_derived(derived: str) -> dict:
     """'gcodes_per_s=0.98 speedup_vs_f32=2.1' → typed dict (floats where
-    they parse, strings otherwise — e.g. recall curves stay strings)."""
+    they parse, strings otherwise — e.g. recall curves stay strings).
+    Accepts space, comma and semicolon separators (the serving sections
+    emit 'recall=…;qps=…' rows)."""
     out = {}
-    for tok in derived.replace(",", " ").split():
+    for tok in derived.replace(",", " ").replace(";", " ").split():
         if "=" not in tok:
             continue
         key, val = tok.split("=", 1)

@@ -1,0 +1,89 @@
+"""Streaming index under churn: QPS and recall@10 vs churn fraction.
+
+The numbers behind DESIGN.md §10's claim that live mutation is nearly free
+until consolidation folds it away: for churn fractions 0%, 5% and 10%
+(that fraction of the corpus inserted AND the same count of base rows
+deleted), measure the StreamingEngine's QPS and recall@10 against the LIVE
+post-churn corpus — before consolidation (tombstoned beam + delta scan)
+and after (next-generation compacted graph) — plus the consolidation wall
+time.
+
+Run as a section of the driver (emits BENCH_streaming.json via --json-dir,
+uploaded by the CI bench job):
+
+    PYTHONPATH=src python -m benchmarks.run --only streaming
+"""
+
+from __future__ import annotations
+
+
+def run():
+    import time
+
+    import numpy as np
+    import jax
+
+    from benchmarks import common as C
+    from repro.index import BaseSegment, StreamingEngine
+    from repro.pq import train_pq
+    from repro.search.metrics import (live_ground_truth, measure_qps,
+                                      recall_at_k)
+
+    ds = C.dataset()
+    # streaming sandbox: a slice of the bench corpus keeps the three churn
+    # points + consolidations CI-sized; the held-out tail is the insert pool
+    n0 = min(8000, ds.base.shape[0] * 4 // 5)
+    base_x = np.asarray(ds.base[:n0])
+    pool = np.asarray(ds.base[n0:])
+    queries = ds.queries
+    k, h = 10, 32
+
+    model = train_pq(jax.random.PRNGKey(5), ds.train, *C.KM, iters=10)
+    seg0 = BaseSegment.build(jax.random.PRNGKey(6), base_x, model,
+                             r=24, l=48, batch=2048)
+    rows = []
+
+    def evaluate(tag, engine, live, all_x, extra=""):
+        gt_g = live_ground_truth(all_x, np.flatnonzero(live), queries, k)
+        qps, res = measure_qps(
+            lambda q: engine.search(q, k=k, h=h), queries, repeats=2)
+        rec = recall_at_k(res.ids, gt_g, k)
+        rows.append((f"streaming/{tag}", 1e6 / max(qps, 1e-9),
+                     f"recall={rec:.3f};qps={qps:.1f};live={engine.n_live};"
+                     f"gen={engine.generation}{extra}"))
+
+    for frac in (0.0, 0.05, 0.10):
+        nc = int(n0 * frac)
+        engine = StreamingEngine(seg0, model,
+                                 delta_capacity=max(nc, 1))
+        live = np.zeros(n0 + max(nc, 1), bool)
+        live[:n0] = True
+        all_x = np.concatenate([base_x, pool[:nc]]) if nc else base_x
+        if nc:
+            gids = engine.insert(pool[:nc])
+            live[gids] = True
+            dead = np.random.default_rng(13).choice(n0, nc, replace=False)
+            engine.delete(dead)
+            live[dead] = False
+        tag = f"churn{int(frac * 100)}"
+        evaluate(f"{tag}/pre", engine, live, all_x)
+        t0 = time.time()
+        stats = engine.consolidate()
+        wall = time.time() - t0
+        old_live = np.flatnonzero(live)
+        live2 = np.zeros(stats["n"] + max(nc, 1), bool)
+        live2[stats["old2new"][old_live]] = True
+        evaluate(f"{tag}/post_consolidate", engine, live2,
+                 np.asarray(engine.base.vectors),
+                 extra=f";consolidate_s={wall:.2f}")
+    return rows
+
+
+def main():
+    print("name,us_per_call,derived")
+    for r in run():
+        print(f"{r[0]},{r[1]:.2f},{r[2]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -15,11 +15,8 @@ import jax.numpy as jnp
 
 from repro.graphs.adjacency import Graph, find_medoid
 from repro.graphs.prune import prune_from_vectors
+from repro.kernels.ops import pad_sentinel_row as _pad_vectors
 from repro.search.beam import beam_search, make_exact_dist_fn
-
-
-def _pad_vectors(x: jax.Array) -> jax.Array:
-    return jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)], axis=0)
 
 
 def build_vamana(key: jax.Array, x: jax.Array, *, r: int = 32, l: int = 64,

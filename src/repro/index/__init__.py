@@ -1,0 +1,21 @@
+"""Streaming mutable index (DESIGN.md §10): a frozen generation-numbered
+base segment + bounded append-only delta + tombstone bitset, served live by
+:class:`StreamingEngine` and folded together by :func:`consolidate`.
+
+Public surface:
+
+* :mod:`repro.index.segment` — :class:`BaseSegment` (frozen graph + codes +
+  vectors), :class:`Tombstones`, atomic snapshot save/load.
+* :mod:`repro.index.delta`   — :class:`DeltaSegment` bounded append-only
+  rows with greedy links; :class:`DeltaFullError` on overflow.
+* :mod:`repro.index.engine`  — :class:`StreamingEngine`: the other engines'
+  ``search()`` protocol plus ``insert`` / ``delete`` / ``consolidate``.
+* :mod:`repro.index.consolidate` — compaction + graph repair + delta
+  fold-in + generation bump.
+"""
+from repro.index.consolidate import consolidate  # noqa: F401
+from repro.index.delta import DeltaFullError, DeltaSegment  # noqa: F401
+from repro.index.engine import StreamingEngine  # noqa: F401
+from repro.index.segment import (  # noqa: F401
+    BaseSegment, Tombstones, encode_codes, load_segment, save_segment,
+)

@@ -1,0 +1,174 @@
+"""Consolidation: fold delta + tombstones into the next base generation.
+
+The invariants (DESIGN.md §10):
+
+* **compaction** — tombstoned rows are dropped and survivors renumber
+  densely (base survivors first, in order; live delta rows after), so the
+  new segment has no dead slots and the tombstone bitset restarts empty.
+* **graph repair** — a surviving base row that lost an edge to a dropped
+  neighbor re-prunes over that neighbor's own surviving out-edges (the
+  FreshDiskANN delete-repair rule: route-through candidates replace the
+  dead hop), so connectivity does not decay across generations.
+* **delta fold-in** — each live delta vertex is alpha-pruned
+  (graphs/prune.py RobustPrune) into the base neighborhoods from an exact
+  candidate set (plus its greedy delta links), and its chosen neighbors
+  re-prune with the new vertex as a candidate (reverse edges) — the same
+  two-sided insert Vamana's builder does, one batch instead of a rebuild.
+* **atomicity** — the new segment snapshots through dist/checkpoint.py's
+  write-tmp-then-rename before the engine swaps generations, so a crash
+  mid-consolidation leaves the previous generation restorable.
+
+Candidate sets for the fold-in use exact distances over the full corpus
+(`graphs/knn.knn_ids`) — right for the bounded deltas this subsystem
+targets; a billion-row segment would swap in a beam-search candidate pass.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.adjacency import Graph, find_medoid
+from repro.graphs.knn import knn_ids
+from repro.graphs.prune import prune_from_vectors
+from repro.index.segment import BaseSegment, save_segment
+from repro.kernels import ops as kops
+
+
+def _batched_prune(xp, node_ids: np.ndarray, cand: np.ndarray, alpha: float,
+                   r: int, sentinel: int, batch: int = 512) -> np.ndarray:
+    """prune_from_vectors over row batches, padded to a fixed batch shape so
+    the jitted RobustPrune traces once per (batch, C) — not per remainder."""
+    n = len(node_ids)
+    pad = (-n) % batch
+    ids_p = np.concatenate([node_ids, np.repeat(node_ids[:1], pad)])
+    cand_p = np.concatenate([cand, np.repeat(cand[:1], pad, axis=0)])
+    out = np.empty((len(ids_p), r), np.int32)
+    for s in range(0, len(ids_p), batch):
+        out[s:s + batch] = np.asarray(prune_from_vectors(
+            xp, jnp.asarray(ids_p[s:s + batch], jnp.int32),
+            jnp.asarray(cand_p[s:s + batch], jnp.int32),
+            alpha, r, sentinel))
+    return out[:n]
+
+
+def _compact_valid_first(cand: np.ndarray, width: int,
+                         sentinel: int) -> np.ndarray:
+    """(B, C) candidates with -1 invalids → (B, width): valid entries moved
+    to the front (stable), truncated, invalids as ``sentinel``."""
+    order = np.argsort(cand < 0, axis=1, kind="stable")
+    packed = np.take_along_axis(cand, order, axis=1)[:, :width]
+    return np.where(packed >= 0, packed, sentinel).astype(np.int32)
+
+
+def consolidate(engine, *, key: Optional[jax.Array] = None,
+                alpha: float = 1.2, l: int = 48,
+                ckpt_dir: Optional[str] = None,
+                keep: Optional[int] = None) -> dict:
+    """Compact ``engine`` (a :class:`repro.index.engine.StreamingEngine`)
+    into a fresh base generation and swap it in.
+
+    Returns a stats dict with ``old2new`` — the (n_base + delta_capacity,)
+    global-id remap (-1 = dropped) callers need to translate ids held
+    across the consolidation.
+    """
+    del key  # deterministic: candidate sets are exact, no sampling
+    base, delta, tombs = engine.base, engine.delta, engine.tombstones
+    n_base, c_occ = base.n, delta.count
+    r = base.graph.degree
+
+    live_b = ~tombs.contains(np.arange(n_base))
+    live_d = ~tombs.contains(n_base + np.arange(c_occ))
+    nb = int(live_b.sum())
+    nd = int(live_d.sum())
+    n_new = nb + nd
+    if n_new == 0:
+        raise ValueError("consolidate: every row is tombstoned — an empty "
+                         "segment cannot serve; rebuild from new data")
+
+    # ---- compaction: dense renumbering, gathered vectors + codes ---------
+    old2new = np.full((n_base + delta.capacity,), -1, np.int64)
+    old2new[np.flatnonzero(live_b)] = np.arange(nb)
+    old2new[n_base + np.flatnonzero(live_d)] = nb + np.arange(nd)
+    vec_new = np.concatenate([np.asarray(base.vectors)[live_b],
+                              delta.vectors[:c_occ][live_d]])
+    codes_new = np.concatenate([np.asarray(base.codes)[live_b],
+                                delta.codes[:c_occ][live_d]])
+    xp = kops.pad_sentinel_row(jnp.asarray(vec_new, jnp.float32))
+
+    # ---- surviving base adjacency, dead edges repaired -------------------
+    nbrs = np.full((n_new, r), n_new, np.int32)
+    onb = np.asarray(base.graph.neighbors)
+    rows = np.flatnonzero(live_b)                    # old id of new row i
+    if nb:
+        onbr = onb[rows]                             # (nb, R), sentinel n_base
+        valid = onbr < n_base
+        safe = np.where(valid, onbr, 0)
+        mapped = np.where(valid, old2new[safe], -1)  # -1: dead or sentinel
+        nbrs[:nb] = np.where(mapped >= 0, mapped, n_new)
+
+        lost = valid & (old2new[safe] < 0)           # edges into dead rows
+        repair = np.flatnonzero(lost.any(axis=1))    # new ids (order kept)
+        if repair.size:
+            # 2-hop through each dead neighbor: its surviving out-edges
+            d_ids = np.where(lost[repair], safe[repair], 0)     # (B, R) old
+            two = onb[d_ids]                                    # (B, R, R)
+            tv = (two < n_base) & lost[repair][:, :, None]
+            tmapped = np.where(tv, old2new[np.where(tv, two, 0)], -1)
+            cand2 = _compact_valid_first(
+                tmapped.reshape(len(repair), -1), 3 * r, n_new)
+            cand = np.concatenate([nbrs[repair], cand2], axis=1)
+            cand[cand == repair[:, None]] = n_new    # no self-edges
+            nbrs[repair] = _batched_prune(xp, repair.astype(np.int32), cand,
+                                          alpha, r, n_new)
+
+    # ---- fold live delta vertices into the base neighborhoods ------------
+    if nd:
+        own = (nb + np.arange(nd)).astype(np.int32)
+        dvec = delta.vectors[:c_occ][live_d]
+        lc = min(max(l, r + 1), n_new)
+        cand_knn, _ = knn_ids(jnp.asarray(vec_new), jnp.asarray(dvec), lc)
+        cand_knn = np.asarray(cand_knn).astype(np.int64)   # includes self
+        dnbr = delta.neighbors[:c_occ][live_d]             # greedy links
+        dvalid = dnbr < delta.capacity
+        dmapped = np.where(dvalid,
+                           old2new[n_base + np.where(dvalid, dnbr, 0)], -1)
+        cand = np.concatenate([cand_knn, dmapped], axis=1)
+        cand[cand == own[:, None]] = -1
+        cand = _compact_valid_first(cand, cand.shape[1], n_new)
+        nbrs[own] = _batched_prune(xp, own, cand, alpha, r, n_new)
+
+        # reverse edges: chosen neighbors re-prune with the new vertex
+        src = np.repeat(own, r)
+        dst = nbrs[own].reshape(-1)
+        m = dst < n_new
+        src, dst = src[m], dst[m]
+        if dst.size:
+            order = np.argsort(dst, kind="stable")
+            dst_s, src_s = dst[order], src[order]
+            uniq, starts = np.unique(dst_s, return_index=True)
+            counts = np.diff(np.append(starts, len(dst_s)))
+            rev = np.full((len(uniq), r), n_new, np.int32)
+            for t in range(len(uniq)):
+                cnt = min(int(counts[t]), r)
+                rev[t, :cnt] = src_s[starts[t]:starts[t] + cnt]
+            cand = np.concatenate([nbrs[uniq], rev], axis=1)
+            cand[cand == uniq[:, None]] = n_new
+            nbrs[uniq] = _batched_prune(xp, uniq.astype(np.int32), cand,
+                                        alpha, r, n_new)
+
+    # ---- new generation: medoid, snapshot, swap --------------------------
+    medoid = find_medoid(jnp.asarray(vec_new))
+    seg = BaseSegment(
+        graph=Graph(neighbors=jnp.asarray(nbrs),
+                    medoid=jnp.asarray(medoid, jnp.int32)),
+        codes=jnp.asarray(codes_new), vectors=jnp.asarray(vec_new),
+        layout=base.layout, generation=base.generation + 1)
+    if ckpt_dir:
+        save_segment(ckpt_dir, seg, keep=keep)
+    engine._install(seg)
+    return {"generation": seg.generation, "n": n_new,
+            "dropped": int(tombs.count), "folded": nd, "old2new": old2new}

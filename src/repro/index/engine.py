@@ -1,0 +1,251 @@
+"""StreamingEngine — live serving over a mutable (base + delta) index.
+
+The query path (DESIGN.md §10) is two arms merged by one top-k:
+
+* **base arm** — the ordinary batched beam search over the frozen base
+  graph, with the tombstone bitset threaded through ``beam_search`` as a
+  TRACED argument: deleted vertices rank +inf, are never expanded, and are
+  scrubbed from the returned beam. Deletes therefore cost zero recompiles.
+* **delta arm** — one bulk ADC scan over the (bounded, fixed-shape) delta
+  codes; unoccupied slots and tombstoned delta rows mask to +inf. No graph
+  is consulted: the delta is small by construction.
+
+``insert`` batch-encodes through the SAME quantizer as the base segment
+(pq.base / pq.pack — the codes protocol every read-only engine uses) and
+``delete`` flips tombstone bits covering base and delta alike. The
+``search`` signature matches the other engines, so launch/serve.py and the
+benchmark harness drive it unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.index.delta import DeltaSegment
+from repro.index.segment import BaseSegment, Tombstones, encode_codes
+from repro.kernels import ops as kops
+from repro.pq import base as pqbase
+from repro.search import beam
+from repro.search.beam import SearchResult
+from repro.search.engine import _bulk_adc, _cached_dist_fn
+
+INF = jnp.float32(jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_base"))
+def _merge_delta(beam_ids, beam_dists, delta_codes, luts, live, *,
+                 k: int, n_base: int):
+    """Fuse the two arms: (Q, h) beam result over the base graph + one bulk
+    ADC scan of the (C, W) delta codes → global (Q, k) top-k.
+
+    Beam sentinel slots (id n_base — which in GLOBAL id space belongs to
+    delta slot 0) are remapped to -1 BEFORE the concat, so a returned
+    ``n_base`` always means "delta slot 0", never "empty". Any candidate
+    whose distance is +inf (masked delta slot, scrubbed tombstone) also
+    reports id -1 — a tombstoned id can never ride out on a padding slot.
+
+    The delta arm concatenates FIRST: top_k breaks exact ADC ties toward
+    the lowest lane, so a fresh insert outranks a base row with identical
+    codes — read-your-writes for a query at the inserted vector (whose own
+    encoding attains the minimum achievable ADC distance by construction).
+    """
+    ddist = _bulk_adc(delta_codes, luts)                   # (Q, C)
+    ddist = jnp.where(live[None, :], ddist, INF)
+    q, c = ddist.shape
+    dgids = jnp.broadcast_to(n_base + jnp.arange(c, dtype=jnp.int32), (q, c))
+    bids = jnp.where(beam_ids < n_base, beam_ids, -1)
+    bdists = jnp.where(beam_ids < n_base, beam_dists, INF)
+    all_ids = jnp.concatenate([dgids, bids], axis=1)
+    all_d = jnp.concatenate([ddist, bdists], axis=1)
+    all_ids = jnp.where(jnp.isfinite(all_d), all_ids, -1)
+    neg, order = jax.lax.top_k(-all_d, k)
+    return jnp.take_along_axis(all_ids, order, axis=1), -neg
+
+
+@dataclasses.dataclass
+class StreamingEngine:
+    """Mutable index serving live queries under insert/delete churn.
+
+    Global id space: ``[0, n_base)`` are base rows of the current
+    generation, ``[n_base, n_base + delta_capacity)`` are delta slots.
+    Consolidation REMAPS ids (compaction drops tombstoned rows); callers
+    holding ids across a consolidate() must translate them through the
+    returned ``old2new`` map.
+
+    Attributes:
+      base:           frozen :class:`BaseSegment` (current generation).
+      model:          the quantizer every row is encoded with.
+      delta_capacity: delta slot budget between consolidations.
+      delta_degree:   greedy-link degree of the delta adjacency.
+    """
+
+    base: BaseSegment
+    model: pqbase.QuantizerModel
+    delta_capacity: int = 1024
+    delta_degree: int = 8
+
+    def __post_init__(self):
+        self._install(self.base)
+
+    def _install(self, seg: BaseSegment) -> None:
+        """(Re)point serving state at a base segment — used by __init__ and
+        by consolidate() when it swaps in the next generation."""
+        self.base = seg
+        self.delta = DeltaSegment(self.delta_capacity, seg.dim,
+                                  seg.code_width, degree=self.delta_degree,
+                                  code_dtype=np.asarray(seg.codes).dtype)
+        self.tombstones = Tombstones(seg.n + self.delta_capacity)
+        self._codes_p = kops.pad_sentinel_row(jnp.asarray(seg.codes))
+        self._dist_fns: dict = {}
+        self._entry = int(seg.graph.medoid)
+        self._dirty = True        # delta/tombstone device caches stale
+
+    # -- mutation ----------------------------------------------------------
+
+    def insert(self, vectors) -> np.ndarray:
+        """Encode + append a batch of new rows. Returns their GLOBAL ids.
+
+        Raises :class:`repro.index.delta.DeltaFullError` when the delta is
+        out of slots — consolidate() and retry.
+        """
+        vectors = np.atleast_2d(np.asarray(vectors, np.float32))
+        codes = encode_codes(self.model, vectors, self.base.layout)
+        slots = self.delta.append(vectors, codes)
+        self._dirty = True
+        return self.base.n + slots
+
+    def delete(self, ids) -> int:
+        """Tombstone ids (base or delta). Idempotent; returns how many were
+        newly deleted. Deleting the current entry point (e.g. the medoid)
+        re-anchors routing on a live vertex."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        occupied = self.base.n + self.delta.count
+        if ids.size and ((ids < 0) | (ids >= occupied)).any():
+            bad = ids[(ids < 0) | (ids >= occupied)]
+            raise ValueError(
+                f"delete: ids out of the occupied range [0, {occupied}): "
+                f"{bad} (base rows {self.base.n}, delta count "
+                f"{self.delta.count})")
+        fresh = self.tombstones.add(ids)
+        if fresh:
+            self._dirty = True
+        if self.tombstones.contains([self._entry])[0]:
+            self._reselect_entry()
+        return fresh
+
+    def _reselect_entry(self) -> None:
+        """Move the beam entry off a tombstoned vertex: prefer a live base
+        neighbor of the old entry (stays near the centroid), else any live
+        base row. All-base-dead keeps the old entry — the beam starts from
+        it at a large-finite distance and scrubs it from results, so
+        queries still answer from the delta arm."""
+        n = self.base.n
+        nbrs = np.asarray(self.base.graph.neighbors[self._entry])
+        nbrs = nbrs[nbrs < n]
+        live_nbrs = nbrs[~self.tombstones.contains(nbrs)]
+        if live_nbrs.size:
+            self._entry = int(live_nbrs[0])
+            return
+        live = np.flatnonzero(~self.tombstones.contains(np.arange(n)))
+        if live.size:
+            self._entry = int(live[0])
+
+    def consolidate(self, *, key: Optional[jax.Array] = None,
+                    alpha: float = 1.2, l: int = 48,
+                    ckpt_dir: Optional[str] = None,
+                    keep: Optional[int] = None) -> dict:
+        """Fold delta + tombstones into the next base generation (see
+        :func:`repro.index.consolidate.consolidate`)."""
+        from repro.index.consolidate import consolidate
+
+        return consolidate(self, key=key, alpha=alpha, l=l,
+                           ckpt_dir=ckpt_dir, keep=keep)
+
+    @classmethod
+    def restore(cls, ckpt_dir: str, model: pqbase.QuantizerModel, *,
+                generation: Optional[int] = None, delta_capacity: int = 1024,
+                delta_degree: int = 8) -> "StreamingEngine":
+        """Resume from the last (or a given) consolidated generation's
+        atomic snapshot — delta and tombstones restart empty, exactly the
+        state the snapshot froze. The snapshot stores codes but no
+        codebooks, so the caller must supply the SAME quantizer the
+        segment was encoded with; the width/layout guard below catches the
+        common mismatches (wrong M, u8 model against an fs4 snapshot)."""
+        from repro.index.segment import load_segment
+        from repro.pq.pack import FS_K, packed_width
+
+        seg = load_segment(ckpt_dir, generation)
+        want = packed_width(model.m) if seg.layout == "fs4" else model.m
+        if seg.code_width != want or (seg.layout == "fs4"
+                                      and model.k > FS_K):
+            raise ValueError(
+                f"restore: quantizer (M={model.m}, K={model.k}) does not "
+                f"match the {seg.layout} snapshot's code width "
+                f"{seg.code_width} — pass the model the segment was "
+                f"encoded with")
+        return cls(seg, model, delta_capacity=delta_capacity,
+                   delta_degree=delta_degree)
+
+    # -- query -------------------------------------------------------------
+
+    def lut_fn(self, queries):
+        """Per-query LUTs in the base segment's layout (u8 → f32 tables,
+        fs4 → QuantizedLUT) — the same (codes, lut_fn) protocol the
+        read-only engines use."""
+        return pqbase.build_lut(self.model, queries,
+                                quantize=self.base.layout == "fs4")
+
+    def search(self, queries: jax.Array, *, k: int = 10, h: int = 32,
+               max_steps: int = 512, expand: int = 1) -> SearchResult:
+        """Serve a query batch over base ∪ delta minus tombstones.
+
+        Guarantee: a tombstoned id is NEVER returned, at any beam width, in
+        either code layout — the beam scrubs dead base ids, the delta mask
+        kills dead/unoccupied slots, and the merge turns every non-finite
+        candidate into id -1.
+        """
+        queries = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
+        luts = self.lut_fn(queries)
+        if self._dirty:
+            # one device upload + O(cap) mask per MUTATION, not per query:
+            # read-heavy stretches between churn batches reuse the caches
+            slot = np.arange(self.delta.capacity)
+            live = ((slot < self.delta.count)
+                    & ~self.tombstones.contains(self.base.n + slot))
+            self._live_dev = jnp.asarray(live)
+            self._delta_codes_dev = jnp.asarray(self.delta.codes)
+            self._ts_dev = self.tombstones.words
+            self._dirty = False
+        res = beam.beam_search(
+            self.base.graph.neighbors, jnp.int32(self._entry), luts,
+            _cached_dist_fn(self._dist_fns, self._codes_p, luts), h=h,
+            max_steps=max_steps, expand=expand, tombstones=self._ts_dev)
+        kk = min(k, h + self.delta.capacity)
+        ids, dists = _merge_delta(
+            res.ids, res.dists, self._delta_codes_dev, luts,
+            self._live_dev, k=kk, n_base=self.base.n)
+        # the bulk scan scores EVERY delta slot (fixed shapes) — count the
+        # work done, like the beam counts scored-but-tombstoned neighbors
+        n_dist = res.n_dist + jnp.int32(self.delta.capacity)
+        return SearchResult(ids, dists, res.hops, n_dist, res.rounds)
+
+    # -- accounting --------------------------------------------------------
+
+    @property
+    def generation(self) -> int:
+        return self.base.generation
+
+    @property
+    def n_live(self) -> int:
+        """Rows a query can currently return."""
+        return self.base.n + self.delta.count - self.tombstones.count
+
+    def memory_bytes(self) -> int:
+        return (self.base.memory_bytes() + self.delta.memory_bytes()
+                + self.tombstones._words.nbytes)

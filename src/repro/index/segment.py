@@ -1,0 +1,187 @@
+"""Frozen base segment + tombstone bitset for the streaming index.
+
+The mutable-index layout (DESIGN.md §10) is the DiskANN-lineage
+(FreshDiskANN / AiSAQ) segment model: one FROZEN, generation-numbered base
+segment — a proximity graph over PQ codes, exactly what the read-only
+engines serve — plus a bounded append-only delta (:mod:`repro.index.delta`)
+and a tombstone bitset covering both. Nothing in the base segment is ever
+mutated in place; deletes flip tombstone bits, inserts append to the delta,
+and :mod:`repro.index.consolidate` folds both into a fresh base segment
+with a bumped generation, snapshotted atomically via
+:mod:`repro.dist.checkpoint`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.dist import checkpoint as ckpt
+from repro.graphs.adjacency import Graph
+from repro.pq import base as pqbase
+from repro.pq import pack
+
+LAYOUTS = ("u8", "fs4")
+
+
+def encode_codes(model: pqbase.QuantizerModel, x, layout: str) -> np.ndarray:
+    """(B, D) vectors → (B, M) u8 codes or (B, ceil(M/2)) fs4 packed bytes —
+    the one encode path shared by base builds, delta inserts, and serve.py
+    (reuses pq.base.encode / pq.pack.pack_codes)."""
+    if layout not in LAYOUTS:
+        raise ValueError(f"layout must be one of {LAYOUTS}, got {layout!r}")
+    codes = pqbase.encode(model, jnp.asarray(x, jnp.float32))
+    if layout == "fs4":
+        if model.k > pack.FS_K:
+            raise ValueError(
+                f"fs4 layout needs K <= {pack.FS_K} sub-codewords, got "
+                f"K={model.k} (train with pq.train_pq_fs4)")
+        codes = pack.pack_codes(codes)
+    return np.asarray(codes)
+
+
+def bitset_words(capacity: int) -> int:
+    """Words for a bitset over ids [0, capacity) — the sentinel-inclusive
+    (n+31)//32 + 1 sizing shared with the beam's visited set, so one bitset
+    serves both the global id space and any base-graph beam over it."""
+    return (capacity + 31) // 32 + 1
+
+
+class Tombstones:
+    """Host-mutable deleted-id bitset over the global id space
+    [0, n_base + delta_capacity).
+
+    The words array is what jitted consumers take (``beam_search
+    (tombstones=...)``): it is passed as a TRACED argument, so flipping bits
+    between queries never recompiles. Adds are idempotent; ``count`` tracks
+    distinct tombstoned ids.
+    """
+
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+        self._words = np.zeros((bitset_words(self.capacity),), np.uint32)
+        self.count = 0
+
+    def add(self, ids) -> int:
+        """Set bits for ``ids`` (any int array-like). Returns how many were
+        newly tombstoned (already-dead ids are a no-op, not an error)."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        if ids.size and ((ids < 0) | (ids >= self.capacity)).any():
+            bad = ids[(ids < 0) | (ids >= self.capacity)]
+            raise ValueError(
+                f"tombstone ids out of range [0, {self.capacity}): {bad}")
+        fresh = int(np.unique(ids[~self.contains(ids)]).size)
+        np.bitwise_or.at(self._words, ids >> 5,
+                         np.uint32(1) << (ids & 31).astype(np.uint32))
+        self.count += fresh
+        return fresh
+
+    def contains(self, ids) -> np.ndarray:
+        """Boolean mask: True where the id is tombstoned."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        if ids.size == 0:
+            return np.zeros((0,), bool)
+        return ((self._words[ids >> 5] >> (ids & 31).astype(np.uint32)) & 1
+                ).astype(bool)
+
+    @property
+    def words(self) -> jax.Array:
+        """(W,) uint32 device view for jitted consumers (fresh each call —
+        the host array is the source of truth)."""
+        return jnp.asarray(self._words)
+
+    def clear(self) -> None:
+        self._words[:] = 0
+        self.count = 0
+
+
+@dataclasses.dataclass
+class BaseSegment:
+    """One frozen, generation-numbered serving segment.
+
+    Attributes:
+      graph:      padded Vamana adjacency over the segment rows (sentinel n).
+      codes:      (n, M) u8 codes or (n, ceil(M/2)) fs4 packed bytes — must
+                  match ``layout``.
+      vectors:    (n, D) f32 full vectors ("on SSD" in the DiskANN layout —
+                  resident here; consolidation and exact rerank need them).
+      layout:     "u8" | "fs4" (decides the LUT type the engine builds).
+      generation: consolidation counter; doubles as the checkpoint step.
+    """
+
+    graph: Graph
+    codes: jax.Array
+    vectors: jax.Array
+    layout: str = "u8"
+    generation: int = 0
+
+    def __post_init__(self):
+        if self.layout not in LAYOUTS:
+            raise ValueError(f"layout must be one of {LAYOUTS}, "
+                             f"got {self.layout!r}")
+        if int(self.codes.shape[0]) != self.n:
+            raise ValueError(f"codes rows {self.codes.shape[0]} != "
+                             f"graph rows {self.n}")
+
+    @property
+    def n(self) -> int:
+        return self.graph.n
+
+    @property
+    def dim(self) -> int:
+        return int(self.vectors.shape[1])
+
+    @property
+    def code_width(self) -> int:
+        return int(self.codes.shape[1])
+
+    @classmethod
+    def build(cls, key: jax.Array, vectors, model: pqbase.QuantizerModel, *,
+              layout: str = "u8", r: int = 24, l: int = 48,
+              alpha: float = 1.2, batch: int = 1024,
+              generation: int = 0) -> "BaseSegment":
+        """Encode + build a Vamana graph over ``vectors`` — the from-scratch
+        (or rebuild) path; consolidation produces the incremental ones."""
+        from repro.graphs.vamana import build_vamana
+
+        vectors = jnp.asarray(vectors, jnp.float32)
+        codes = jnp.asarray(encode_codes(model, vectors, layout))
+        graph = build_vamana(key, vectors, r=r, l=l, alpha=alpha, batch=batch)
+        return cls(graph=graph, codes=codes, vectors=vectors, layout=layout,
+                   generation=generation)
+
+    def memory_bytes(self) -> int:
+        return (self.codes.size * self.codes.dtype.itemsize
+                + self.graph.neighbors.size * 4 + self.vectors.size * 4)
+
+
+def save_segment(directory: str, seg: BaseSegment,
+                 keep: Optional[int] = None) -> str:
+    """Atomic snapshot of a base segment at step = generation
+    (dist/checkpoint.py: readers see the old complete generation or the new
+    one, never a half-written consolidation)."""
+    return ckpt.save(
+        directory, seg.generation, keep=keep,
+        index={"neighbors": np.asarray(seg.graph.neighbors),
+               "medoid": np.asarray(seg.graph.medoid),
+               "codes": np.asarray(seg.codes),
+               "vectors": np.asarray(seg.vectors),
+               "layout": seg.layout,
+               "generation": int(seg.generation)})
+
+
+def load_segment(directory: str,
+                 generation: Optional[int] = None) -> BaseSegment:
+    """Restore the latest (or a specific) consolidated generation."""
+    state = ckpt.restore(directory, step=generation)
+    t = state["index"]
+    graph = Graph(neighbors=jnp.asarray(t["neighbors"], jnp.int32),
+                  medoid=jnp.asarray(t["medoid"], jnp.int32))
+    return BaseSegment(graph=graph, codes=jnp.asarray(t["codes"]),
+                       vectors=jnp.asarray(t["vectors"], jnp.float32),
+                       layout=str(t["layout"]),
+                       generation=int(t["generation"]))

@@ -45,6 +45,33 @@ from repro.kernels import ref as _ref
 Backend = Literal["auto", "pallas", "interpret", "ref"]
 
 
+# --------------------------------------------------------------------------
+# Row-padding helpers — the ONE home for the sentinel/divisibility padding
+# idiom (search/engine.py, graphs/vamana.py, repro/index/* all pad this way).
+# --------------------------------------------------------------------------
+
+def pad_sentinel_row(x: jax.Array) -> jax.Array:
+    """(N, ...) → (N+1, ...): append one all-zero row at index N.
+
+    Row N is the sentinel every padded adjacency points at (graphs/
+    adjacency.py), so code/vector tables gathered by beam ids must carry a
+    readable — never trusted — row there. Callers mask sentinel slots by id,
+    not by the row's contents.
+    """
+    return jnp.concatenate(
+        [x, jnp.zeros((1,) + x.shape[1:], x.dtype)], axis=0)
+
+
+def pad_rows_to_multiple(x: jax.Array, mult: int) -> jax.Array:
+    """(N, ...) → (N', ...) with N' the next multiple of ``mult`` (zero-row
+    padded) — shard-divisibility padding for row-sharded device_puts."""
+    pad = (-x.shape[0]) % mult
+    if pad == 0:
+        return x
+    return jnp.concatenate(
+        [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+
+
 def _codes_i32(codes) -> jax.Array:
     """Canonicalize plain (unpacked) codes / id arrays: any int → int32."""
     return jnp.asarray(codes).astype(jnp.int32)

@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m repro.launch.serve --ckpt-dir runs/rpq \
         --dataset sift-small \
-        [--scenario hybrid|memory|sharded|sharded-graph] \
+        [--scenario hybrid|memory|sharded|sharded-graph|streaming] \
         [--codes u8|fs4] [--h 32] [--port-stdin]
 
 ``--codes fs4`` serves the fast-scan layout (DESIGN.md §8) — 4-bit packed
@@ -32,6 +32,15 @@ Scenarios (search/engine.py, DESIGN.md §5–§6):
                       the checkpoint), the beam search itself runs inside
                       shard_map with local exact rerank — the sharded_graph
                       dry-run cell's pattern running for real.
+* ``streaming``     — live serving under CHURN through
+                      repro.index.StreamingEngine (DESIGN.md §10): the
+                      dataset's tail is held out as an insert stream, then
+                      ``--churn-rounds`` rounds of interleaved insert /
+                      delete / query batches run against the mutable index
+                      (recall scored against the LIVE corpus each round),
+                      followed by a consolidation that folds the delta into
+                      the next base generation, snapshots it atomically
+                      next to the checkpoint, and re-evaluates.
 """
 
 from __future__ import annotations
@@ -57,7 +66,7 @@ from repro.pq import base as pqbase
 from repro.pq import pack
 from repro.search.engine import (HybridEngine, InMemoryEngine, ShardedEngine,
                                  ShardedGraphEngine)
-from repro.search.metrics import measure_qps, recall_at_k
+from repro.search.metrics import live_ground_truth, measure_qps, recall_at_k
 
 
 def build_or_load_partitioned_graph(key, x, cache_path: str, n_shards: int,
@@ -78,12 +87,82 @@ def build_or_load_partitioned_graph(key, x, cache_path: str, n_shards: int,
     return pg
 
 
+def run_streaming(args, model, ds) -> None:
+    """The churn loop: hold out the dataset tail as an insert stream, then
+    interleave insert / delete / query batches through a StreamingEngine
+    and consolidate at the end (DESIGN.md §10)."""
+    from repro.index import BaseSegment, StreamingEngine
+    from repro.index.segment import encode_codes
+
+    n = int(ds.base.shape[0])
+    n0 = n - int(n * args.churn)
+    base_x = np.asarray(ds.base[:n0])
+    stream = np.asarray(ds.base[n0:])
+    graph = build_or_load_graph(jax.random.PRNGKey(0), base_x,
+                                f"{args.ckpt_dir}/graph_stream{n0}.npz",
+                                args.graph_r, args.graph_l)
+    seg = BaseSegment(graph=graph,
+                      codes=jnp.asarray(encode_codes(model, base_x,
+                                                     args.codes)),
+                      vectors=jnp.asarray(base_x), layout=args.codes)
+    cap = max(len(stream), 1)
+    engine = StreamingEngine(seg, model, delta_capacity=cap)
+    print(f"[serve] streaming: base {n0} rows (gen 0), insert stream "
+          f"{len(stream)}, delta capacity {cap}, layout {args.codes}")
+
+    rng = np.random.default_rng(0)
+    # gid → vector row for live-corpus ground truth: base rows then stream
+    all_x = np.concatenate([base_x, stream]) if len(stream) else base_x
+    live = np.zeros(n0 + cap, bool)
+    live[:n0] = True
+
+    def evaluate(tag: str) -> None:
+        gt_g = live_ground_truth(all_x, np.flatnonzero(live), ds.queries,
+                                 args.k)
+        qps, res = measure_qps(
+            lambda q: engine.search(q, k=args.k, h=args.h,
+                                    expand=args.expand), ds.queries)
+        print(f"[serve] streaming/{tag}: recall@{args.k}="
+              f"{recall_at_k(res.ids, gt_g, args.k):.4f} qps={qps:.1f} "
+              f"live={engine.n_live} gen={engine.generation} "
+              f"resident={engine.memory_bytes()/1e6:.1f}MB")
+
+    rounds = max(args.churn_rounds, 1)
+    per = -(-max(len(stream), 1) // rounds)
+    for i in range(rounds):
+        # contiguous chunks keep gid n0+s ↔ stream[s] (delta slots are
+        # assigned in insertion order)
+        batch = stream[i * per:(i + 1) * per]
+        if len(batch):
+            gids = engine.insert(batch)
+            live[gids] = True
+        live_base = np.flatnonzero(live[:n0])
+        dead = rng.choice(live_base, min(len(batch), len(live_base)),
+                          replace=False)
+        engine.delete(dead)
+        live[dead] = False
+        evaluate(f"round{i}")
+    stats = engine.consolidate(ckpt_dir=f"{args.ckpt_dir}/streaming_index",
+                               keep=3)
+    # consolidation renumbers: translate the live-corpus bookkeeping
+    old_live = np.flatnonzero(live)
+    live = np.zeros(stats["n"] + cap, bool)
+    live[stats["old2new"][old_live]] = True
+    all_x = np.asarray(engine.base.vectors)
+    print(f"[serve] consolidated → generation {stats['generation']}: "
+          f"{stats['n']} rows ({stats['dropped']} dropped, "
+          f"{stats['folded']} folded in), snapshot at "
+          f"{args.ckpt_dir}/streaming_index")
+    evaluate("consolidated")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--ckpt-dir", required=True)
     ap.add_argument("--dataset", default="sift-small")
     ap.add_argument("--scenario",
-                    choices=("hybrid", "memory", "sharded", "sharded-graph"),
+                    choices=("hybrid", "memory", "sharded", "sharded-graph",
+                             "streaming"),
                     default="hybrid")
     ap.add_argument("--codes", choices=("u8", "fs4"), default="u8",
                     help="serving layout: u8 = 1 byte/sub-code + f32 LUTs; "
@@ -98,6 +177,13 @@ def main():
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--graph-r", type=int, default=24)
     ap.add_argument("--graph-l", type=int, default=48)
+    ap.add_argument("--churn", type=float, default=0.1,
+                    help="streaming scenario: fraction of the dataset held "
+                    "out as the insert stream (an equal count of base rows "
+                    "is deleted over the churn rounds)")
+    ap.add_argument("--churn-rounds", type=int, default=4,
+                    help="streaming scenario: interleaved insert/delete/"
+                    "query rounds before consolidation")
     ap.add_argument("--port-stdin", action="store_true",
                     help="read whitespace-separated query vectors on stdin")
     args = ap.parse_args()
@@ -115,16 +201,24 @@ def main():
     print(f"[serve] restored step {state['step']} quantizer "
           f"(M={m}, K={k}) from {args.ckpt_dir}")
 
+    if args.codes == "fs4" and k > 16:
+        raise SystemExit(
+            f"--codes fs4 needs 4-bit sub-codes (K <= 16); this "
+            f"checkpoint was trained with K={k}. Re-train with --k 16 "
+            f"(double M to keep the byte budget).")
+    if args.scenario == "streaming":  # live mutable index under churn
+        if args.port_stdin:
+            raise SystemExit(
+                "--port-stdin is not available with --scenario streaming: "
+                "the scenario runs a fixed churn loop, not a query port")
+        run_streaming(args, model, ds)
+        return
+
     codes = pqbase.encode(model, ds.base)
     if args.codes == "fs4":
         # fast-scan layout (DESIGN.md §8): nibble-packed codes + uint8 LUTs.
         # Every scenario below accepts it — the engines dispatch on the
         # QuantizedLUT type that build_lut(quantize=True) returns.
-        if k > 16:
-            raise SystemExit(
-                f"--codes fs4 needs 4-bit sub-codes (K <= 16); this "
-                f"checkpoint was trained with K={k}. Re-train with --k 16 "
-                f"(double M to keep the byte budget).")
         codes = pack.pack_codes(codes)
         lut_fn = lambda q: pqbase.build_lut(model, q, quantize=True)
         print(f"[serve] fast-scan fs4 layout: {codes.shape[1]} packed "

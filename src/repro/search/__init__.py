@@ -19,4 +19,6 @@ from repro.search.beam import (  # noqa: F401
 from repro.search.engine import (  # noqa: F401
     HybridEngine, InMemoryEngine, ShardedEngine, ShardedGraphEngine,
 )
-from repro.search.metrics import measure_qps, recall_at_k  # noqa: F401
+from repro.search.metrics import (  # noqa: F401
+    live_ground_truth, measure_qps, recall_at_k,
+)

@@ -22,6 +22,16 @@ kernel invocation. Sequential trip count drops from `hops` to `rounds`
 `expand=1` (the default) is bit-identical to the classic one-hop-per-step
 beam. `SearchResult.rounds` reports the measured round count.
 
+**Tombstones** (streaming deletes, DESIGN.md §10): `beam_search(...,
+tombstones=bitset)` takes a uint32 bitset over vertex ids (same word layout
+as the visited set) and masks every tombstoned frontier distance to +inf —
+a deleted vertex is never expanded, never ranks, and is scrubbed from the
+returned beam (sentinel id, +inf dist). The bitset is a TRACED argument, so
+churning deletes never re-trigger jit (unlike baking the mask into
+`dist_fn`, which is a static jit argument). A tombstoned ENTRY vertex gets a
+large-but-finite distance instead, so the search still starts and routes
+off it (it is scrubbed from the results like any other tombstone).
+
 `beam_search_trace` additionally records the ranked candidate beam at every
 round — exactly the paper's Definition 6 routing features.
 """
@@ -35,6 +45,12 @@ import jax
 import jax.numpy as jnp
 
 INF = jnp.float32(jnp.inf)
+
+# Distance assigned to a tombstoned ENTRY vertex: large enough that any real
+# candidate outranks it, finite so the while_loop still expands it (an +inf
+# entry would end the search before the first hop — the "deleted medoid"
+# case must keep routing).
+DEAD_ENTRY_DIST = jnp.float32(1e30)
 
 
 class SearchResult(NamedTuple):
@@ -114,7 +130,8 @@ def _scatter_or(bits: jax.Array, idx: jax.Array, on: jax.Array) -> jax.Array:
 
 def _single_query(neighbors: jax.Array, entry: jax.Array, qdata,
                   dist_fn: Callable, h: int, max_steps: int,
-                  trace_len: int = 0, expand: int = 1):
+                  trace_len: int = 0, expand: int = 1,
+                  tombstones: Optional[jax.Array] = None):
     """Search for ONE query; built to be vmapped. Returns result (+trace)."""
     n = neighbors.shape[0]
     r = neighbors.shape[1]
@@ -124,8 +141,16 @@ def _single_query(neighbors: jax.Array, entry: jax.Array, qdata,
     # old (n+32)//32 + 1 over-allocated a word for most n)
     nwords = (n + 31) // 32 + 1
 
+    def is_dead(idx: jax.Array) -> jax.Array:
+        # bitset lookup guarded to [0, n): sentinel slots and padding lanes
+        # read bit 0's word but their result is never used un-masked
+        safe = jnp.where(idx < n, idx, 0)
+        return _bit_get(tombstones, safe).astype(bool) & (idx < n)
+
     ids0 = jnp.full((h,), n, jnp.int32).at[0].set(entry)
     d_entry = dist_fn(qdata, entry[None])[0]
+    if tombstones is not None:
+        d_entry = jnp.where(is_dead(entry), DEAD_ENTRY_DIST, d_entry)
     dists0 = jnp.full((h,), INF).at[0].set(d_entry)
     exp0 = jnp.ones((h,), bool).at[0].set(False)
     visited0 = _scatter_or(jnp.zeros((nwords,), jnp.uint32), entry[None],
@@ -172,6 +197,11 @@ def _single_query(neighbors: jax.Array, entry: jax.Array, qdata,
         #    hop-ADC kernel invocation instead of e narrow ones)
         nd = dist_fn(qdata, jnp.where(fresh, flat, 0))
         nd = jnp.where(fresh, nd, INF)
+        if tombstones is not None:
+            # tombstoned neighbors were scored (counted in ndist — the
+            # kernel did the work) but rank +inf: marked expanded by the
+            # merge invariant, so routing never continues THROUGH them
+            nd = jnp.where(is_dead(flat), INF, nd)
         ndist = ndist + jnp.sum(fresh.astype(jnp.int32))
         # 4. merge beam ∪ frontier in a single (h + e·R)-wide top-k
         all_ids = jnp.concatenate([ids, jnp.where(fresh, flat, n)])
@@ -195,6 +225,12 @@ def _single_query(neighbors: jax.Array, entry: jax.Array, qdata,
              jnp.int32(0), jnp.int32(1), tb_ids0, tb_d0, tb_v0)
     step, ids, dists, exp, visited, hops, ndist, tbi, tbd, tbv = \
         jax.lax.while_loop(cond, body, state)
+    if tombstones is not None:
+        # scrub: a tombstoned id (incl. a dead entry at DEAD_ENTRY_DIST)
+        # NEVER appears in the returned beam, at any width
+        dead = is_dead(ids)
+        ids = jnp.where(dead, n, ids)
+        dists = jnp.where(dead, INF, dists)
     res = (ids, dists, hops, ndist, step)
     return res + ((tbi, tbd, tbv) if do_trace else ())
 
@@ -203,7 +239,8 @@ def _single_query(neighbors: jax.Array, entry: jax.Array, qdata,
                    static_argnames=("dist_fn", "h", "max_steps", "expand"))
 def beam_search(neighbors: jax.Array, entry: jax.Array, qdatas,
                 dist_fn: Callable, *, h: int = 32,
-                max_steps: int = 256, expand: int = 1) -> SearchResult:
+                max_steps: int = 256, expand: int = 1,
+                tombstones: Optional[jax.Array] = None) -> SearchResult:
     """Batched beam search.
 
     Args:
@@ -221,12 +258,18 @@ def beam_search(neighbors: jax.Array, entry: jax.Array, qdatas,
                  (DESIGN.md §9). 1 (default) is the classic, bit-identical
                  best-first beam; larger E trades a few wasted expansions for
                  ~E× fewer sequential trips.
+      tombstones: optional (W,) uint32 deleted-vertex bitset, shared across
+                 the batch (streaming deletes, DESIGN.md §10): bit i set ⇒
+                 vertex i ranks +inf, is never expanded, and is scrubbed
+                 from the returned beam. W must cover ids [0, N) — the
+                 visited-set sizing (N+31)//32 + 1 always does. Traced (not
+                 static): updating the bitset between calls never re-jits.
     """
     entry = jnp.asarray(entry, jnp.int32)
     nq = jax.tree.leaves(qdatas)[0].shape[0]
     entries = jnp.broadcast_to(entry, (nq,)) if entry.ndim == 0 else entry
     fn = lambda e, qd: _single_query(neighbors, e, qd, dist_fn, h, max_steps,
-                                     expand=expand)
+                                     expand=expand, tombstones=tombstones)
     ids, dists, hops, ndist, rounds = jax.vmap(fn)(entries, qdatas)
     return SearchResult(ids, dists, hops, ndist, rounds)
 
@@ -235,7 +278,8 @@ def beam_search(neighbors: jax.Array, entry: jax.Array, qdatas,
                                              "trace_len", "expand"))
 def beam_search_trace(neighbors: jax.Array, entry: jax.Array, qdatas,
                       dist_fn: Callable, *, h: int = 32, max_steps: int = 256,
-                      trace_len: int = 64, expand: int = 1) -> Trace:
+                      trace_len: int = 64, expand: int = 1,
+                      tombstones: Optional[jax.Array] = None) -> Trace:
     """Beam search that also records the ranked beam at every round.
 
     ``hop_valid[q, t]`` flags ROUNDS (while_loop trips): with expand=E one
@@ -246,7 +290,8 @@ def beam_search_trace(neighbors: jax.Array, entry: jax.Array, qdatas,
     nq = jax.tree.leaves(qdatas)[0].shape[0]
     entries = jnp.broadcast_to(entry, (nq,)) if entry.ndim == 0 else entry
     fn = lambda e, qd: _single_query(neighbors, e, qd, dist_fn, h, max_steps,
-                                     trace_len=trace_len, expand=expand)
+                                     trace_len=trace_len, expand=expand,
+                                     tombstones=tombstones)
     ids, dists, hops, ndist, rounds, tbi, tbd, tbv = \
         jax.vmap(fn)(entries, qdatas)
     return Trace(tbi, tbd, tbv, SearchResult(ids, dists, hops, ndist, rounds))
@@ -265,10 +310,22 @@ def make_exact_dist_fn(vectors: jax.Array) -> Callable:
 
 
 def make_adc_dist_fn(codes: jax.Array, *, packed: bool = False,
-                     backend: str = "auto") -> Callable:
+                     backend: str = "auto",
+                     tombstones: Optional[jax.Array] = None) -> Callable:
     """qdata = LUT (M, K) — or a per-query ``pq.pack.QuantizedLUT``
     ((M, 16) u8 lut, scale, bias) when ``packed=True``. codes must be
     (N+1, M) sentinel-padded (fs4: (N+1, ceil(M/2)) packed bytes).
+
+    ``tombstones`` (optional (W,) uint32 bitset over ids [0, N)) bakes a
+    deleted-vertex mask into the dist fn: tombstoned ids return +inf.
+    Because dist fns are STATIC jit arguments, each distinct bitset makes a
+    distinct callable — fine for a frozen snapshot, wrong for churn. A
+    streaming caller should pass ``beam_search(..., tombstones=)`` instead,
+    where the bitset is traced, updates never re-jit, a tombstoned ENTRY
+    still routes (DEAD_ENTRY_DIST), and the returned beam is scrubbed.
+    The baked mask has neither entry rescue nor scrub: a search ENTERED at
+    a tombstoned vertex sees d_entry = +inf and terminates empty, so don't
+    point it at a graph whose entry may be deleted.
 
     The ids vector is ONE beam frontier — width R classically, E·R under
     multi-expansion (``beam_search(expand=E)``); the fused kernels auto-tune
@@ -287,6 +344,18 @@ def make_adc_dist_fn(codes: jax.Array, *, packed: bool = False,
       under beam_search's vmap the per-query call batches into the
       kernel's query grid axis.
     """
+    if tombstones is not None:
+        ts = jnp.asarray(tombstones, jnp.uint32)
+        inner = make_adc_dist_fn(codes, packed=packed, backend=backend)
+        n = codes.shape[0] - 1              # codes are sentinel-padded
+
+        def dist_fn(qdata, ids):
+            d = inner(qdata, ids)
+            dead = (_bit_get(ts, jnp.where(ids < n, ids, 0)).astype(bool)
+                    & (ids < n))
+            return jnp.where(dead, INF, d)
+        return dist_fn
+
     use_fused = backend in ("pallas", "interpret") or (
         backend == "auto" and jax.default_backend() == "tpu")
     if packed:

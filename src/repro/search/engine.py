@@ -95,15 +95,6 @@ def _cached_dist_fn(cache: dict, codes_p, luts):
     return fn
 
 
-def _pad_codes(codes: jax.Array) -> jax.Array:
-    return jnp.concatenate(
-        [codes, jnp.zeros((1, codes.shape[1]), codes.dtype)], axis=0)
-
-
-def _pad_vectors(x: jax.Array) -> jax.Array:
-    return jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)], axis=0)
-
-
 @dataclasses.dataclass
 class InMemoryEngine:
     graph: Graph
@@ -112,7 +103,7 @@ class InMemoryEngine:
     entry_fn: Optional[Callable] = None  # queries -> (Q,) entries (HNSW descend)
 
     def __post_init__(self):
-        self._codes_p = _pad_codes(self.codes)
+        self._codes_p = kops.pad_sentinel_row(self.codes)
         self._dist_fns = {}
 
     def search(self, queries: jax.Array, *, k: int = 10, h: int = 32,
@@ -143,8 +134,9 @@ class HybridEngine:
     entry_fn: Optional[Callable] = None
 
     def __post_init__(self):
-        self._codes_p = _pad_codes(self.codes)
-        self._vec_p = _pad_vectors(jnp.asarray(self.vectors, jnp.float32))
+        self._codes_p = kops.pad_sentinel_row(self.codes)
+        self._vec_p = kops.pad_sentinel_row(
+            jnp.asarray(self.vectors, jnp.float32))
         self._dist_fns = {}
 
     def search(self, queries: jax.Array, *, k: int = 10, h: int = 32,
@@ -275,14 +267,6 @@ def merge_shard_topk(gids, dists, k: int):
     return jnp.take_along_axis(is_, order, axis=1), -neg
 
 
-def _pad_rows(x: jax.Array, mult: int) -> jax.Array:
-    pad = (-x.shape[0]) % mult
-    if pad == 0:
-        return x
-    return jnp.concatenate(
-        [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
-
-
 @dataclasses.dataclass
 class ShardedEngine:
     """Scatter-gather serving over a device mesh (exhaustive ADC scan).
@@ -310,13 +294,15 @@ class ShardedEngine:
         rows = shd.named(self.mesh, shd.rpq_rows_spec(self.mesh))
         codes = jnp.asarray(self.codes)
         self._codes_bytes = codes.size * codes.dtype.itemsize
-        self._codes_s = jax.device_put(_pad_rows(codes, self.n_shards), rows)
+        self._codes_s = jax.device_put(
+            kops.pad_rows_to_multiple(codes, self.n_shards), rows)
         self.codes = self._codes_s   # drop the unsharded copy
         self._vec_bytes = 0
         if self.vectors is not None:
             vec = jnp.asarray(self.vectors, jnp.float32)
             self._vec_bytes = vec.size * 4
-            self._vec_s = jax.device_put(_pad_rows(vec, self.n_shards), rows)
+            self._vec_s = jax.device_put(
+                kops.pad_rows_to_multiple(vec, self.n_shards), rows)
             self.vectors = self._vec_s
 
     def _scatter(self, luts, queries, k: int):
@@ -374,8 +360,7 @@ class ShardedEngine:
 def _shard_codes_pad(codes_l: jax.Array) -> jax.Array:
     """(1, n_local, M) shard block → (n_local + 1, M) sentinel-padded codes
     for beam.make_adc_dist_fn (sentinel row never read: beam masks ids)."""
-    c = codes_l[0]
-    return jnp.concatenate([c, jnp.zeros((1, c.shape[1]), c.dtype)], axis=0)
+    return kops.pad_sentinel_row(codes_l[0])
 
 
 def _local_beam(neighbors_l, medoid_l, codes_l, luts, *, h: int,
@@ -421,9 +406,7 @@ def _local_graph_serve(neighbors_l, medoid_l, codes_l, vectors_l, luts,
     res = _local_beam(neighbors_l, medoid_l, codes_l, luts, h=h,
                       max_steps=max_steps, backend=backend, expand=expand)
     cand = jnp.minimum(res.ids[:, :shortlist], n_local)   # clamp sentinel
-    vec_p = jnp.concatenate(
-        [vectors_l[0], jnp.zeros((1, vectors_l.shape[2]),
-                                 vectors_l.dtype)], axis=0)
+    vec_p = kops.pad_sentinel_row(vectors_l[0])
     cv = vec_p[cand]                                      # (Q, shortlist, D)
     exact = jnp.sum((cv - queries[:, None, :]) ** 2, -1)
     exact = jnp.where(jnp.isfinite(res.dists[:, :shortlist]), exact, jnp.inf)

@@ -32,6 +32,34 @@ def recall_at_k(pred_ids, gt_ids, k: int) -> float:
     return hits / (k * len(gt))
 
 
+def live_ground_truth(vectors, live_gids, queries, k: int) -> np.ndarray:
+    """Exact top-k over the LIVE subset of a churned corpus, in GLOBAL ids.
+
+    The one implementation of the streaming-evaluation idiom (serve.py
+    churn loop, benchmarks/streaming.py, examples/streaming.py): restrict
+    ``vectors`` (indexed by global id) to ``live_gids``, brute-force the
+    ground truth there, and translate the subset indices back to global
+    ids so the result compares directly against a StreamingEngine's
+    returned ids with :func:`recall_at_k`.
+
+    Args:
+      vectors:   (N, D) array-like, row = vector of global id.
+      live_gids: (L,) global ids currently live (bool masks: pass
+        ``np.flatnonzero(mask)``).
+      queries:   (Q, D) query batch.
+      k:         neighbors per query.
+
+    Returns:
+      (Q, k) int64 global ids of the exact nearest live rows.
+    """
+    from repro.graphs.knn import knn_ids
+
+    gids = np.asarray(live_gids)
+    gt, _ = knn_ids(jnp.asarray(np.asarray(vectors)[gids]),
+                    jnp.asarray(queries, jnp.float32), k)
+    return gids[np.asarray(gt)]
+
+
 def measure_qps(search_fn: Callable, queries, *, repeats: int = 3,
                 warmup: int = 1) -> tuple[float, object]:
     """Throughput of a batched search callable, compile time excluded.

@@ -1,0 +1,314 @@
+"""Streaming mutable index (repro/index/, DESIGN.md §10).
+
+Covers the tombstone semantics the subsystem promises — a deleted id is
+NEVER returned, at any beam width, in either code layout; deleting the
+medoid keeps routing alive; word-boundary ids behave ((n+31)//32 + 1 bitset
+sizing); delete-then-reinsert resolves to the new row — plus the delta
+capacity bound, consolidation invariants (compaction, generation bump,
+atomic restore), and the recall-under-churn acceptance bar against a
+from-scratch rebuild.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.knn import knn_ids
+from repro.index import (BaseSegment, DeltaFullError, StreamingEngine,
+                         Tombstones)
+from repro.index.segment import bitset_words, encode_codes
+from repro.pq import train_pq, train_pq_fs4
+from repro.search.metrics import recall_at_k
+
+
+@pytest.fixture(scope="module")
+def models(clustered_data):
+    x, _, _ = clustered_data
+    u8 = train_pq(jax.random.PRNGKey(3), x, 8, 32, iters=8)
+    fs4 = train_pq_fs4(jax.random.PRNGKey(3), x, 8, iters=8)
+    return {"u8": u8, "fs4": fs4}
+
+
+def make_engine(clustered_data, small_graph, models, layout="u8", *,
+                capacity=512, **kw):
+    x, _, _ = clustered_data
+    model = models[layout]
+    seg = BaseSegment(graph=small_graph,
+                      codes=jnp.asarray(encode_codes(model, x, layout)),
+                      vectors=x, layout=layout)
+    return StreamingEngine(seg, model, delta_capacity=capacity, **kw)
+
+
+def new_rows(x, count, seed=9):
+    """Fresh vectors from the fixture's distribution: jittered samples."""
+    r = np.random.default_rng(seed)
+    rows = np.asarray(x)[r.integers(0, x.shape[0], count)]
+    return rows + 0.1 * r.normal(size=rows.shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Tombstone semantics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", ["u8", "fs4"])
+@pytest.mark.parametrize("h", [8, 32, 64])
+def test_tombstoned_id_never_returned(clustered_data, small_graph, models,
+                                      layout, h):
+    """The hard guarantee: delete each query's true top-1 (base) plus some
+    delta rows — no beam width, no layout ever returns them."""
+    x, q, gt = clustered_data
+    eng = make_engine(clustered_data, small_graph, models, layout)
+    dgids = eng.insert(new_rows(x, 64))
+    dead_base = np.unique(np.asarray(gt)[:, 0])
+    dead_delta = dgids[::3]
+    eng.delete(dead_base)
+    eng.delete(dead_delta)
+    ids = np.asarray(eng.search(q, k=10, h=h).ids)
+    dead = np.concatenate([dead_base, dead_delta])
+    assert not np.isin(ids, dead).any()
+    # and live results still flow (beam + delta arms both answer)
+    assert (ids >= 0).any(axis=1).all()
+
+
+def test_delete_medoid_keeps_routing(clustered_data, small_graph, models):
+    x, q, gt = clustered_data
+    eng = make_engine(clustered_data, small_graph, models)
+    r_before = recall_at_k(eng.search(q, k=10, h=32).ids, gt, 10)
+    medoid = int(small_graph.medoid)
+    eng.delete(medoid)
+    res = eng.search(q, k=10, h=32)
+    ids = np.asarray(res.ids)
+    assert not (ids == medoid).any()
+    assert int(res.hops.min()) > 0          # the beam actually routed
+    # one lost vertex cannot crater recall
+    r_after = recall_at_k(ids, gt, 10)
+    assert r_after >= r_before - 0.02, (r_before, r_after)
+    # entry point was re-anchored onto a live vertex
+    assert not eng.tombstones.contains([eng._entry])[0]
+
+
+def test_delete_every_medoid_neighbor_then_medoid(clustered_data,
+                                                  small_graph, models):
+    """Entry re-anchoring survives its preferred candidates being dead."""
+    x, q, _ = clustered_data
+    eng = make_engine(clustered_data, small_graph, models)
+    medoid = int(small_graph.medoid)
+    nbrs = np.asarray(small_graph.neighbors[medoid])
+    nbrs = nbrs[nbrs < x.shape[0]]
+    eng.delete(nbrs)
+    eng.delete(medoid)
+    ids = np.asarray(eng.search(q, k=10, h=32).ids)
+    assert not np.isin(ids, np.concatenate([nbrs, [medoid]])).any()
+    assert (ids >= 0).any()
+
+
+def test_word_boundary_ids(clustered_data, small_graph, models):
+    """Bitset edges: ids on uint32 word boundaries and the last id under
+    the (n+31)//32 + 1 sizing (PR 4's visited-set convention)."""
+    x, q, _ = clustered_data
+    n = x.shape[0]
+    eng = make_engine(clustered_data, small_graph, models)
+    boundary = np.array([0, 31, 32, 63, 64, n - 33, n - 32, n - 1])
+    eng.delete(boundary)
+    assert eng.tombstones.contains(boundary).all()
+    inside = np.array([1, 30, 33, 65, n - 31, n - 2])
+    assert not eng.tombstones.contains(inside).any()
+    ids = np.asarray(eng.search(q, k=10, h=32).ids)
+    assert not np.isin(ids, boundary).any()
+
+
+def test_make_adc_dist_fn_baked_tombstones(clustered_data, small_graph,
+                                           models):
+    """The frozen-snapshot variant (bitset baked into the dist fn): dead
+    ids score +inf and never appear with a finite distance. Entry must be
+    live — unlike beam_search(tombstones=), this path has no dead-entry
+    rescue (documented in make_adc_dist_fn)."""
+    from repro.kernels.ops import pad_sentinel_row
+    from repro.pq.base import build_lut
+    from repro.search.beam import beam_search, make_adc_dist_fn
+
+    x, q, gt = clustered_data
+    model = models["u8"]
+    codes_p = pad_sentinel_row(jnp.asarray(encode_codes(model, x, "u8")))
+    ts = Tombstones(x.shape[0])
+    dead = np.unique(np.asarray(gt)[:, 0])
+    dead = dead[dead != int(small_graph.medoid)]   # keep the entry live
+    ts.add(dead)
+    dist_fn = make_adc_dist_fn(codes_p, tombstones=ts.words)
+    res = beam_search(small_graph.neighbors, small_graph.medoid,
+                      build_lut(model, q), dist_fn, h=32)
+    ids, dists = np.asarray(res.ids), np.asarray(res.dists)
+    assert not np.isin(ids[np.isfinite(dists)], dead).any()
+    assert np.isfinite(dists[:, 0]).all()          # live results still flow
+
+
+def test_tombstones_bitset_unit():
+    ts = Tombstones(64)                     # capacity exactly 2 words + 1
+    assert ts._words.shape[0] == bitset_words(64) == 3
+    assert ts.add([0, 31, 32, 63]) == 4
+    assert ts.add([31, 63]) == 0            # idempotent
+    assert ts.count == 4
+    assert ts.contains([31, 32]).all() and not ts.contains([1, 33]).any()
+    with pytest.raises(ValueError):
+        ts.add([64])
+    ts.clear()
+    assert ts.count == 0 and not ts.contains([0]).any()
+
+
+def test_delete_then_reinsert(clustered_data, small_graph, models):
+    """A reinserted vector gets a NEW id; the old id stays dead."""
+    x, _, _ = clustered_data
+    eng = make_engine(clustered_data, small_graph, models)
+    victim = 123
+    eng.delete(victim)
+    (new_gid,) = eng.insert(np.asarray(x)[victim][None])
+    assert new_gid == x.shape[0]            # first delta slot
+    res = eng.search(np.asarray(x)[victim][None], k=5, h=32)
+    ids = np.asarray(res.ids)[0]
+    assert ids[0] == new_gid                # exact row wins under ADC too
+    assert victim not in ids
+
+
+def test_delete_validation_and_idempotence(clustered_data, small_graph,
+                                           models):
+    x, _, _ = clustered_data
+    eng = make_engine(clustered_data, small_graph, models)
+    assert eng.delete([5, 5, 7]) == 2       # dup in one call counts once
+    assert eng.delete([5]) == 0             # already dead: no-op
+    with pytest.raises(ValueError, match="out of the occupied range"):
+        eng.delete([x.shape[0]])            # delta slot 0 is unoccupied
+    gid = eng.insert(new_rows(x, 1))[0]
+    assert eng.delete([gid]) == 1           # now occupied → deletable
+    with pytest.raises(ValueError):
+        eng.delete([-1])
+
+
+# ---------------------------------------------------------------------------
+# Delta segment
+# ---------------------------------------------------------------------------
+
+def test_delta_capacity_overflow(clustered_data, small_graph, models):
+    x, q, _ = clustered_data
+    eng = make_engine(clustered_data, small_graph, models, capacity=8)
+    eng.insert(new_rows(x, 5))
+    with pytest.raises(DeltaFullError, match="consolidate"):
+        eng.insert(new_rows(x, 4))
+    assert eng.delta.count == 5             # failed batch left no residue
+    eng.insert(new_rows(x, 3))              # exactly full is fine
+    assert np.isfinite(
+        np.asarray(eng.search(q[:4], k=5, h=16).dists)[:, 0]).all()
+
+
+def test_k512_int32_codes_roundtrip(clustered_data, small_graph):
+    """K > 256 quantizers encode to int32 codes — the delta must store
+    them unclipped (dtype follows the base segment, no uint8 wrap)."""
+    from repro.pq.base import QuantizerModel, identity_rotation
+
+    x, _, _ = clustered_data
+    r = np.random.default_rng(3)
+    cb = jnp.asarray(r.normal(size=(4, 512, 8)).astype(np.float32))
+    model = QuantizerModel(r=identity_rotation(32), codebooks=cb)
+    codes = encode_codes(model, x, "u8")
+    assert codes.dtype == np.int32 and int(codes.max()) > 255
+    seg = BaseSegment(graph=small_graph, codes=jnp.asarray(codes),
+                      vectors=x)
+    eng = StreamingEngine(seg, model, delta_capacity=8)
+    assert eng.delta.codes.dtype == np.int32
+    rows = new_rows(x, 4)
+    gids = eng.insert(rows)
+    assert (np.asarray(eng.search(rows, k=3, h=32).ids)[:, 0] == gids).all()
+
+
+def test_inserted_rows_are_found(clustered_data, small_graph, models):
+    """Query AT an inserted vector: the new gid must win top-1."""
+    x, _, _ = clustered_data
+    eng = make_engine(clustered_data, small_graph, models)
+    rows = new_rows(x, 16)
+    gids = eng.insert(rows)
+    ids = np.asarray(eng.search(rows, k=3, h=32).ids)
+    assert (ids[:, 0] == gids).all()
+
+
+# ---------------------------------------------------------------------------
+# Consolidation
+# ---------------------------------------------------------------------------
+
+def test_consolidate_snapshot_and_restore(clustered_data, small_graph,
+                                          models, tmp_path):
+    x, q, _ = clustered_data
+    eng = make_engine(clustered_data, small_graph, models)
+    gids = eng.insert(new_rows(x, 50))
+    eng.delete(np.arange(0, 200, 4))
+    eng.delete(gids[:10])
+    n_live = eng.n_live
+    stats = eng.consolidate(ckpt_dir=str(tmp_path))
+    assert stats["generation"] == eng.generation == 1
+    assert stats["n"] == n_live == eng.base.n
+    assert eng.tombstones.count == 0 and eng.delta.count == 0
+    o2n = stats["old2new"]
+    assert (o2n[np.arange(0, 200, 4)] == -1).all()
+    assert (o2n[gids[:10]] == -1).all()
+    assert (np.sort(o2n[o2n >= 0]) == np.arange(stats["n"])).all()
+    res = eng.search(q, k=10, h=32)
+    restored = StreamingEngine.restore(str(tmp_path), models["u8"])
+    assert restored.generation == 1 and restored.base.n == stats["n"]
+    res2 = restored.search(q, k=10, h=32)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(res2.ids))
+    # restoring with a mismatched quantizer is rejected, not served
+    wrong = train_pq(jax.random.PRNGKey(8), x, 4, 32, iters=2)
+    with pytest.raises(ValueError, match="does not match"):
+        StreamingEngine.restore(str(tmp_path), wrong)
+
+
+def test_consolidate_all_dead_raises(clustered_data, small_graph, models):
+    x, _, _ = clustered_data
+    eng = make_engine(clustered_data, small_graph, models)
+    eng.delete(np.arange(x.shape[0]))
+    with pytest.raises(ValueError, match="every row is tombstoned"):
+        eng.consolidate()
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: recall under churn vs a from-scratch rebuild
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", ["u8", "fs4"])
+def test_churn_recall_vs_rebuild(clustered_data, small_graph, models,
+                                 layout):
+    """10% inserts + 10% deletes: live serving within 3 recall points of a
+    full rebuild on the post-churn corpus; within 1 point after
+    consolidate() (ISSUE acceptance bar, both layouts)."""
+    x, q, _ = clustered_data
+    n = x.shape[0]
+    model = models[layout]
+    frac = n // 10
+    rng = np.random.default_rng(17)
+    dead = rng.choice(n, frac, replace=False)
+    xnew = new_rows(x, frac, seed=21)
+
+    eng = make_engine(clustered_data, small_graph, models, layout)
+    gids = eng.insert(xnew)
+    eng.delete(dead)
+
+    # post-churn corpus + ground truth (vector space, then to global ids)
+    live_base = np.setdiff1d(np.arange(n), dead)
+    corpus = np.concatenate([np.asarray(x)[live_base], xnew])
+    gid_of = np.concatenate([live_base, gids])
+    gt, _ = knn_ids(jnp.asarray(corpus), q, 10)
+    gt_gid = gid_of[np.asarray(gt)]
+
+    r_live = recall_at_k(eng.search(q, k=10, h=32).ids, gt_gid, 10)
+
+    rebuild = BaseSegment.build(jax.random.PRNGKey(7), corpus, model,
+                                layout=layout, r=16, l=32)
+    r_rebuild = recall_at_k(
+        StreamingEngine(rebuild, model).search(q, k=10, h=32).ids,
+        np.asarray(gt), 10)
+    assert r_live >= r_rebuild - 0.03, (r_live, r_rebuild)
+
+    stats = eng.consolidate()
+    gt_new = stats["old2new"][gt_gid]
+    assert (gt_new >= 0).all()              # every live neighbor survived
+    r_cons = recall_at_k(eng.search(q, k=10, h=32).ids, gt_new, 10)
+    assert r_cons >= r_rebuild - 0.01, (r_cons, r_rebuild)
