@@ -101,24 +101,33 @@ def quantizer(method: str):
 
 
 def sweep_engine(engine, queries, gt, beams=BEAMS, k: int = 10,
-                 expand: int = 1):
-    """Beam sweep → list of {h, expand, recall, qps, hops, rounds}.
+                 expand: int = 1, entries: int = 1, prune_eps: float = 0.0):
+    """Beam sweep → list of {h, expand, entries, prune_eps, recall, qps,
+    hops, rounds, n_dist}.
 
-    ``expand`` is the frontier batch size E (DESIGN.md §9) forwarded to
-    every ``engine.search`` call — sweep it alongside ``h`` to chart the
-    QPS-vs-recall frontier of frontier batching.
+    ``expand`` is the frontier batch size E (DESIGN.md §9); ``entries``/
+    ``prune_eps`` are the adaptive-routing knobs (DESIGN.md §11: PQ-hash
+    multi-entry seeding S and probabilistic hop-pruning margin ε) — all
+    three forwarded to every ``engine.search`` call so sweeps can chart
+    the QPS-vs-recall frontier of any serving configuration. ``rounds``
+    (sequential beam rounds) and ``n_dist`` (full-LUT-equivalent distance
+    evaluations per query) ride along in every row — they are the
+    quantities the adaptive-routing acceptance bars are measured on.
     """
     from repro.search.metrics import measure_qps, recall_at_k
 
     out = []
     for h in beams:
         qps, res = measure_qps(
-            lambda q: engine.search(q, k=k, h=h, expand=expand), queries,
-            repeats=2, warmup=1)
+            lambda q: engine.search(q, k=k, h=h, expand=expand,
+                                    entries=entries, prune_eps=prune_eps),
+            queries, repeats=2, warmup=1)
         hops = float(np.mean(np.asarray(res.hops)))
-        out.append({"h": h, "expand": expand,
+        out.append({"h": h, "expand": expand, "entries": entries,
+                    "prune_eps": prune_eps,
                     "recall": recall_at_k(res.ids, gt, k),
                     "qps": qps, "hops": hops,
+                    "n_dist": float(np.mean(np.asarray(res.n_dist))),
                     "rounds": (float(np.mean(np.asarray(res.rounds)))
                                if res.rounds is not None else hops)})
     return out

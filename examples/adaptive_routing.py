@@ -1,0 +1,106 @@
+"""Adaptive routing walkthrough: multi-entry seeding + hop pruning.
+
+    PYTHONPATH=src python examples/adaptive_routing.py [--dry-run]
+
+The classic beam starts every query at the one graph medoid and spends its
+first hops escaping the medoid's neighborhood; then every hop full-scores
+the whole frontier. Adaptive routing (DESIGN.md §11) attacks both costs
+with machinery the index already has:
+
+* ``--entries S``: a PQ-hash coarse index over the resident codes turns the
+  query's own LUT into S near-query entry points (the LUT argmin per
+  subspace IS the sub-code the quantizer would assign the query), so the
+  beam starts next to the answer instead of at the medoid;
+* ``--prune-eps ε``: each hop scores the frontier on the first m′ < M
+  subspaces (a certified lower bound d_m′ ≤ d_M), extrapolates to
+  d̂ = d_m′·cal — cal is calibrated per query from the LUT's own subspace
+  masses, not the naive M/m′ — and full-scores only lanes with
+  d̂·(1+ε) ≤ τ.
+
+Both default OFF and S=1/ε=0 is bit-identical to the classic beam. The
+table this prints shows the two knobs separately and combined, against the
+sequential baseline — rounds (sequential trips) and n_dist (full-LUT-
+equivalent distance evaluations) are the costs being cut.
+
+``--dry-run`` shrinks every knob so CI can prove the walkthrough runs.
+"""
+
+import argparse
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data.synth import DatasetSpec, synth
+from repro.graphs import build_vamana
+from repro.graphs.knn import knn_ids
+from repro.pq import base, train_pq
+from repro.search.engine import InMemoryEngine
+from repro.search.metrics import recall_at_k
+from repro.search.seed import build_seed_index
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--h", type=int, default=32)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny corpus, CI-sized")
+    args = ap.parse_args()
+    if args.dry_run:
+        args.n, args.queries = 3000, 64
+
+    ds = synth(DatasetSpec("adaptive", args.dim, args.n, args.queries, 32,
+                           0.3, 0.2, seed=5))
+    graph = build_vamana(jax.random.PRNGKey(0), ds.base, r=16, l=32)
+    gt, _ = knn_ids(ds.base, ds.queries, 10)
+    model = train_pq(jax.random.PRNGKey(1), ds.train, 8, 64,
+                     iters=8 if args.dry_run else 15)
+    codes = base.encode(model, ds.base)
+    eng = InMemoryEngine(graph, codes, lambda q: base.build_lut(model, q))
+
+    # a peek at the seeding machinery: the coarse index hashes the corpus
+    # on the first m_hash sub-codes; the query gets its bucket key for free
+    # from the LUT it already built
+    ix = build_seed_index(np.asarray(codes))
+    occupied = int((np.asarray(ix.table) >= 0).any(axis=1).sum())
+    print(f"seed index: {ix.table.shape[0]} buckets on the first "
+          f"{ix.m_hash} sub-code(s) (base K={ix.k}), {occupied} occupied, "
+          f"{ix.n_candidates} candidates probed per query "
+          f"(bucket cap {ix.table.shape[1]} + {ix.pivots.shape[0]} pivots)")
+
+    def run(tag, **kw):
+        res = eng.search(ds.queries, k=10, h=args.h, **kw)
+        return dict(tag=tag,
+                    recall=recall_at_k(res.ids, np.asarray(gt), 10),
+                    rounds=float(jnp.mean(res.rounds.astype(jnp.float32))),
+                    n_dist=float(jnp.mean(res.n_dist.astype(jnp.float32))))
+
+    rows = [
+        run("classic (S=1, eps=0, E=1)"),
+        run("seeded (S=8)", entries=8),
+        run("pruned (eps=0.2, m'=2)", prune_eps=0.2, m_prefix=2),
+        run("seeded+pruned", entries=8, prune_eps=0.2, m_prefix=2),
+        run("full adaptive (+E=4)", entries=8, prune_eps=0.2, m_prefix=2,
+            expand=4),
+    ]
+    base_row = rows[0]
+    print(f"\n{'config':28s} {'recall@10':>10s} {'rounds':>8s} "
+          f"{'n_dist':>8s} {'rounds cut':>11s} {'n_dist cut':>11s}")
+    for r in rows:
+        print(f"{r['tag']:28s} {r['recall']:10.3f} {r['rounds']:8.2f} "
+              f"{r['n_dist']:8.1f} "
+              f"{base_row['rounds'] / max(r['rounds'], 1e-9):10.2f}x "
+              f"{1 - r['n_dist'] / base_row['n_dist']:+10.1%}")
+    print("\n(rounds = sequential while-loop trips; n_dist = full-LUT-"
+          "equivalent\n distance evaluations incl. the seed probe; S=1/"
+          "eps=0 is bit-identical\n to the classic beam — "
+          "tests/test_adaptive.py holds that bar)")
+
+
+if __name__ == "__main__":
+    main()

@@ -31,9 +31,12 @@ from repro.index.delta import DeltaSegment
 from repro.index.segment import BaseSegment, Tombstones, encode_codes
 from repro.kernels import ops as kops
 from repro.pq import base as pqbase
+from repro.pq.pack import unpack_codes
 from repro.search import beam
+from repro.search import seed as sseed
 from repro.search.beam import SearchResult
-from repro.search.engine import _bulk_adc, _cached_dist_fn
+from repro.search.engine import (_bulk_adc, _cached_dist_fn,
+                                 _cached_scale_fn, _prune_cfg)
 
 INF = jnp.float32(jnp.inf)
 
@@ -104,6 +107,7 @@ class StreamingEngine:
         self._codes_p = kops.pad_sentinel_row(jnp.asarray(seg.codes))
         self._dist_fns: dict = {}
         self._entry = int(seg.graph.medoid)
+        self._seedix = None       # coarse seeding index (built lazily)
         self._dirty = True        # delta/tombstone device caches stale
 
     # -- mutation ----------------------------------------------------------
@@ -201,14 +205,30 @@ class StreamingEngine:
         return pqbase.build_lut(self.model, queries,
                                 quantize=self.base.layout == "fs4")
 
+    def _seed_index(self) -> sseed.SeedIndex:
+        """Coarse seeding index over the BASE codes (the delta is tiny and
+        bulk-scanned anyway), rebuilt per generation (_install resets it);
+        tombstones are applied at QUERY time, so churn never rebuilds."""
+        if self._seedix is None:
+            codes = jnp.asarray(self.base.codes)
+            if self.base.layout == "fs4":
+                codes = unpack_codes(codes, self.model.m)
+            self._seedix = sseed.build_seed_index(np.asarray(codes))
+        return self._seedix
+
     def search(self, queries: jax.Array, *, k: int = 10, h: int = 32,
-               max_steps: int = 512, expand: int = 1) -> SearchResult:
+               max_steps: int = 512, expand: int = 1, entries: int = 1,
+               prune_eps: float = 0.0, m_prefix: int = 0) -> SearchResult:
         """Serve a query batch over base ∪ delta minus tombstones.
 
         Guarantee: a tombstoned id is NEVER returned, at any beam width, in
         either code layout — the beam scrubs dead base ids, the delta mask
         kills dead/unoccupied slots, and the merge turns every non-finite
-        candidate into id -1.
+        candidate into id -1. Adaptive routing rides along (DESIGN.md §11):
+        ``entries>1`` seeds from the base coarse index TOMBSTONE-AWARE
+        (dead candidates score DEAD_ENTRY_DIST — live seeds outrank them,
+        an all-dead candidate set still routes), ``prune_eps>0`` gates
+        full-LUT scoring behind the partial-LUT lower bound.
         """
         queries = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
         luts = self.lut_fn(queries)
@@ -222,17 +242,32 @@ class StreamingEngine:
             self._delta_codes_dev = jnp.asarray(self.delta.codes)
             self._ts_dev = self.tombstones.words
             self._dirty = False
+        mp, mt = _prune_cfg(luts, prune_eps, m_prefix)
+        lb_fn = (_cached_dist_fn(self._dist_fns, self._codes_p, luts, mp)
+                 if mp else None)
+        cal_fn = _cached_scale_fn(self._dist_fns, luts, mp) if mp else None
+        seed_cost = 0
+        if entries > 1:
+            ix = self._seed_index()
+            entry = ix.seed_entries(luts, entries, tombstones=self._ts_dev)
+            seed_cost = ix.n_candidates
+        else:
+            entry = jnp.int32(self._entry)
         res = beam.beam_search(
-            self.base.graph.neighbors, jnp.int32(self._entry), luts,
+            self.base.graph.neighbors, entry, luts,
             _cached_dist_fn(self._dist_fns, self._codes_p, luts), h=h,
-            max_steps=max_steps, expand=expand, tombstones=self._ts_dev)
+            max_steps=max_steps, expand=expand, tombstones=self._ts_dev,
+            lb_dist_fn=lb_fn, m_prefix=mp, m_total=mt,
+            prune_eps=prune_eps if mp else 0.0, lb_scale_fn=cal_fn)
         kk = min(k, h + self.delta.capacity)
         ids, dists = _merge_delta(
             res.ids, res.dists, self._delta_codes_dev, luts,
             self._live_dev, k=kk, n_base=self.base.n)
-        # the bulk scan scores EVERY delta slot (fixed shapes) — count the
-        # work done, like the beam counts scored-but-tombstoned neighbors
-        n_dist = res.n_dist + jnp.int32(self.delta.capacity)
+        # count only OCCUPIED delta slots as distance work: the fixed-shape
+        # bulk scan touches every slot, but the unoccupied tail is
+        # sentinel-masked padding, not scored candidates (same accounting
+        # as the beam's sentinel lanes); the seed probe's candidates count
+        n_dist = res.n_dist + jnp.int32(self.delta.count + seed_cost)
         return SearchResult(ids, dists, res.hops, n_dist, res.rounds)
 
     # -- accounting --------------------------------------------------------

@@ -94,8 +94,11 @@ def _gather_rows(ids_ref, codes_ref, gathered, q_abs, rp: int):
 
 
 def _hop_adc_kernel(ids_ref, codes_ref, luts_ref, out_ref, gathered,
-                    *, m: int, k: int, rp: int, block_q: int):
-    """One grid step: block_q queries × R′ fused gather-reduce."""
+                    *, m: int, m_eff: int, k: int, rp: int, block_q: int):
+    """One grid step: block_q queries × R′ fused gather-reduce. ``m_eff ≤ m``
+    statically shortens the reduce unroll — the partial-LUT lower-bound pass
+    of hop pruning (DESIGN.md §11); the resident codes block stays full-width
+    (no HBM reslice per call), only the loop trip count shrinks."""
     q0 = pl.program_id(0) * block_q
 
     def q_body(qi, _):
@@ -107,7 +110,7 @@ def _hop_adc_kernel(ids_ref, codes_ref, luts_ref, out_ref, gathered,
         # 2. LUT reduce: K-lane iota compare per subspace (VPU formulation)
         iota = jax.lax.broadcasted_iota(jnp.int32, (rp, k), 1)
         acc = jnp.zeros((rp,), jnp.float32)
-        for j in range(m):                                 # M static unroll
+        for j in range(m_eff):                             # M static unroll
             mask = rows[:, j:j + 1] == iota                # (R′, K)
             acc = acc + jnp.sum(
                 jnp.where(mask, lut[j, :][None, :], 0.0), axis=1)
@@ -117,10 +120,12 @@ def _hop_adc_kernel(ids_ref, codes_ref, luts_ref, out_ref, gathered,
     jax.lax.fori_loop(0, block_q, q_body, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_q", "interpret", "m_prefix"))
 def hop_adc(codes: jax.Array, ids: jax.Array, luts: jax.Array, *,
             block_q: int | None = None,
-            interpret: bool | None = None) -> jax.Array:
+            interpret: bool | None = None,
+            m_prefix: int = 0) -> jax.Array:
     """Fused per-hop ADC: (N, M) codes, (Q, R′) ids, (Q, M, K) LUTs → (Q, R′).
 
     ``out[q, i] = sum_j luts[q, j, codes[ids[q, i], j]]`` — the distance of
@@ -131,7 +136,9 @@ def hop_adc(codes: jax.Array, ids: jax.Array, luts: jax.Array, *,
     dispatch boundary. ``block_q=None`` auto-tunes the query tile to the
     frontier width (``_auto_block_q``); ``interpret=None`` autodetects:
     compiled Pallas on TPU, interpreter elsewhere
-    (kernels.ops.default_interpret).
+    (kernels.ops.default_interpret). ``0 < m_prefix < M`` reduces only the
+    first m_prefix subspaces — the hop-pruning lower bound (the grid, specs
+    and resident codes are unchanged; only the reduce unroll shortens).
     """
     if interpret is None:
         from repro.kernels.ops import default_interpret
@@ -149,6 +156,7 @@ def hop_adc(codes: jax.Array, ids: jax.Array, luts: jax.Array, *,
         ids_i = jnp.pad(ids_i, ((0, q_pad), (0, 0)))
         luts_f = jnp.pad(luts_f, ((0, q_pad), (0, 0), (0, 0)))
     qp = ids_i.shape[0]
+    m_eff = m_prefix if 0 < m_prefix < m else m
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(qp // block_q,),
@@ -160,7 +168,8 @@ def hop_adc(codes: jax.Array, ids: jax.Array, luts: jax.Array, *,
         scratch_shapes=[pltpu.VMEM((rp, m), jnp.int32)],
     )
     out = pl.pallas_call(
-        functools.partial(_hop_adc_kernel, m=m, k=k, rp=rp, block_q=block_q),
+        functools.partial(_hop_adc_kernel, m=m, m_eff=m_eff, k=k, rp=rp,
+                          block_q=block_q),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((qp, rp), jnp.float32),
         interpret=interpret,
@@ -173,11 +182,12 @@ def hop_adc(codes: jax.Array, ids: jax.Array, luts: jax.Array, *,
 # --------------------------------------------------------------------------
 
 def _hop_adc_fs_kernel(ids_ref, codes_ref, luts_ref, out_ref, gathered,
-                       *, m: int, mb: int, rp: int, block_q: int):
+                       *, m: int, m_eff: int, mb: int, rp: int, block_q: int):
     """Packed twin of ``_hop_adc_kernel``: the resident codes block and the
     gather scratch hold PACKED bytes (half the VMEM), the LUT tile is uint8
     (a quarter), nibbles unpack in-register, and the reduce accumulates
-    int32 — dequantization happens once in the wrapper."""
+    int32 — dequantization happens once in the wrapper. ``m_eff ≤ m``
+    statically shortens the reduce unroll (hop-pruning lower bound)."""
     q0 = pl.program_id(0) * block_q
 
     def q_body(qi, _):
@@ -188,7 +198,7 @@ def _hop_adc_fs_kernel(ids_ref, codes_ref, luts_ref, out_ref, gathered,
         lut = luts_ref[pl.ds(qi, 1)][0].astype(jnp.int32)  # (M, 16)
         iota = jax.lax.broadcasted_iota(jnp.int32, (rp, 16), 1)
         acc = jnp.zeros((rp,), jnp.int32)
-        for j in range(m):                                 # M static unroll
+        for j in range(m_eff):                             # M static unroll
             mask = rows[:, j:j + 1] == iota                # (R′, 16)
             acc = acc + jnp.sum(jnp.where(mask, lut[j, :][None, :], 0),
                                 axis=1)
@@ -198,10 +208,12 @@ def _hop_adc_fs_kernel(ids_ref, codes_ref, luts_ref, out_ref, gathered,
     jax.lax.fori_loop(0, block_q, q_body, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("m", "block_q", "interpret"))
+@functools.partial(jax.jit, static_argnames=("m", "block_q", "interpret",
+                                             "m_prefix"))
 def hop_adc_fs(packed: jax.Array, ids: jax.Array, luts_u8: jax.Array, *,
                m: int, block_q: int | None = None,
-               interpret: bool | None = None) -> jax.Array:
+               interpret: bool | None = None,
+               m_prefix: int = 0) -> jax.Array:
     """Fused per-hop fast-scan ADC: (N, ceil(M/2)) packed codes, (Q, R′)
     ids, (Q, M, 16) u8 LUTs → (Q, R′) int32 exact accumulators.
 
@@ -209,7 +221,9 @@ def hop_adc_fs(packed: jax.Array, ids: jax.Array, luts_u8: jax.Array, *,
     ``ops.hop_adc_fs`` so the float op sequence matches the oracle
     ``ref.hop_adc_fs_ref`` exactly on every backend. Canonical dtypes
     (uint8 packed, int32 ids) are enforced by kernels.ops. ``block_q=None``
-    auto-tunes the query tile to the frontier width.
+    auto-tunes the query tile to the frontier width. ``0 < m_prefix < m``
+    accumulates only the first m_prefix subspaces (hop-pruning lower
+    bound); the caller's dequant must then use ``m_prefix · bias``.
     """
     if interpret is None:
         from repro.kernels.ops import default_interpret
@@ -226,6 +240,7 @@ def hop_adc_fs(packed: jax.Array, ids: jax.Array, luts_u8: jax.Array, *,
         ids_i = jnp.pad(ids_i, ((0, q_pad), (0, 0)))
         luts_q = jnp.pad(luts_q, ((0, q_pad), (0, 0), (0, 0)))
     qp = ids_i.shape[0]
+    m_eff = m_prefix if 0 < m_prefix < m else m
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(qp // block_q,),
@@ -237,7 +252,7 @@ def hop_adc_fs(packed: jax.Array, ids: jax.Array, luts_u8: jax.Array, *,
         scratch_shapes=[pltpu.VMEM((rp, mb), jnp.uint8)],
     )
     out = pl.pallas_call(
-        functools.partial(_hop_adc_fs_kernel, m=m, mb=mb, rp=rp,
+        functools.partial(_hop_adc_fs_kernel, m=m, m_eff=m_eff, mb=mb, rp=rp,
                           block_q=block_q),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((qp, rp), jnp.int32),

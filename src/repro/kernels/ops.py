@@ -173,40 +173,60 @@ def hop_gather(codes, luts, *, backend: Backend = "auto", block_q: int = 8):
 
 
 def hop_adc(codes, ids, luts, *, backend: Backend = "auto",
-            block_q: int | None = None):
+            block_q: int | None = None, m_prefix: int = 0):
     """FUSED per-hop beam ADC: (N, M) codes, (Q, R′) ids, (Q, M, K) LUTs →
     (Q, R′) f32 — gathers the R′ neighbor code rows AND reduces them against
     each query's LUT in one kernel (no (Q, R′, M) HBM round-trip). R′ is the
     beam's frontier width — the graph degree R classically, E·R under
     multi-expansion (beam_search(expand=E), DESIGN.md §9); ``block_q=None``
     lets the kernel pick its query tile from R′. All ids must be valid rows
-    in [0, N)."""
+    in [0, N).
+
+    ``0 < m_prefix < M`` reduces only the FIRST m_prefix subspaces — the
+    partial-LUT lower bound of hop pruning (DESIGN.md §11; every LUT entry
+    is a squared subdistance ≥ 0, so the prefix sum bounds the full sum
+    from below). The Pallas path keeps the resident codes block full-width
+    and statically shortens the reduce unroll; the oracle slices."""
     mode = _resolve(backend)
     codes = _codes_i32(codes)
     ids = _codes_i32(ids)
+    mp = m_prefix if 0 < m_prefix < codes.shape[1] else 0
     if mode == "ref":
+        if mp:
+            return _ref.hop_adc_ref(codes[:, :mp], ids, luts[:, :mp])
         return _ref.hop_adc_ref(codes, ids, luts)
     return _hop.hop_adc(codes, ids, luts, block_q=block_q,
-                        interpret=_interpret_flag(mode))
+                        interpret=_interpret_flag(mode), m_prefix=mp)
 
 
 def hop_adc_fs(packed, ids, luts_u8, scale, bias, *,
-               backend: Backend = "auto", block_q: int | None = None):
+               backend: Backend = "auto", block_q: int | None = None,
+               m_prefix: int = 0):
     """FUSED per-hop FAST-SCAN ADC: (N, ceil(M/2)) packed codes, (Q, R′)
     ids, (Q, M, 16) uint8 LUTs + (Q,) (scale, bias) → (Q, R′) f32 — the
     packed twin of :func:`hop_adc` (same gather fusion, half the resident
     code bytes, quarter LUT bytes, int32 accumulation, same frontier-width
-    auto-tuning at ``block_q=None``)."""
+    auto-tuning at ``block_q=None``).
+
+    ``m_prefix`` as in :func:`hop_adc`; the dequant then uses
+    ``m_prefix · bias`` (bias ≥ 0 — quantize_luts anchors it at the LUT
+    minimum), so the partial score lower-bounds the full one in the
+    quantized metric too. Odd m_prefix is exact on the oracle as well: the
+    paired-LUT table zero-pads the dangling high nibble."""
     mode = _resolve(backend)
     packed = _codes_u8(packed)
     ids = _codes_i32(ids)
     luts_u8 = _codes_u8(luts_u8)
-    if mode == "ref":
-        return _ref.hop_adc_fs_ref(packed, ids, luts_u8, scale, bias)
     m = luts_u8.shape[1]
+    mp = m_prefix if 0 < m_prefix < m else 0
+    if mode == "ref":
+        if mp:
+            return _ref.hop_adc_fs_ref(packed[:, :(mp + 1) // 2], ids,
+                                       luts_u8[:, :mp], scale, bias)
+        return _ref.hop_adc_fs_ref(packed, ids, luts_u8, scale, bias)
     acc = _hop.hop_adc_fs(packed, ids, luts_u8, m=m, block_q=block_q,
-                          interpret=_interpret_flag(mode))
-    return _dequant(acc, scale, bias, m)
+                          interpret=_interpret_flag(mode), m_prefix=mp)
+    return _dequant(acc, scale, bias, mp or m)
 
 
 def pq_pairwise(x, codebook, *, backend: Backend = "auto", block_n: int = 512):

@@ -3,7 +3,15 @@
     PYTHONPATH=src python -m repro.launch.serve --ckpt-dir runs/rpq \
         --dataset sift-small \
         [--scenario hybrid|memory|sharded|sharded-graph|streaming] \
-        [--codes u8|fs4] [--h 32] [--port-stdin]
+        [--codes u8|fs4] [--h 32] [--entries 8] [--prune-eps 0.1] \
+        [--port-stdin]
+
+``--entries S`` / ``--prune-eps ε`` switch on adaptive routing (DESIGN.md
+§11) in every scenario: S > 1 seeds each beam from the PQ-hash coarse
+index instead of the single medoid, ε > 0 gates each hop's full ADC pass
+behind a partial-LUT estimate. Both default OFF (S=1, ε=0 — bit-identical
+to the classic beam). The graph-free ``sharded`` scan has no beam and
+ignores them.
 
 ``--codes fs4`` serves the fast-scan layout (DESIGN.md §8) — 4-bit packed
 codes + quantized uint8 LUTs — through ANY scenario; it needs a quantizer
@@ -121,7 +129,8 @@ def run_streaming(args, model, ds) -> None:
                                  args.k)
         qps, res = measure_qps(
             lambda q: engine.search(q, k=args.k, h=args.h,
-                                    expand=args.expand), ds.queries)
+                                    expand=args.expand, entries=args.entries,
+                                    prune_eps=args.prune_eps), ds.queries)
         print(f"[serve] streaming/{tag}: recall@{args.k}="
               f"{recall_at_k(res.ids, gt_g, args.k):.4f} qps={qps:.1f} "
               f"live={engine.n_live} gen={engine.generation} "
@@ -174,6 +183,18 @@ def main():
                     "expanded per beam round — each round scores one "
                     "E*R-wide fused hop-ADC call instead of E narrow ones "
                     "(the sharded scenario has no beam and ignores it)")
+    ap.add_argument("--entries", type=int, default=1,
+                    help="adaptive routing (DESIGN.md §11): seed each beam "
+                    "with S entry points from the PQ-hash coarse index "
+                    "instead of the single medoid; 1 = classic routing "
+                    "(bit-identical). The sharded-graph scenario seeds "
+                    "per shard inside shard_map")
+    ap.add_argument("--prune-eps", type=float, default=0.0,
+                    help="adaptive routing (DESIGN.md §11): probabilistic "
+                    "hop pruning margin ε — each hop first scores the "
+                    "frontier on a prefix of the subspaces and full-scores "
+                    "only lanes whose extrapolated estimate beats the beam "
+                    "threshold by ε; 0 = off (bit-identical)")
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--graph-r", type=int, default=24)
     ap.add_argument("--graph-l", type=int, default=48)
@@ -260,7 +281,8 @@ def main():
                 continue
             t0 = time.perf_counter()
             res = engine.search(jnp.asarray(vals)[None], k=args.k, h=args.h,
-                                expand=args.expand)
+                                expand=args.expand, entries=args.entries,
+                                prune_eps=args.prune_eps)
             dt = (time.perf_counter() - t0) * 1e3
             ids = np.asarray(res.ids[0]).tolist()
             print(f"ids={ids} dists={np.asarray(res.dists[0]).round(3).tolist()} "
@@ -269,7 +291,9 @@ def main():
 
     gt, _ = knn_ids(ds.base, ds.queries, args.k)
     qps, res = measure_qps(lambda q: engine.search(q, k=args.k, h=args.h,
-                                                   expand=args.expand),
+                                                   expand=args.expand,
+                                                   entries=args.entries,
+                                                   prune_eps=args.prune_eps),
                            ds.queries)
     rounds = (f"rounds={float(res.rounds.mean()):.1f} "
               if res.rounds is not None else "")

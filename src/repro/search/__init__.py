@@ -7,6 +7,9 @@ Public surface:
 * :mod:`repro.search.beam`    — jitted batched beam search (+ traced
   variant for the paper's Def. 6 routing features) and pluggable distance
   functions (exact, ADC; fused hop-ADC Pallas kernel on TPU).
+* :mod:`repro.search.seed`    — PQ-hash multi-entry seeding (adaptive
+  routing, DESIGN.md §11): a PQTable-style coarse index over the resident
+  codes that turns each query's LUT into S near-query beam entry points.
 * :mod:`repro.search.engine`  — ``InMemoryEngine`` / ``HybridEngine`` /
   ``ShardedEngine`` / ``ShardedGraphEngine`` plus the shard_map scatter
   bodies they (and launch/cells.py) compile.
@@ -14,7 +17,10 @@ Public surface:
 """
 from repro.search.beam import (  # noqa: F401
     beam_search, beam_search_trace, SearchResult, Trace,
-    make_exact_dist_fn, make_adc_dist_fn,
+    make_exact_dist_fn, make_adc_dist_fn, make_lb_scale_fn,
+)
+from repro.search.seed import (  # noqa: F401
+    SeedIndex, auto_m_hash, build_seed_index, seed_entries_from,
 )
 from repro.search.engine import (  # noqa: F401
     HybridEngine, InMemoryEngine, ShardedEngine, ShardedGraphEngine,

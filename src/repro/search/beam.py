@@ -32,6 +32,38 @@ churning deletes never re-trigger jit (unlike baking the mask into
 large-but-finite distance instead, so the search still starts and routes
 off it (it is scrubbed from the results like any other tombstone).
 
+**Multi-entry seeding** (adaptive routing, DESIGN.md §11): ``entry`` may be
+a (Q, S) per-query entry SET instead of one shared/per-query vertex —
+``search/seed.py`` produces such sets from a PQ-hash coarse index. The S
+entries are deduplicated, scored in one ``dist_fn`` call, sorted, and
+installed as the initial beam; invalid lanes (sentinel ``-1`` padding from
+the seeder) start expanded at +inf, and each tombstoned entry individually
+gets ``DEAD_ENTRY_DIST`` (so an all-tombstoned entry set still routes off
+its best dead entry, exactly like the classic dead-medoid case). ``S=1``
+is bit-identical to the classic single-entry beam.
+
+**Probabilistic hop pruning** (DESIGN.md §11): with ``lb_dist_fn`` (a
+partial-LUT distance over the first ``m_prefix < m_total`` subspaces —
+``make_adc_dist_fn(m_prefix=)``) and ``prune_eps > 0``, every round first
+scores the frontier's LOWER BOUND ``d_m′`` (per-subspace LUT entries are
+non-negative, so ``d_m′ ≤ d_M``), extrapolates it to a full-distance
+estimate ``d̂ = d_m′ · cal``, and only full-scores candidates with
+``d̂ · (1 + ε) ≤ τ``, where τ is the current worst beam distance. The
+estimate (not the raw bound) drives the gate: the bound sits well below
+the full sum, so comparing IT to a full-distance τ would prune almost
+nothing — extrapolation prunes like the full distance would at m′/M of
+the cost, mis-pruning with small ε-bounded probability (hence
+"probabilistic"). The extrapolation factor ``cal`` defaults to the
+uniform-mass ratio ``M/m′``, but that overshoots on anisotropic data
+(leading subspaces carry MORE than m′/M of the distance mass, so the
+estimate comes out too large and over-prunes); pass
+``lb_scale_fn = make_lb_scale_fn(...)`` to calibrate it per query from
+the query's own LUT mass instead. Pruned lanes are masked to the
+sentinel — shapes never change, so churn never retraces. ``prune_eps=0``
+disables the pass entirely (bit-identical).
+``n_dist`` then counts full-LUT-equivalents: each partial score adds
+``m_prefix / m_total`` of a distance evaluation, each full score adds one.
+
 `beam_search_trace` additionally records the ranked candidate beam at every
 round — exactly the paper's Definition 6 routing features.
 """
@@ -128,14 +160,33 @@ def _scatter_or(bits: jax.Array, idx: jax.Array, on: jax.Array) -> jax.Array:
     return _scatter_bits(bits, idx, _first_occurrence(idx, on))
 
 
-def _single_query(neighbors: jax.Array, entry: jax.Array, qdata,
+def _single_query(neighbors: jax.Array, entries: jax.Array, qdata,
                   dist_fn: Callable, h: int, max_steps: int,
                   trace_len: int = 0, expand: int = 1,
-                  tombstones: Optional[jax.Array] = None):
-    """Search for ONE query; built to be vmapped. Returns result (+trace)."""
+                  tombstones: Optional[jax.Array] = None,
+                  lb_dist_fn: Optional[Callable] = None,
+                  m_prefix: int = 0, m_total: int = 0,
+                  prune_eps: float = 0.0,
+                  lb_scale_fn: Optional[Callable] = None):
+    """Search for ONE query; built to be vmapped. ``entries`` is the (S,)
+    per-query entry set (S=1 ≡ the classic single-entry beam, bit-identical).
+    Returns result (+trace)."""
     n = neighbors.shape[0]
     r = neighbors.shape[1]
     e = max(1, min(expand, h))
+    s = entries.shape[0]
+    # hop pruning is compiled in only when fully configured; prune_eps=0 is
+    # the documented OFF switch (bit-identical to the unpruned beam)
+    prune = (lb_dist_fn is not None and prune_eps > 0.0
+             and 0 < m_prefix < m_total)
+    if prune:
+        # extrapolation factor d̂ = d_m′ · cal, folded together with (1+ε)
+        # into one loop-invariant gate scale. Per-query calibration
+        # (lb_scale_fn) corrects the uniform M/m′ ratio for anisotropic
+        # subspace masses — computed ONCE per query, outside the loop.
+        cal = (lb_scale_fn(qdata) if lb_scale_fn is not None
+               else jnp.float32(m_total) / jnp.float32(m_prefix))
+        gate_scale = cal * jnp.float32(1.0 + prune_eps)
     # sentinel-inclusive id range is [0, n]: word(n) = n//32, so n//32 + 1
     # words always suffice ((n+31)//32 + 1 is a safe ceiling of that; the
     # old (n+32)//32 + 1 over-allocated a word for most n)
@@ -147,14 +198,41 @@ def _single_query(neighbors: jax.Array, entry: jax.Array, qdata,
         safe = jnp.where(idx < n, idx, 0)
         return _bit_get(tombstones, safe).astype(bool) & (idx < n)
 
-    ids0 = jnp.full((h,), n, jnp.int32).at[0].set(entry)
-    d_entry = dist_fn(qdata, entry[None])[0]
-    if tombstones is not None:
-        d_entry = jnp.where(is_dead(entry), DEAD_ENTRY_DIST, d_entry)
-    dists0 = jnp.full((h,), INF).at[0].set(d_entry)
-    exp0 = jnp.ones((h,), bool).at[0].set(False)
-    visited0 = _scatter_or(jnp.zeros((nwords,), jnp.uint32), entry[None],
-                           jnp.ones((1,), bool))
+    if s == 1:
+        # the classic single-entry init, op for op (bit-identity contract)
+        entry = entries[0]
+        ids0 = jnp.full((h,), n, jnp.int32).at[0].set(entry)
+        d_entry = dist_fn(qdata, entries)[0]
+        if tombstones is not None:
+            d_entry = jnp.where(is_dead(entry), DEAD_ENTRY_DIST, d_entry)
+        dists0 = jnp.full((h,), INF).at[0].set(d_entry)
+        exp0 = jnp.ones((h,), bool).at[0].set(False)
+        visited0 = _scatter_or(jnp.zeros((nwords,), jnp.uint32), entries,
+                               jnp.ones((1,), bool))
+        n_seeds = jnp.int32(1)
+    else:
+        # multi-entry init: dedupe the set, score every distinct valid
+        # entry in ONE dist_fn call, sort, install as the initial beam
+        sh = min(s, h)
+        ok = (entries >= 0) & (entries < n)
+        uniq = _first_occurrence(entries, ok)
+        d_ent = dist_fn(qdata, jnp.where(uniq, entries, 0))
+        d_ent = jnp.where(uniq, d_ent, INF)
+        if tombstones is not None:
+            # per-entry DEAD_ENTRY_DIST: a dead seed still routes (finite)
+            # but any live seed outranks it; all-dead falls back to pure
+            # DEAD_ENTRY_DIST routing like the classic deleted-medoid case
+            d_ent = jnp.where(uniq & is_dead(entries), DEAD_ENTRY_DIST,
+                              d_ent)
+        neg, order = jax.lax.top_k(-d_ent, s)
+        sd = -neg
+        sids = jnp.where(sd < INF, entries[order], n)
+        ids0 = jnp.full((h,), n, jnp.int32).at[:sh].set(sids[:sh])
+        dists0 = jnp.full((h,), INF).at[:sh].set(sd[:sh])
+        exp0 = jnp.ones((h,), bool).at[:sh].set(sd[:sh] == INF)
+        visited0 = _scatter_bits(jnp.zeros((nwords,), jnp.uint32), entries,
+                                 uniq)
+        n_seeds = jnp.sum(uniq.astype(jnp.int32))
 
     do_trace = trace_len > 0
     tb_ids0 = jnp.full((max(trace_len, 1), h), n, jnp.int32)
@@ -195,16 +273,43 @@ def _single_query(neighbors: jax.Array, entry: jax.Array, qdata,
             visited = _scatter_or(visited, flat, fresh)
         # 3. ONE dist_fn call for the whole e·R frontier (on TPU: one fused
         #    hop-ADC kernel invocation instead of e narrow ones)
-        nd = dist_fn(qdata, jnp.where(fresh, flat, 0))
-        nd = jnp.where(fresh, nd, INF)
+        if prune:
+            # probabilistic gate: score the frontier on the first m_prefix
+            # subspaces only (a certified lower bound — d_m′ ≤ d_M, every
+            # LUT entry ≥ 0), EXTRAPOLATE it to a full-distance estimate
+            # d̂ = d_m′·cal (cal = calibrated or uniform M/m′ mass ratio,
+            # hoisted above the loop), and full-score just the lanes whose
+            # estimate beats the worst beam slot by margin ε. The raw bound
+            # prunes only ~nothing (it sits far below any full-distance τ);
+            # the extrapolation prunes like the full distance would, at
+            # m′/M of the cost — mistaken prunes are possible (hence
+            # "probabilistic"), bounded by ε. τ = INF while the
+            # beam is unfilled, so nothing is pruned before the beam warms
+            # up. Pruned lanes stay VISITED — churn never retraces them —
+            # and mask to the sentinel, so shapes never change. n_dist here
+            # is in SUBSPACE units (every fresh lane paid m_prefix, kept
+            # lanes m_total on top); it is converted back to
+            # full-LUT-equivalents after the loop.
+            tau = dists[h - 1]
+            d_lb = lb_dist_fn(qdata, jnp.where(fresh, flat, 0))
+            keep = fresh & (d_lb * gate_scale <= tau)
+            nd = dist_fn(qdata, jnp.where(keep, flat, 0))
+            nd = jnp.where(keep, nd, INF)
+            ndist = ndist + (m_prefix * jnp.sum(fresh.astype(jnp.int32))
+                             + m_total * jnp.sum(keep.astype(jnp.int32)))
+            front = keep
+        else:
+            nd = dist_fn(qdata, jnp.where(fresh, flat, 0))
+            nd = jnp.where(fresh, nd, INF)
+            ndist = ndist + jnp.sum(fresh.astype(jnp.int32))
+            front = fresh
         if tombstones is not None:
             # tombstoned neighbors were scored (counted in ndist — the
             # kernel did the work) but rank +inf: marked expanded by the
             # merge invariant, so routing never continues THROUGH them
             nd = jnp.where(is_dead(flat), INF, nd)
-        ndist = ndist + jnp.sum(fresh.astype(jnp.int32))
         # 4. merge beam ∪ frontier in a single (h + e·R)-wide top-k
-        all_ids = jnp.concatenate([ids, jnp.where(fresh, flat, n)])
+        all_ids = jnp.concatenate([ids, jnp.where(front, flat, n)])
         all_d = jnp.concatenate([dists, nd])
         all_e = jnp.concatenate([exp, jnp.zeros((e * r,), bool)])
         neg, order = jax.lax.top_k(-all_d, h)
@@ -221,10 +326,15 @@ def _single_query(neighbors: jax.Array, entry: jax.Array, qdata,
             tbv = tbv.at[ti].set(tbv[ti] | in_range)
         return (step + 1, ids, dists, exp, visited, hops, ndist, tbi, tbd, tbv)
 
+    ndist0 = jnp.int32(m_total) * n_seeds if prune else n_seeds
     state = (jnp.int32(0), ids0, dists0, exp0, visited0,
-             jnp.int32(0), jnp.int32(1), tb_ids0, tb_d0, tb_v0)
+             jnp.int32(0), ndist0, tb_ids0, tb_d0, tb_v0)
     step, ids, dists, exp, visited, hops, ndist, tbi, tbd, tbv = \
         jax.lax.while_loop(cond, body, state)
+    if prune:
+        # subspace units → full-LUT-equivalents (ceil: a lone partial score
+        # still counts as work done)
+        ndist = (ndist + jnp.int32(m_total - 1)) // jnp.int32(m_total)
     if tombstones is not None:
         # scrub: a tombstoned id (incl. a dead entry at DEAD_ENTRY_DIST)
         # NEVER appears in the returned beam, at any width
@@ -235,17 +345,38 @@ def _single_query(neighbors: jax.Array, entry: jax.Array, qdata,
     return res + ((tbi, tbd, tbv) if do_trace else ())
 
 
+def _normalize_entries(entry: jax.Array, nq: int) -> jax.Array:
+    """Canonicalize ``entry`` to a (Q, S) per-query entry-set matrix:
+    () shared vertex → (Q, 1); (Q,) per-query vertex → (Q, 1); (Q, S)
+    entry sets pass through. S=1 runs the classic single-entry init."""
+    entry = jnp.asarray(entry, jnp.int32)
+    if entry.ndim == 0:
+        return jnp.broadcast_to(entry, (nq, 1))
+    if entry.ndim == 1:
+        return entry[:, None]
+    return entry
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("dist_fn", "h", "max_steps", "expand"))
+                   static_argnames=("dist_fn", "h", "max_steps", "expand",
+                                    "lb_dist_fn", "m_prefix", "m_total",
+                                    "prune_eps", "lb_scale_fn"))
 def beam_search(neighbors: jax.Array, entry: jax.Array, qdatas,
                 dist_fn: Callable, *, h: int = 32,
                 max_steps: int = 256, expand: int = 1,
-                tombstones: Optional[jax.Array] = None) -> SearchResult:
+                tombstones: Optional[jax.Array] = None,
+                lb_dist_fn: Optional[Callable] = None,
+                m_prefix: int = 0, m_total: int = 0,
+                prune_eps: float = 0.0,
+                lb_scale_fn: Optional[Callable] = None) -> SearchResult:
     """Batched beam search.
 
     Args:
       neighbors: (N, R) padded adjacency (sentinel N).
-      entry:     () int32 entry vertex (shared) — the PG medoid.
+      entry:     () int32 entry vertex (shared) — the PG medoid; or (Q,)
+                 per-query entries; or a (Q, S) per-query entry SET
+                 (multi-entry seeding, DESIGN.md §11 — search/seed.py
+                 produces these; lanes < 0 or ≥ N are ignored padding).
       qdatas:    per-query pytree, leading axis Q (e.g. LUTs (Q, M, K) for ADC
                  routing or raw queries (Q, D) for exact routing).
       dist_fn:   (qdata, ids (B,)) -> (B,) f32 distances for one query; B is
@@ -264,34 +395,60 @@ def beam_search(neighbors: jax.Array, entry: jax.Array, qdatas,
                  from the returned beam. W must cover ids [0, N) — the
                  visited-set sizing (N+31)//32 + 1 always does. Traced (not
                  static): updating the bitset between calls never re-jits.
+      lb_dist_fn / m_prefix / m_total / prune_eps: probabilistic hop pruning
+                 (DESIGN.md §11). ``lb_dist_fn`` scores the first
+                 ``m_prefix`` of ``m_total`` subspaces
+                 (``make_adc_dist_fn(m_prefix=)``) — a certified lower
+                 bound d_m′ ≤ d_M; each round full-scores only frontier
+                 lanes whose EXTRAPOLATED estimate satisfies
+                 ``d_m′·cal·(1+ε) ≤ τ`` (τ = worst beam distance). All
+                 four must be set; ``prune_eps=0`` (default) compiles the
+                 pass out — bit-identical to the unpruned beam.
+      lb_scale_fn: optional per-query extrapolation calibration
+                 (``make_lb_scale_fn``): qdata -> scalar cal ≥ 1. Default
+                 None uses the uniform mass ratio cal = M/m′, which
+                 over-prunes on anisotropic data (DESIGN.md §11).
     """
-    entry = jnp.asarray(entry, jnp.int32)
     nq = jax.tree.leaves(qdatas)[0].shape[0]
-    entries = jnp.broadcast_to(entry, (nq,)) if entry.ndim == 0 else entry
+    entries = _normalize_entries(entry, nq)
     fn = lambda e, qd: _single_query(neighbors, e, qd, dist_fn, h, max_steps,
-                                     expand=expand, tombstones=tombstones)
+                                     expand=expand, tombstones=tombstones,
+                                     lb_dist_fn=lb_dist_fn,
+                                     m_prefix=m_prefix, m_total=m_total,
+                                     prune_eps=prune_eps,
+                                     lb_scale_fn=lb_scale_fn)
     ids, dists, hops, ndist, rounds = jax.vmap(fn)(entries, qdatas)
     return SearchResult(ids, dists, hops, ndist, rounds)
 
 
 @functools.partial(jax.jit, static_argnames=("dist_fn", "h", "max_steps",
-                                             "trace_len", "expand"))
+                                             "trace_len", "expand",
+                                             "lb_dist_fn", "m_prefix",
+                                             "m_total", "prune_eps",
+                                             "lb_scale_fn"))
 def beam_search_trace(neighbors: jax.Array, entry: jax.Array, qdatas,
                       dist_fn: Callable, *, h: int = 32, max_steps: int = 256,
                       trace_len: int = 64, expand: int = 1,
-                      tombstones: Optional[jax.Array] = None) -> Trace:
+                      tombstones: Optional[jax.Array] = None,
+                      lb_dist_fn: Optional[Callable] = None,
+                      m_prefix: int = 0, m_total: int = 0,
+                      prune_eps: float = 0.0,
+                      lb_scale_fn: Optional[Callable] = None) -> Trace:
     """Beam search that also records the ranked beam at every round.
 
     ``hop_valid[q, t]`` flags ROUNDS (while_loop trips): with expand=E one
     valid slot covers up to E expansions, and the flagged prefix counts
     min(rounds, trace_len) — at expand=1 that is min(hops, trace_len).
     """
-    entry = jnp.asarray(entry, jnp.int32)
     nq = jax.tree.leaves(qdatas)[0].shape[0]
-    entries = jnp.broadcast_to(entry, (nq,)) if entry.ndim == 0 else entry
+    entries = _normalize_entries(entry, nq)
     fn = lambda e, qd: _single_query(neighbors, e, qd, dist_fn, h, max_steps,
                                      trace_len=trace_len, expand=expand,
-                                     tombstones=tombstones)
+                                     tombstones=tombstones,
+                                     lb_dist_fn=lb_dist_fn,
+                                     m_prefix=m_prefix, m_total=m_total,
+                                     prune_eps=prune_eps,
+                                     lb_scale_fn=lb_scale_fn)
     ids, dists, hops, ndist, rounds, tbi, tbd, tbv = \
         jax.vmap(fn)(entries, qdatas)
     return Trace(tbi, tbd, tbv, SearchResult(ids, dists, hops, ndist, rounds))
@@ -309,9 +466,46 @@ def make_exact_dist_fn(vectors: jax.Array) -> Callable:
     return dist_fn
 
 
+def make_lb_scale_fn(*, packed: bool = False, m_prefix: int) -> Callable:
+    """Per-query calibration of the hop-pruning extrapolation factor.
+
+    qdata matches ``make_adc_dist_fn``: a LUT (M, K), or a per-query
+    ``pq.pack.QuantizedLUT`` when ``packed=True``. Returns a scalar
+    ``cal ≥ 1`` — the estimate of ``E[d_M] / E[d_m′]`` under
+    code-independent subspace draws: the ratio of the full LUT's mean mass
+    to the first-``m_prefix`` rows' mean mass. The naive uniform ratio
+    ``M/m′`` assumes every subspace carries equal distance mass; on
+    anisotropic data (decaying spectrum) the LEADING subspaces carry more,
+    so the uniform extrapolation overshoots and over-prunes — this ratio is
+    the data-corrected replacement, free to compute (the query already
+    built the LUT) and exact in expectation when sub-codes are uniform.
+    Clamped below at 1 so d̂ never drops under the certified bound d_m′.
+    """
+    if packed:
+        def scale_fn(qlut):
+            lut, scale, bias = qlut             # (M, 16) u8, (), ()
+            m = lut.shape[0]
+            # zero padding in unused LUT columns deflates every row's mean
+            # by the same K/16 factor — it cancels in the ratio
+            rm = jnp.mean(lut.astype(jnp.float32), axis=-1)   # (M,)
+            num = scale * jnp.sum(rm) + m * bias
+            den = scale * jnp.sum(rm[:m_prefix]) + m_prefix * bias
+            return jnp.maximum(num / jnp.maximum(den, jnp.float32(1e-20)),
+                               jnp.float32(1.0))
+        return scale_fn
+
+    def scale_fn(lut):
+        rm = jnp.mean(lut, axis=-1)                           # (M,)
+        return jnp.maximum(jnp.sum(rm) / jnp.maximum(jnp.sum(rm[:m_prefix]),
+                                                     jnp.float32(1e-20)),
+                           jnp.float32(1.0))
+    return scale_fn
+
+
 def make_adc_dist_fn(codes: jax.Array, *, packed: bool = False,
                      backend: str = "auto",
-                     tombstones: Optional[jax.Array] = None) -> Callable:
+                     tombstones: Optional[jax.Array] = None,
+                     m_prefix: int = 0) -> Callable:
     """qdata = LUT (M, K) — or a per-query ``pq.pack.QuantizedLUT``
     ((M, 16) u8 lut, scale, bias) when ``packed=True``. codes must be
     (N+1, M) sentinel-padded (fs4: (N+1, ceil(M/2)) packed bytes).
@@ -343,10 +537,18 @@ def make_adc_dist_fn(codes: jax.Array, *, packed: bool = False,
       codes never round-trip HBM. The kernel is batched over queries;
       under beam_search's vmap the per-query call batches into the
       kernel's query grid axis.
+
+    ``m_prefix > 0`` makes a PARTIAL-LUT distance over only the first
+    ``m_prefix`` subspaces — a lower bound on the full distance (every LUT
+    entry is a squared subdistance ≥ 0; fs4 dequant uses ``m_prefix · bias``
+    with bias ≥ 0, so the bound also holds in the quantized metric). This is
+    the ``lb_dist_fn`` for ``beam_search`` hop pruning. ``m_prefix=0`` (or
+    ≥ M) is the full distance, code path untouched.
     """
     if tombstones is not None:
         ts = jnp.asarray(tombstones, jnp.uint32)
-        inner = make_adc_dist_fn(codes, packed=packed, backend=backend)
+        inner = make_adc_dist_fn(codes, packed=packed, backend=backend,
+                                 m_prefix=m_prefix)
         n = codes.shape[0] - 1              # codes are sentinel-padded
 
         def dist_fn(qdata, ids):
@@ -365,27 +567,36 @@ def make_adc_dist_fn(codes: jax.Array, *, packed: bool = False,
             def dist_fn(qlut, ids):
                 return ops.hop_adc_fs(codes, ids[None], qlut.lut[None],
                                       qlut.scale[None], qlut.bias[None],
-                                      backend=backend)[0]
+                                      backend=backend, m_prefix=m_prefix)[0]
             return dist_fn
 
         def dist_fn(qlut, ids):
             lut, scale, bias = qlut                   # (M, 16) u8, (), ()
             m = lut.shape[0]
+            mp = m_prefix if 0 < m_prefix < m else m
             p = codes[ids].astype(jnp.int32)          # (B, ceil(M/2))
             nib = jnp.stack([p & 0xF, (p >> 4) & 0xF], axis=-1)
-            c = nib.reshape(p.shape[0], -1)[:, :m]    # (B, M)
-            vals = lut.astype(jnp.int32)[jnp.arange(m)[None, :], c]
+            c = nib.reshape(p.shape[0], -1)[:, :mp]   # (B, mp)
+            vals = lut.astype(jnp.int32)[jnp.arange(mp)[None, :], c]
             acc = jnp.sum(vals, axis=-1)              # (B,) int32, exact
-            return scale * acc.astype(jnp.float32) + m * bias
+            return scale * acc.astype(jnp.float32) + mp * bias
         return dist_fn
 
     m = codes.shape[1]
+    mp = m_prefix if 0 < m_prefix < m else m
     if use_fused:
         from repro.kernels import ops
 
         def dist_fn(lut, ids):
             return ops.hop_adc(codes, ids[None], lut[None],
-                               backend=backend)[0]
+                               backend=backend, m_prefix=m_prefix)[0]
+        return dist_fn
+
+    if mp < m:
+        def dist_fn(lut, ids):
+            c = codes[ids].astype(jnp.int32)[:, :mp]  # (B, mp)
+            vals = lut[jnp.arange(mp)[None, :], c]    # (B, mp)
+            return jnp.sum(vals, axis=-1)
         return dist_fn
 
     def dist_fn(lut, ids):

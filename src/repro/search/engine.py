@@ -10,6 +10,14 @@ DESIGN.md §9): each beam round expands E nodes through one E·R-wide fused
 hop-ADC call, and results report ``rounds`` (sequential trips) next to
 ``hops`` (expansions).
 
+They additionally thread the adaptive-routing knobs (DESIGN.md §11):
+``entries=S`` seeds each query's beam with S near-query entry points from a
+PQ-hash coarse index over the resident codes (search/seed.py — built
+lazily on the first seeded search, per shard for the sharded engines), and
+``prune_eps=ε`` gates each round's full-LUT scoring behind a partial-LUT
+lower bound (``m_prefix`` subspaces, default half). ``entries=1,
+prune_eps=0`` (the defaults) is bit-identical to the classic beam.
+
 * :class:`InMemoryEngine` — codes + codebook + PG in RAM; next-hop selection
   and the final top-k use ONLY PQ distances (no rerank). Memory = N·M bytes
   + graph.
@@ -55,8 +63,9 @@ from repro.graphs.adjacency import Graph
 from repro.graphs.partition import PartitionedGraph
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
-from repro.pq.pack import QuantizedLUT
+from repro.pq.pack import QuantizedLUT, unpack_codes
 from repro.search import beam
+from repro.search import seed as sseed
 from repro.search.beam import SearchResult
 
 # Layout dispatch: every engine accepts EITHER the classic u8 layout
@@ -84,15 +93,53 @@ def _lut_specs(luts):
     return jax.tree.map(lambda a: P(*([None] * jnp.ndim(a))), luts)
 
 
-def _cached_dist_fn(cache: dict, codes_p, luts):
-    """Per-layout hop dist fn, cached so beam_search's jit sees ONE static
-    callable per layout (u8 vs fs4-packed, decided by the lut type)."""
+def _cached_dist_fn(cache: dict, codes_p, luts, m_prefix: int = 0):
+    """Per-(layout, prefix) hop dist fn, cached so beam_search's jit sees
+    ONE static callable per layout (u8 vs fs4-packed, decided by the lut
+    type) and per partial-LUT prefix (``m_prefix>0`` builds the hop-pruning
+    lower-bound fn, DESIGN.md §11)."""
     packed = _is_packed(luts)
-    fn = cache.get(packed)
+    fn = cache.get((packed, m_prefix))
     if fn is None:
-        fn = beam.make_adc_dist_fn(codes_p, packed=packed)
-        cache[packed] = fn
+        fn = beam.make_adc_dist_fn(codes_p, packed=packed,
+                                   m_prefix=m_prefix)
+        cache[(packed, m_prefix)] = fn
     return fn
+
+
+def _cached_scale_fn(cache: dict, luts, m_prefix: int):
+    """Per-(layout, prefix) extrapolation-calibration fn
+    (``beam.make_lb_scale_fn``), cached for the same static-identity reason
+    as ``_cached_dist_fn`` — beam_search's jit must see ONE callable per
+    configuration or every search recompiles."""
+    packed = _is_packed(luts)
+    key = ("cal", packed, m_prefix)
+    fn = cache.get(key)
+    if fn is None:
+        fn = beam.make_lb_scale_fn(packed=packed, m_prefix=m_prefix)
+        cache[key] = fn
+    return fn
+
+
+def _lut_m(luts) -> int:
+    """Number of subquantizers M from either LUT layout."""
+    return (luts.lut if _is_packed(luts) else luts).shape[1]
+
+
+def _prune_cfg(luts, prune_eps: float, m_prefix: int) -> tuple:
+    """Resolve the hop-pruning statics (m_prefix, m_total) for beam_search:
+    ε ≤ 0 disables — (0, 0), the bit-identical path; ``m_prefix=0``
+    auto-picks a QUARTER of the subspaces (an M=1 corpus can never prune).
+    The gate extrapolates the prefix to a full-distance estimate, so a
+    short prefix keeps the partial pass cheap — empirically M/4 prunes as
+    accurately as M/2 at half the partial-pass cost (DESIGN.md §11)."""
+    if prune_eps <= 0:
+        return 0, 0
+    mt = _lut_m(luts)
+    if mt < 2:
+        return 0, 0
+    mp = m_prefix if m_prefix > 0 else max(1, mt // 4)
+    return max(1, min(mp, mt - 1)), mt
 
 
 @dataclasses.dataclass
@@ -105,18 +152,44 @@ class InMemoryEngine:
     def __post_init__(self):
         self._codes_p = kops.pad_sentinel_row(self.codes)
         self._dist_fns = {}
+        self._seedix = None
+
+    def _seed_index(self, luts) -> sseed.SeedIndex:
+        """Coarse seeding index over the resident codes, built lazily on
+        the first ``entries>1`` search (the lut type reveals the layout:
+        fs4 corpora unpack once, host-side)."""
+        if self._seedix is None:
+            codes = jnp.asarray(self.codes)
+            if _is_packed(luts):
+                codes = unpack_codes(codes, _lut_m(luts))
+            self._seedix = sseed.build_seed_index(np.asarray(codes))
+        return self._seedix
 
     def search(self, queries: jax.Array, *, k: int = 10, h: int = 32,
-               max_steps: int = 512, expand: int = 1) -> SearchResult:
+               max_steps: int = 512, expand: int = 1, entries: int = 1,
+               prune_eps: float = 0.0, m_prefix: int = 0) -> SearchResult:
         luts = self.lut_fn(queries)
         dist_fn = _cached_dist_fn(self._dist_fns, self._codes_p, luts)
-        entry = (self.entry_fn(queries) if self.entry_fn is not None
-                 else self.graph.medoid)
+        mp, mt = _prune_cfg(luts, prune_eps, m_prefix)
+        lb_fn = (_cached_dist_fn(self._dist_fns, self._codes_p, luts, mp)
+                 if mp else None)
+        cal_fn = _cached_scale_fn(self._dist_fns, luts, mp) if mp else None
+        seed_cost = jnp.int32(0)
+        if entries > 1:
+            ix = self._seed_index(luts)
+            entry = ix.seed_entries(luts, entries)
+            seed_cost = jnp.int32(ix.n_candidates)
+        else:
+            entry = (self.entry_fn(queries) if self.entry_fn is not None
+                     else self.graph.medoid)
         res = beam.beam_search(self.graph.neighbors, entry, luts,
                                dist_fn, h=h, max_steps=max_steps,
-                               expand=expand)
+                               expand=expand, lb_dist_fn=lb_fn,
+                               m_prefix=mp, m_total=mt,
+                               prune_eps=prune_eps if mp else 0.0,
+                               lb_scale_fn=cal_fn)
         return SearchResult(res.ids[:, :k], res.dists[:, :k], res.hops,
-                            res.n_dist, res.rounds)
+                            res.n_dist + seed_cost, res.rounds)
 
     def memory_bytes(self) -> int:
         return (self.codes.size * self.codes.dtype.itemsize
@@ -138,34 +211,66 @@ class HybridEngine:
         self._vec_p = kops.pad_sentinel_row(
             jnp.asarray(self.vectors, jnp.float32))
         self._dist_fns = {}
+        self._seedix = None
+
+    def _seed_index(self, luts) -> sseed.SeedIndex:
+        if self._seedix is None:
+            codes = jnp.asarray(self.codes)
+            if _is_packed(luts):
+                codes = unpack_codes(codes, _lut_m(luts))
+            self._seedix = sseed.build_seed_index(np.asarray(codes))
+        return self._seedix
 
     def search(self, queries: jax.Array, *, k: int = 10, h: int = 32,
-               max_steps: int = 512, rerank: int = 0,
-               expand: int = 1) -> SearchResult:
+               max_steps: int = 512, rerank: int = 0, expand: int = 1,
+               entries: int = 1, prune_eps: float = 0.0,
+               m_prefix: int = 0) -> SearchResult:
         """rerank = how many beam candidates to re-rank exactly (0 → h)."""
         rerank = rerank or h
         k = min(k, rerank)  # cannot return more results than candidates
         luts = self.lut_fn(queries)
         dist_fn = _cached_dist_fn(self._dist_fns, self._codes_p, luts)
-        entry = (self.entry_fn(queries) if self.entry_fn is not None
-                 else self.graph.medoid)
+        mp, mt = _prune_cfg(luts, prune_eps, m_prefix)
+        lb_fn = (_cached_dist_fn(self._dist_fns, self._codes_p, luts, mp)
+                 if mp else None)
+        cal_fn = _cached_scale_fn(self._dist_fns, luts, mp) if mp else None
+        seed_cost = jnp.int32(0)
+        if entries > 1:
+            ix = self._seed_index(luts)
+            entry = ix.seed_entries(luts, entries)
+            seed_cost = jnp.int32(ix.n_candidates)
+        else:
+            entry = (self.entry_fn(queries) if self.entry_fn is not None
+                     else self.graph.medoid)
         res = beam.beam_search(self.graph.neighbors, entry, luts,
                                dist_fn, h=h, max_steps=max_steps,
-                               expand=expand)
+                               expand=expand, lb_dist_fn=lb_fn,
+                               m_prefix=mp, m_total=mt,
+                               prune_eps=prune_eps if mp else 0.0,
+                               lb_scale_fn=cal_fn)
         ids, dists = _exact_rerank(self._vec_p, queries, res.ids, rerank, k)
-        return SearchResult(ids, dists, res.hops, res.n_dist, res.rounds)
+        return SearchResult(ids, dists, res.hops, res.n_dist + seed_cost,
+                            res.rounds)
 
-    def io_time(self, res: SearchResult, *, expand: int = 1) -> jax.Array:
+    def io_time(self, res: SearchResult, *, expand: int = 1,
+                entries: int = 1) -> jax.Array:
         """Modeled SSD time per query: one 4 KiB block read per expansion,
         but with frontier batching (``expand=E``) the ≤E reads of a round
         are issued CONCURRENTLY — DiskANN's beam-width IO batching — so the
         wall-clock is ROUNDS × latency, not hops × latency. Uses the
         measured per-query round count when the result carries one, else
-        the ceil(hops/E) model."""
+        the ceil(hops/E) model.
+
+        Multi-entry seeding (``entries>1``) charges ONE extra batched read:
+        the bucket-probe candidates are contiguous small rows fetched in a
+        single IO burst (the same batching model as a round's ≤E
+        concurrent block reads), not a read per entry."""
         if res.rounds is not None:
             rounds = res.rounds.astype(jnp.float32)
         else:
             rounds = jnp.ceil(res.hops.astype(jnp.float32) / expand)
+        if entries > 1:
+            rounds = rounds + jnp.float32(1.0)
         return rounds * self.io_latency_s
 
     def memory_bytes(self) -> int:
@@ -325,10 +430,14 @@ class ShardedEngine:
     def search(self, queries: jax.Array, *, k: int = 10,
                alive: Optional[Sequence[bool]] = None,
                h: Optional[int] = None,
-               expand: Optional[int] = None) -> SearchResult:
-        """Exhaustive sharded scan (``h``/``expand`` accepted for
-        engine-protocol compatibility and ignored — there is no beam)."""
-        del h, expand
+               expand: Optional[int] = None,
+               entries: Optional[int] = None,
+               prune_eps: Optional[float] = None,
+               m_prefix: Optional[int] = None) -> SearchResult:
+        """Exhaustive sharded scan (``h``/``expand``/``entries``/
+        ``prune_eps``/``m_prefix`` accepted for engine-protocol
+        compatibility and ignored — there is no beam to seed or prune)."""
+        del h, expand, entries, prune_eps, m_prefix
         queries = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
         n_local = self._codes_s.shape[0] // self.n_shards
         kk = min(k, n_local)
@@ -339,7 +448,12 @@ class ShardedEngine:
             alive = [True] * self.n_shards
         ids, ds = partial_merge(list(gids), list(dists), alive, k)
         q = queries.shape[0]
-        scanned = n_local * sum(bool(a) for a in alive)
+        # n_dist counts REAL rows scanned: each alive shard scanned its
+        # slice of the n corpus rows — the divisibility-padding rows it
+        # also touched are +inf-masked sentinels, not distance work
+        scanned = sum(
+            max(0, min(self.n - i * n_local, n_local))
+            for i, a in enumerate(alive) if a)
         return SearchResult(jnp.asarray(ids), jnp.asarray(ds),
                             hops=jnp.zeros((q,), jnp.int32),
                             n_dist=jnp.full((q,), scanned, jnp.int32),
@@ -364,14 +478,45 @@ def _shard_codes_pad(codes_l: jax.Array) -> jax.Array:
 
 
 def _local_beam(neighbors_l, medoid_l, codes_l, luts, *, h: int,
-                max_steps: int, backend: str, expand: int):
+                max_steps: int, backend: str, expand: int,
+                seed_l=None, seed_cfg=None, prune_eps: float = 0.0,
+                m_prefix: int = 0):
     """Route over THIS shard's subgraph with ADC distances (u8 or fs4-
     packed layout, decided by the lut type). Returns the raw per-shard
-    beam result (local ids)."""
-    dist_fn = beam.make_adc_dist_fn(_shard_codes_pad(codes_l),
-                                    packed=_is_packed(luts), backend=backend)
-    return beam.beam_search(neighbors_l[0], medoid_l[0], luts, dist_fn,
-                            h=h, max_steps=max_steps, expand=expand)
+    beam result (local ids).
+
+    ``seed_l`` = (table, pivots, codes) shard blocks (leading shard axis 1)
+    with ``seed_cfg`` = (k, m_hash, entries) statics: each shard seeds its
+    local beam from its OWN coarse index — no cross-shard traffic, the
+    seeding runs inside the scatter body. ``prune_eps``/``m_prefix``
+    compile the partial-LUT hop-pruning pass into the local beam
+    (DESIGN.md §11). Seeded searches fold the probe's scored candidates
+    into ``n_dist``."""
+    codes_p = _shard_codes_pad(codes_l)
+    packed = _is_packed(luts)
+    dist_fn = beam.make_adc_dist_fn(codes_p, packed=packed, backend=backend)
+    mp, mt = _prune_cfg(luts, prune_eps, m_prefix)
+    lb_fn = (beam.make_adc_dist_fn(codes_p, packed=packed, backend=backend,
+                                   m_prefix=mp) if mp else None)
+    cal_fn = (beam.make_lb_scale_fn(packed=packed, m_prefix=mp)
+              if mp else None)
+    seed_cost = 0
+    if seed_l is not None:
+        sk, smh, n_entries = seed_cfg
+        tbl, piv, scodes = seed_l
+        entry = sseed.seed_entries_from(tbl[0], piv[0], scodes[0], luts,
+                                        k=sk, m_hash=smh, s=n_entries)
+        seed_cost = int(tbl.shape[2] + piv.shape[1])
+    else:
+        entry = medoid_l[0]
+    res = beam.beam_search(neighbors_l[0], entry, luts, dist_fn,
+                           h=h, max_steps=max_steps, expand=expand,
+                           lb_dist_fn=lb_fn, m_prefix=mp, m_total=mt,
+                           prune_eps=prune_eps if mp else 0.0,
+                           lb_scale_fn=cal_fn)
+    if seed_cost:
+        res = res._replace(n_dist=res.n_dist + jnp.int32(seed_cost))
+    return res
 
 
 def _mask_to_global(ids, dists, *, mesh, axes, n_local: int, n_valid: int):
@@ -384,27 +529,42 @@ def _mask_to_global(ids, dists, *, mesh, axes, n_local: int, n_valid: int):
     return gids, jnp.where(ok, dists, jnp.inf)
 
 
-def _local_graph_topk(neighbors_l, medoid_l, codes_l, luts, *, mesh, axes,
+def _local_graph_topk(neighbors_l, medoid_l, codes_l, *rest, mesh, axes,
                       n_local: int, k: int, h: int, max_steps: int,
-                      n_valid: int, backend: str, expand: int):
+                      n_valid: int, backend: str, expand: int,
+                      seed_cfg=None, prune_eps: float = 0.0,
+                      m_prefix: int = 0):
     """One shard's scatter half: beam-search my subgraph, return LOCAL
-    top-k with GLOBAL ids. (1, Q, k) leading shard axis for the gather."""
+    top-k with GLOBAL ids. (1, Q, k) leading shard axis for the gather.
+    ``rest`` is (luts,) classically, (table, pivots, seed_codes, luts)
+    when per-shard seeding rides along (``seed_cfg`` set)."""
+    seed_l = rest[:3] if seed_cfg is not None else None
+    luts = rest[-1]
     res = _local_beam(neighbors_l, medoid_l, codes_l, luts, h=h,
-                      max_steps=max_steps, backend=backend, expand=expand)
+                      max_steps=max_steps, backend=backend, expand=expand,
+                      seed_l=seed_l, seed_cfg=seed_cfg,
+                      prune_eps=prune_eps, m_prefix=m_prefix)
     gids, d = _mask_to_global(res.ids[:, :k], res.dists[:, :k], mesh=mesh,
                               axes=axes, n_local=n_local, n_valid=n_valid)
     return gids[None], d[None], res.hops[None], res.n_dist[None], \
         res.rounds[None]
 
 
-def _local_graph_serve(neighbors_l, medoid_l, codes_l, vectors_l, luts,
-                       queries, *, mesh, axes, n_local: int, k: int, h: int,
+def _local_graph_serve(neighbors_l, medoid_l, codes_l, vectors_l, *rest,
+                       mesh, axes, n_local: int, k: int, h: int,
                        shortlist: int, max_steps: int, n_valid: int,
-                       backend: str, expand: int):
+                       backend: str, expand: int, seed_cfg=None,
+                       prune_eps: float = 0.0, m_prefix: int = 0):
     """Scatter half with DiskANN-style local refinement: beam shortlist →
-    exact rerank against my vector rows → LOCAL top-k, global ids."""
+    exact rerank against my vector rows → LOCAL top-k, global ids.
+    ``rest`` is (luts, queries), preceded by the three seed blocks when
+    ``seed_cfg`` is set (as in :func:`_local_graph_topk`)."""
+    seed_l = rest[:3] if seed_cfg is not None else None
+    luts, queries = rest[-2], rest[-1]
     res = _local_beam(neighbors_l, medoid_l, codes_l, luts, h=h,
-                      max_steps=max_steps, backend=backend, expand=expand)
+                      max_steps=max_steps, backend=backend, expand=expand,
+                      seed_l=seed_l, seed_cfg=seed_cfg,
+                      prune_eps=prune_eps, m_prefix=m_prefix)
     cand = jnp.minimum(res.ids[:, :shortlist], n_local)   # clamp sentinel
     vec_p = kops.pad_sentinel_row(vectors_l[0])
     cv = vec_p[cand]                                      # (Q, shortlist, D)
@@ -421,7 +581,9 @@ def _local_graph_serve(neighbors_l, medoid_l, codes_l, vectors_l, luts,
 def sharded_graph_topk(mesh, axes: tuple, neighbors, medoids, codes, luts, *,
                        k: int, h: int = 32, max_steps: int = 512,
                        n_valid: Optional[int] = None, backend: str = "auto",
-                       expand: int = 1):
+                       expand: int = 1, seed_stack=None, seed_k: int = 0,
+                       seed_m_hash: int = 0, entries: int = 1,
+                       prune_eps: float = 0.0, m_prefix: int = 0):
     """Scatter: shard-stacked independent subgraphs × replicated LUTs →
     per-shard (S, Q, k) GLOBAL ids + ADC distances (+ (S, Q)
     hops/n_dist/rounds).
@@ -439,6 +601,14 @@ def sharded_graph_topk(mesh, axes: tuple, neighbors, medoids, codes, luts, *,
       expand:     frontier batch size E of each local beam (DESIGN.md §9) —
                   every round scores one E·R-wide fused hop-ADC call
                   instead of E narrow ones.
+      seed_stack: optional (table (S, B, C), pivots (S, P), codes
+                  (S, n_local, M)) shard-stacked coarse-index arrays
+                  (seed.build_seed_index per shard) with ``seed_k``/
+                  ``seed_m_hash`` their shared statics: each shard seeds
+                  ``entries`` local entry points inside its scatter body
+                  (DESIGN.md §11).
+      prune_eps/m_prefix: partial-LUT hop pruning of each local beam
+                  (ε = 0 off — bit-identical).
 
     Each shard routes ONLY over its own subgraph — no inter-shard edges, no
     mid-search collectives; the only cross-device traffic is the O(S·Q·k)
@@ -446,42 +616,62 @@ def sharded_graph_topk(mesh, axes: tuple, neighbors, medoids, codes, luts, *,
     """
     s = shd.axis_size(mesh, axes)
     n_local = neighbors.shape[1]
+    seeding = seed_stack is not None and entries > 1
     body = partial(_local_graph_topk, mesh=mesh, axes=axes, n_local=n_local,
                    k=k, h=h, max_steps=max_steps,
                    n_valid=s * n_local if n_valid is None else n_valid,
-                   backend=backend, expand=expand)
+                   backend=backend, expand=expand,
+                   seed_cfg=(seed_k, seed_m_hash, entries) if seeding
+                   else None, prune_eps=prune_eps, m_prefix=m_prefix)
+    ins = [neighbors, medoids, codes]
+    specs = [P(axes, None, None), P(axes), P(axes, None, None)]
+    if seeding:
+        ins += list(seed_stack)
+        specs += [P(axes, None, None), P(axes, None), P(axes, None, None)]
+    ins.append(luts)
+    specs.append(_lut_specs(luts))
     return shard_map(
-        body, mesh=mesh,
-        in_specs=(P(axes, None, None), P(axes), P(axes, None, None),
-                  _lut_specs(luts)),
+        body, mesh=mesh, in_specs=tuple(specs),
         out_specs=(P(axes, None, None), P(axes, None, None),
-                   P(axes, None), P(axes, None), P(axes, None)))(
-            neighbors, medoids, codes, luts)
+                   P(axes, None), P(axes, None), P(axes, None)))(*ins)
 
 
 def sharded_graph_serve(mesh, axes: tuple, neighbors, medoids, codes,
                         vectors, luts, queries, *, k: int, h: int = 32,
                         shortlist: int = 0, max_steps: int = 512,
                         n_valid: Optional[int] = None,
-                        backend: str = "auto", expand: int = 1):
+                        backend: str = "auto", expand: int = 1,
+                        seed_stack=None, seed_k: int = 0,
+                        seed_m_hash: int = 0, entries: int = 1,
+                        prune_eps: float = 0.0, m_prefix: int = 0):
     """Scatter with local exact rerank: like :func:`sharded_graph_topk` but
     every shard re-ranks its beam shortlist against its resident vector
     rows (S, n_local, D) before answering — the DiskANN shortlist pattern
-    with the SSD replaced by the shard's own HBM."""
+    with the SSD replaced by the shard's own HBM. Adaptive-routing kwargs
+    (``seed_stack``/``entries``/``prune_eps``/``m_prefix``) as in
+    :func:`sharded_graph_topk`."""
     s = shd.axis_size(mesh, axes)
     n_local = neighbors.shape[1]
+    seeding = seed_stack is not None and entries > 1
     body = partial(_local_graph_serve, mesh=mesh, axes=axes,
                    n_local=n_local, k=k, h=h,
                    shortlist=min(shortlist or h, h), max_steps=max_steps,
                    n_valid=s * n_local if n_valid is None else n_valid,
-                   backend=backend, expand=expand)
+                   backend=backend, expand=expand,
+                   seed_cfg=(seed_k, seed_m_hash, entries) if seeding
+                   else None, prune_eps=prune_eps, m_prefix=m_prefix)
+    ins = [neighbors, medoids, codes, vectors]
+    specs = [P(axes, None, None), P(axes), P(axes, None, None),
+             P(axes, None, None)]
+    if seeding:
+        ins += list(seed_stack)
+        specs += [P(axes, None, None), P(axes, None), P(axes, None, None)]
+    ins += [luts, queries]
+    specs += [_lut_specs(luts), P(None, None)]
     return shard_map(
-        body, mesh=mesh,
-        in_specs=(P(axes, None, None), P(axes), P(axes, None, None),
-                  P(axes, None, None), _lut_specs(luts), P(None, None)),
+        body, mesh=mesh, in_specs=tuple(specs),
         out_specs=(P(axes, None, None), P(axes, None, None),
-                   P(axes, None), P(axes, None), P(axes, None)))(
-            neighbors, medoids, codes, vectors, luts, queries)
+                   P(axes, None), P(axes, None), P(axes, None)))(*ins)
 
 
 def _stack_rows(x: jax.Array, n_shards: int, n_local: int) -> jax.Array:
@@ -563,45 +753,99 @@ class ShardedGraphEngine:
                 _stack_rows(vec, self.n_shards, n_local), rows3)
             self.vectors = self._vec_s
         self._jit_cache = {}
+        self._seedstk = None
+
+    def _seed_stack(self, luts):
+        """Per-shard coarse seeding indexes, built lazily on the first
+        ``entries>1`` search: one seed.build_seed_index over each shard's
+        LOCAL rows (padding rows of the last shard excluded — a beam must
+        never START on padding), stacked to (S, ...) arrays and device_put
+        with the shard-stack layout. ``k``/``m_hash`` are shared across
+        shards so one static shard_map body serves all of them."""
+        if self._seedstk is None:
+            codes = np.asarray(jax.device_get(self._codes_s))  # (S, nl, .)
+            if _is_packed(luts):
+                m = _lut_m(luts)
+                codes = np.stack([np.asarray(unpack_codes(jnp.asarray(c), m))
+                                  for c in codes])
+            s, nl = codes.shape[:2]
+            k = int(codes.max()) + 1
+            m_hash = sseed.auto_m_hash(codes.shape[2], k)
+            tbls, pivs = [], []
+            for i in range(s):
+                real = max(1, min(self.n - i * nl, nl))
+                ix = sseed.build_seed_index(codes[i, :real], k=k,
+                                            m_hash=m_hash)
+                tbls.append(np.asarray(ix.table))
+                pivs.append(np.asarray(ix.pivots))
+            pw = max(p.shape[0] for p in pivs)
+            pivs = [np.pad(p, (0, pw - p.shape[0]), constant_values=-1)
+                    for p in pivs]
+            rows3 = shd.named(self.mesh, shd.rpq_shard_stack_spec(self.mesh))
+            rows2 = shd.named(self.mesh,
+                              shd.rpq_shard_stack_spec(self.mesh, 2))
+            self._seedstk = (
+                jax.device_put(jnp.asarray(np.stack(tbls)), rows3),
+                jax.device_put(jnp.asarray(np.stack(pivs)), rows2),
+                jax.device_put(jnp.asarray(codes, jnp.int32), rows3),
+                k, m_hash)
+        return self._seedstk
 
     def _scatter(self, luts, queries, k: int, h: int, max_steps: int,
-                 expand: int):
-        fn = self._jit_cache.get((k, h, max_steps, expand))
+                 expand: int, entries: int, prune_eps: float,
+                 m_prefix: int):
+        key = (k, h, max_steps, expand, entries, prune_eps, m_prefix)
+        seed_stack = seed_k = seed_m_hash = None
+        if entries > 1:
+            *seed_stack, seed_k, seed_m_hash = self._seed_stack(luts)
+            seed_stack = tuple(seed_stack)
+        fn = self._jit_cache.get(key)
         if fn is None:
+            adaptive = dict(entries=entries, prune_eps=prune_eps,
+                            m_prefix=m_prefix, seed_k=seed_k or 0,
+                            seed_m_hash=seed_m_hash or 0)
             if self.vectors is None:
-                fn = jax.jit(lambda nb, md, cd, lu: sharded_graph_topk(
-                    self.mesh, self._axes, nb, md, cd, lu, k=k, h=h,
-                    max_steps=max_steps, n_valid=self.n,
-                    backend=self.backend, expand=expand))
+                fn = jax.jit(
+                    lambda nb, md, cd, lu, seed: sharded_graph_topk(
+                        self.mesh, self._axes, nb, md, cd, lu, k=k, h=h,
+                        max_steps=max_steps, n_valid=self.n,
+                        backend=self.backend, expand=expand,
+                        seed_stack=seed, **adaptive))
             else:
                 fn = jax.jit(
-                    lambda nb, md, cd, vc, lu, q: sharded_graph_serve(
+                    lambda nb, md, cd, vc, lu, q, seed: sharded_graph_serve(
                         self.mesh, self._axes, nb, md, cd, vc, lu, q, k=k,
                         h=h, shortlist=h, max_steps=max_steps,
                         n_valid=self.n, backend=self.backend,
-                        expand=expand))
-            self._jit_cache[(k, h, max_steps, expand)] = fn
+                        expand=expand, seed_stack=seed, **adaptive))
+            self._jit_cache[key] = fn
         if self.vectors is None:
-            return fn(self._nbrs_s, self._medoids_s, self._codes_s, luts)
+            return fn(self._nbrs_s, self._medoids_s, self._codes_s, luts,
+                      seed_stack)
         return fn(self._nbrs_s, self._medoids_s, self._codes_s, self._vec_s,
-                  luts, queries)
+                  luts, queries, seed_stack)
 
     def search(self, queries: jax.Array, *, k: int = 10, h: int = 32,
                max_steps: int = 512, expand: int = 1,
-               alive: Optional[Sequence[bool]] = None) -> SearchResult:
+               alive: Optional[Sequence[bool]] = None, entries: int = 1,
+               prune_eps: float = 0.0, m_prefix: int = 0) -> SearchResult:
         """Route every query on every (alive) shard, merge the shortlists.
 
         ``hops``/``n_dist`` report the SUM over alive shards — the total
         work the mesh did for the query, comparable to a single-device
         beam's counters. ``rounds`` reports the MAX over alive shards: the
         shards route concurrently, so the slowest shard's sequential trip
-        count is the query's latency proxy.
+        count is the query's latency proxy. ``entries``/``prune_eps``/
+        ``m_prefix`` are the adaptive-routing knobs (DESIGN.md §11),
+        applied PER SHARD: every shard seeds its local beam from its own
+        coarse index and prunes its own hops.
         """
         queries = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
         kk = min(k, h, self.graph.n_local)
         luts = jax.tree.map(jnp.asarray, self.lut_fn(queries))
         gids, dists, hops, ndist, rounds = self._scatter(
-            luts, queries, kk, h, max_steps, expand)
+            luts, queries, kk, h, max_steps, expand, entries, prune_eps,
+            m_prefix)
         gids, dists = np.asarray(gids), np.asarray(dists)
         if alive is None:
             alive = [True] * self.n_shards

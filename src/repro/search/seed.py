@@ -1,0 +1,200 @@
+"""PQ-hash multi-entry seeding — the coarse half of adaptive routing
+(DESIGN.md §11; PQTable, PAPERS.md arxiv 1704.06556).
+
+The classic beam starts every query at the one medoid and spends its first
+~half of the walk just escaping the medoid's neighborhood. This module
+builds a PQTable-style coarse index over the RESIDENT PQ codes — no extra
+training, no new quantizer — and turns a query's own LUT into S near-query
+entry points:
+
+* **Hash buckets** keyed on the first ``m_hash`` subquantizer codes: bucket
+  key = base-K positional fold ``sum_j code_j · K^j``. The QUERY side gets
+  its key for free from the LUT it already built — ``argmin_k lut[j, k]``
+  IS the sub-code the quantizer would assign the query's j-th subvector
+  (same codebook, same metric), so hashing costs one argmin over the first
+  ``m_hash`` LUT rows. Rows landing in the same bucket agree with the query
+  on their first sub-codes — cheap coarse locality.
+* **Pivot fallback**: ``n_pivots`` rows strided across the corpus are
+  ALWAYS appended to the candidate set, so an empty/thin bucket degrades to
+  bulk-ADC-over-sampled-pivots instead of failing (and a full bucket still
+  gains corpus-wide diversity).
+
+``seed_entries`` scores bucket ∪ pivots with the full LUT in one bulk ADC
+gather, dedupes, and returns the fixed-shape (Q, S) top-S ids —
+``beam_search``'s multi-entry ``entry`` argument. Invalid lanes are -1
+(the beam treats them as padding). Tombstoned candidates (streaming) score
+``DEAD_ENTRY_DIST``: live seeds always outrank them, but an all-dead
+candidate set still returns finite entries that route, exactly like the
+classic deleted-medoid case.
+
+Everything here is fixed-shape: bucket table (K^m_hash, bucket_cap) with -1
+padding, candidate set (bucket_cap + n_pivots) per query — shard_map- and
+jit-friendly, so the sharded engines seed per-shard INSIDE the scatter
+body (``seed_entries_from`` is the functional core they compile).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.pq.pack import QuantizedLUT
+from repro.search.beam import DEAD_ENTRY_DIST, INF, _bit_get, \
+    _first_occurrence
+
+# Bucket-count ceiling for auto_m_hash: K^m_hash buckets ≤ this. 4096
+# int32×bucket_cap rows is ≤ 512 KiB at the default cap — resident
+# everywhere — while K=64 still gets 2 hashed subspaces and K=16 gets 3.
+MAX_BUCKETS = 4096
+
+
+def auto_m_hash(m: int, k: int, max_buckets: int = MAX_BUCKETS) -> int:
+    """Largest prefix length t ∈ [1, min(m, 4)] with K^t ≤ max_buckets."""
+    t = 1
+    while t < min(m, 4) and k ** (t + 1) <= max_buckets:
+        t += 1
+    return t
+
+
+@dataclasses.dataclass(frozen=True)
+class SeedIndex:
+    """Coarse index over one corpus (or one shard's rows).
+
+    Attributes:
+      table:  (K^m_hash, bucket_cap) int32 bucket members, -1 padded.
+      pivots: (P,) int32 strided sample rows (always-valid fallback).
+      codes:  (N, M) int32 UNPACKED resident codes (scores the candidates;
+              for fs4 corpora this is the unpacked copy — N·M·4 bytes,
+              small next to the vectors the corpus already dropped).
+      k:      codebook size the keys are folded in (static).
+      m_hash: hashed prefix length (static).
+    """
+    table: jax.Array
+    pivots: jax.Array
+    codes: jax.Array
+    k: int
+    m_hash: int
+
+    @property
+    def n_candidates(self) -> int:
+        """Candidates scored per query (bucket_cap + n_pivots)."""
+        return int(self.table.shape[1] + self.pivots.shape[0])
+
+    def seed_entries(self, luts, s: int,
+                     tombstones: Optional[jax.Array] = None) -> jax.Array:
+        """(Q, S) int32 entry sets for this query batch (-1 = no seed)."""
+        return seed_entries_from(self.table, self.pivots, self.codes, luts,
+                                 tombstones, k=self.k, m_hash=self.m_hash,
+                                 s=s)
+
+
+def build_seed_index(codes, *, k: Optional[int] = None,
+                     m_hash: Optional[int] = None, bucket_cap: int = 16,
+                     n_pivots: int = 32,
+                     max_buckets: int = MAX_BUCKETS) -> SeedIndex:
+    """Build the coarse index from UNPACKED (N, M) codes (host, numpy).
+
+    ``k=None`` derives the codebook size from the codes themselves
+    (max + 1) — build and query side must fold keys in the SAME base, and
+    the query side must argmin only the first k LUT columns (quantize_luts
+    zero-pads fs4 tables to 16 columns; an argmin over the padding would
+    always pick it). Bucket overflow keeps the FIRST bucket_cap members
+    (row order — Vamana medoid-adjacent rows come early on no particular
+    schedule; any stable subset works, the pivots add diversity anyway).
+    """
+    codes_np = np.asarray(codes)
+    n, m = codes_np.shape
+    if n == 0:
+        raise ValueError("build_seed_index: empty corpus")
+    if k is None:
+        k = int(codes_np.max()) + 1
+    if m_hash is None:
+        m_hash = auto_m_hash(m, k, max_buckets)
+    m_hash = max(1, min(m_hash, m))
+    nb = k ** m_hash
+    radix = k ** np.arange(m_hash, dtype=np.int64)
+    key = (codes_np[:, :m_hash].astype(np.int64) * radix).sum(axis=1)
+    order = np.argsort(key, kind="stable")
+    sk = key[order]
+    # rank of each row within its (sorted) bucket run, fully vectorized
+    rank = np.arange(n) - np.searchsorted(sk, sk, side="left")
+    table = np.full((nb, bucket_cap), -1, np.int32)
+    keep = rank < bucket_cap
+    table[sk[keep], rank[keep]] = order[keep].astype(np.int32)
+    n_pivots = max(1, min(n_pivots, n))
+    stride = max(1, n // n_pivots)
+    pivots = np.arange(0, n, stride, dtype=np.int32)[:n_pivots]
+    return SeedIndex(jnp.asarray(table), jnp.asarray(pivots),
+                     jnp.asarray(codes_np, jnp.int32), k, m_hash)
+
+
+def _query_keys(luts, k: int, m_hash: int) -> jax.Array:
+    """(Q,) bucket keys from the LUTs the caller already built: per hashed
+    subspace, the argmin LUT column is the sub-code the quantizer would
+    assign the query's subvector. Works on both layouts — the u8 table's
+    argmin is the same heuristic in the quantized metric. Columns ≥ k are
+    sliced off FIRST (fs4 tables are zero-padded to 16 — padding would
+    argmin-win)."""
+    lut = luts.lut if isinstance(luts, QuantizedLUT) else luts
+    sub = jnp.argmin(lut[:, :m_hash, :k].astype(jnp.int32)
+                     if lut.dtype == jnp.uint8 else lut[:, :m_hash, :k],
+                     axis=-1).astype(jnp.int32)
+    # int32 is exact: K^m_hash ≤ MAX_BUCKETS (auto_m_hash enforces it).
+    radix = k ** jnp.arange(m_hash, dtype=jnp.int32)
+    return jnp.sum(sub * radix, axis=1)
+
+
+def _candidate_dists(codes: jax.Array, cand: jax.Array, luts) -> jax.Array:
+    """Full-LUT ADC of each query's candidate rows: (Q, C) f32. cand must
+    already be masked to valid rows (callers gather row 0 for pads and inf
+    the result)."""
+    rows = codes[cand]                                     # (Q, C, M)
+    if isinstance(luts, QuantizedLUT):
+        m = luts.lut.shape[1]
+        vals = jnp.take_along_axis(
+            luts.lut.astype(jnp.int32)[:, None],           # (Q, 1, M, 16)
+            rows[..., None], axis=3)[..., 0]               # (Q, C, M)
+        acc = jnp.sum(vals, axis=-1)
+        return (luts.scale[:, None] * acc.astype(jnp.float32)
+                + m * luts.bias[:, None])
+    vals = jnp.take_along_axis(luts[:, None], rows[..., None],
+                               axis=3)[..., 0]             # (Q, C, M)
+    return jnp.sum(vals.astype(jnp.float32), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "m_hash", "s"))
+def seed_entries_from(table, pivots, codes, luts, tombstones=None, *,
+                      k: int, m_hash: int, s: int) -> jax.Array:
+    """Functional core of :meth:`SeedIndex.seed_entries` — raw arrays in,
+    (Q, S) int32 entry sets out. This is what the sharded engines call
+    inside ``shard_map`` with per-shard table/pivots/codes blocks.
+
+    Per query: bucket members ∪ pivots (fixed width C = bucket_cap +
+    n_pivots) → dedupe → one bulk full-LUT ADC → tombstone-aware top-S.
+    Lanes that found no candidate return -1 (never happens in practice:
+    the pivots are always valid when S ≤ n_pivots).
+    """
+    nq = jax.tree.leaves(luts)[0].shape[0]
+    n = codes.shape[0]
+    bkey = _query_keys(luts, k, m_hash)                    # (Q,)
+    bucket = table[bkey]                                   # (Q, cap)
+    cand = jnp.concatenate(
+        [bucket, jnp.broadcast_to(pivots[None], (nq, pivots.shape[0]))],
+        axis=1)                                            # (Q, C)
+    ok = (cand >= 0) & (cand < n)
+    uniq = jax.vmap(_first_occurrence)(cand, ok)
+    d = _candidate_dists(codes, jnp.where(uniq, cand, 0), luts)
+    d = jnp.where(uniq, d, INF)
+    if tombstones is not None:
+        dead = (_bit_get(tombstones, jnp.where(ok, cand, 0)).astype(bool)
+                & ok)
+        d = jnp.where(uniq & dead, DEAD_ENTRY_DIST, d)
+    neg, order = jax.lax.top_k(-d, s)
+    sd = -neg
+    return jnp.where(sd < INF, jnp.take_along_axis(cand, order, axis=1),
+                     -1).astype(jnp.int32)

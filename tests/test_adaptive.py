@@ -1,0 +1,319 @@
+"""Adaptive routing (DESIGN.md §11): PQ-hash multi-entry seeding +
+probabilistic hop pruning.
+
+The contracts under test:
+
+* ``entries=1`` / ``prune_eps=0`` is BIT-identical to the classic beam —
+  the adaptive machinery compiles out entirely (regression bar for every
+  earlier PR's behavior).
+* Multi-entry seeding routes: empty hash buckets fall back to the strided
+  pivots, an all-tombstoned candidate set still returns finite entries
+  (DEAD_ENTRY_DIST routing, the classic deleted-medoid case), and seeded
+  search matches baseline recall with fewer sequential rounds.
+* The partial-LUT prefix is a true lower bound on both layouts and the
+  kernels' ``m_prefix`` path agrees with the sliced reference oracle.
+* ``n_dist`` counts actually-scored lanes only: sentinel padding never
+  inflates it (at any expand), streaming charges occupied delta slots
+  only, and the hybrid IO model charges the whole seed probe as ONE
+  batched read.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.graphs import Graph
+from repro.graphs.partition import build_partitioned_vamana
+from repro.kernels import ops
+from repro.pq import base as pqbase
+from repro.pq import pack, train_pq, train_pq_fs4
+from repro.search.beam import beam_search, make_adc_dist_fn, \
+    make_exact_dist_fn
+from repro.search.engine import (HybridEngine, InMemoryEngine,
+                                 ShardedGraphEngine)
+from repro.search.metrics import recall_at_k
+from repro.search.seed import build_seed_index, seed_entries_from
+
+
+@pytest.fixture(scope="module")
+def setup(clustered_data, small_graph):
+    x, q, gt = clustered_data
+    model = train_pq(jax.random.PRNGKey(0), x, 8, 64, iters=8)
+    fs4 = train_pq_fs4(jax.random.PRNGKey(3), x, 8, iters=8)
+    return dict(x=x, q=q, gt=np.asarray(gt), graph=small_graph,
+                model=model, codes=pqbase.encode(model, x),
+                lut_fn=lambda qq: pqbase.build_lut(model, qq),
+                fs4_model=fs4, fs4_codes=pqbase.encode(fs4, x),
+                fs4_lut_fn=lambda qq: pqbase.build_lut(fs4, qq,
+                                                       quantize=True))
+
+
+# =========================================================================
+# S=1 / eps=0 bit-identity (the regression contract)
+# =========================================================================
+
+def test_entries1_eps0_bit_identical_engine(setup):
+    """The adaptive defaults ARE the classic engine — every SearchResult
+    field bitwise equal, including an explicitly-passed m_prefix with the
+    eps=0 off switch."""
+    eng = InMemoryEngine(setup["graph"], setup["codes"], setup["lut_fn"])
+    a = eng.search(setup["q"], k=10, h=32)
+    b = eng.search(setup["q"], k=10, h=32, entries=1, prune_eps=0.0)
+    c = eng.search(setup["q"], k=10, h=32, entries=1, prune_eps=0.0,
+                   m_prefix=4)
+    for got in (b, c):
+        for fa, fg in zip(a, got):
+            np.testing.assert_array_equal(np.asarray(fa), np.asarray(fg))
+
+
+def test_entry_set_width1_bit_identical_beam(setup):
+    """A (Q, 1) entry-set matrix runs the classic single-entry init op for
+    op — same result as the scalar medoid."""
+    g, q = setup["graph"], setup["q"]
+    luts = setup["lut_fn"](q)
+    dist_fn = make_adc_dist_fn(ops.pad_sentinel_row(setup["codes"]))
+    a = beam_search(g.neighbors, g.medoid, luts, dist_fn, h=32, max_steps=64)
+    ent = jnp.full((q.shape[0], 1), int(g.medoid), jnp.int32)
+    b = beam_search(g.neighbors, ent, luts, dist_fn, h=32, max_steps=64)
+    for fa, fb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+
+# =========================================================================
+# multi-entry seeding
+# =========================================================================
+
+def test_seeded_search_recall_and_rounds(setup):
+    """S=8 seeding holds recall while needing no more sequential rounds
+    than the single-medoid walk (it skips the escape-the-medoid phase)."""
+    eng = InMemoryEngine(setup["graph"], setup["codes"], setup["lut_fn"])
+    r1 = eng.search(setup["q"], k=10, h=32)
+    r8 = eng.search(setup["q"], k=10, h=32, entries=8)
+    assert recall_at_k(r8.ids, setup["gt"], 10) >= \
+        recall_at_k(r1.ids, setup["gt"], 10) - 0.02
+    assert float(np.mean(np.asarray(r8.rounds))) < \
+        float(np.mean(np.asarray(r1.rounds)))
+
+
+def test_empty_bucket_falls_back_to_pivots(setup):
+    """A query hashing to an empty bucket seeds from the strided pivots —
+    never -1 lanes, never a crash."""
+    ix = build_seed_index(np.asarray(setup["codes"]))
+    table = np.asarray(ix.table)
+    empty = np.flatnonzero(~(table >= 0).any(axis=1))
+    assert empty.size, "fixture corpus fills every bucket — enlarge table"
+    key = int(empty[0])
+    # craft a LUT whose first-m_hash argmins fold to exactly that key
+    m, k = 8, 64
+    digits = [(key // (ix.k ** j)) % ix.k for j in range(ix.m_hash)]
+    lut = np.ones((1, m, k), np.float32)
+    for j, dig in enumerate(digits):
+        lut[0, j, dig] = 0.0
+    ent = np.asarray(ix.seed_entries(jnp.asarray(lut), 4))
+    assert (ent >= 0).all()
+    assert set(ent[0].tolist()) <= set(np.asarray(ix.pivots).tolist())
+
+
+def test_all_tombstoned_candidates_still_route(setup):
+    """Every candidate dead → DEAD_ENTRY_DIST seeds: finite, so the beam
+    still starts and routes off them (classic deleted-medoid semantics)."""
+    n = setup["codes"].shape[0]
+    ix = build_seed_index(np.asarray(setup["codes"]))
+    luts = setup["lut_fn"](setup["q"][:4])
+    dead_all = jnp.full(((n + 31) // 32 + 1,), 0xFFFFFFFF, jnp.uint32)
+    ent = np.asarray(ix.seed_entries(luts, 4, tombstones=dead_all))
+    assert (ent >= 0).all()          # finite seeds, not -1 padding
+    live = jnp.zeros(((n + 31) // 32 + 1,), jnp.uint32)
+    ent_live = np.asarray(ix.seed_entries(luts, 4, tombstones=live))
+    np.testing.assert_array_equal(
+        ent_live, np.asarray(ix.seed_entries(luts, 4)))
+
+
+def test_seed_entries_shard_functional_core(setup):
+    """seed_entries_from — what the sharded engines call inside shard_map —
+    agrees with the object API."""
+    ix = build_seed_index(np.asarray(setup["codes"]))
+    luts = setup["lut_fn"](setup["q"][:8])
+    a = np.asarray(ix.seed_entries(luts, 8))
+    b = np.asarray(seed_entries_from(ix.table, ix.pivots, ix.codes, luts,
+                                     k=ix.k, m_hash=ix.m_hash, s=8))
+    np.testing.assert_array_equal(a, b)
+
+
+# =========================================================================
+# layout parity: u8 vs fs4 through the engines, adaptive config on
+# =========================================================================
+
+def test_u8_fs4_parity_inmemory_adaptive(setup):
+    eng_u8 = InMemoryEngine(setup["graph"], setup["fs4_codes"],
+                            lambda qq: pqbase.build_lut(setup["fs4_model"],
+                                                        qq))
+    eng_fs = InMemoryEngine(setup["graph"],
+                            pack.pack_codes(setup["fs4_codes"]),
+                            setup["fs4_lut_fn"])
+    kw = dict(k=10, h=32, entries=8, prune_eps=0.1)
+    r_u8 = recall_at_k(eng_u8.search(setup["q"], **kw).ids, setup["gt"], 10)
+    r_fs = recall_at_k(eng_fs.search(setup["q"], **kw).ids, setup["gt"], 10)
+    assert abs(r_u8 - r_fs) <= 0.03, (r_u8, r_fs)
+
+
+def test_u8_fs4_parity_sharded_graph_adaptive(setup):
+    """Single-shard ShardedGraphEngine: per-shard seeding + pruning inside
+    shard_map, both layouts, and S=1/eps=0 equals the plain engine run."""
+    x, q, gt = setup["x"], setup["q"], setup["gt"]
+    pg = build_partitioned_vamana(jax.random.PRNGKey(1), x, 1, r=16, l=32)
+    eng_u8 = ShardedGraphEngine(pg, setup["fs4_codes"],
+                                lambda qq: pqbase.build_lut(
+                                    setup["fs4_model"], qq))
+    eng_fs = ShardedGraphEngine(pg, pack.pack_codes(setup["fs4_codes"]),
+                                setup["fs4_lut_fn"])
+    base_res = eng_u8.search(q, k=10, h=32)
+    off = eng_u8.search(q, k=10, h=32, entries=1, prune_eps=0.0)
+    for fa, fb in zip(base_res, off):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+    kw = dict(k=10, h=32, entries=8, prune_eps=0.1)
+    r_u8 = recall_at_k(eng_u8.search(q, **kw).ids, gt, 10)
+    r_fs = recall_at_k(eng_fs.search(q, **kw).ids, gt, 10)
+    assert abs(r_u8 - r_fs) <= 0.03, (r_u8, r_fs)
+    assert r_u8 >= recall_at_k(base_res.ids, gt, 10) - 0.02
+
+
+# =========================================================================
+# hop pruning: lower-bound math + kernel m_prefix parity
+# =========================================================================
+
+@pytest.mark.parametrize("mp", [1, 3, 4, 7])
+def test_prefix_is_lower_bound_u8(setup, mp):
+    luts = setup["lut_fn"](setup["q"][:16])
+    codes_p = ops.pad_sentinel_row(setup["codes"])
+    full = make_adc_dist_fn(codes_p)
+    part = make_adc_dist_fn(codes_p, m_prefix=mp)
+    ids = jnp.arange(64, dtype=jnp.int32)
+    for i in range(4):
+        d_full = np.asarray(full(jax.tree.map(lambda l: l[i], luts), ids))
+        d_part = np.asarray(part(jax.tree.map(lambda l: l[i], luts), ids))
+        assert (d_part <= d_full + 1e-4).all()
+
+
+@pytest.mark.parametrize("mp", [3, 4])
+def test_prefix_is_lower_bound_fs4(setup, mp):
+    """Quantized metric too: scale ≥ 0 and bias = min LUT entry ≥ 0 keep
+    the prefix sum a lower bound (odd m_prefix exercises the nibble
+    boundary)."""
+    luts = setup["fs4_lut_fn"](setup["q"][:8])
+    packed_p = ops.pad_sentinel_row(pack.pack_codes(setup["fs4_codes"]))
+    full = make_adc_dist_fn(packed_p, packed=True)
+    part = make_adc_dist_fn(packed_p, packed=True, m_prefix=mp)
+    ids = jnp.arange(64, dtype=jnp.int32)
+    for i in range(4):
+        one = jax.tree.map(lambda l: l[i], luts)
+        d_full = np.asarray(full(one, ids))
+        d_part = np.asarray(part(one, ids))
+        assert (d_part <= d_full + 1e-4).all()
+
+
+@pytest.mark.parametrize("mp", [0, 3, 4])
+def test_kernel_m_prefix_matches_ref(setup, mp):
+    """ops.hop_adc / hop_adc_fs with m_prefix: the Pallas kernel (interpret
+    mode) must agree with the sliced reference oracle."""
+    q = setup["q"][:4]
+    ids = jnp.arange(96, dtype=jnp.int32)[None].repeat(4, 0)
+    luts = setup["lut_fn"](q)
+    codes_p = ops.pad_sentinel_row(setup["codes"])
+    a = ops.hop_adc(codes_p, ids, luts, backend="interpret", m_prefix=mp)
+    b = ops.hop_adc(codes_p, ids, luts, backend="ref", m_prefix=mp)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+    qluts = setup["fs4_lut_fn"](q)
+    packed_p = ops.pad_sentinel_row(pack.pack_codes(setup["fs4_codes"]))
+    a = ops.hop_adc_fs(packed_p, ids, qluts.lut, qluts.scale, qluts.bias,
+                       backend="interpret", m_prefix=mp)
+    b = ops.hop_adc_fs(packed_p, ids, qluts.lut, qluts.scale, qluts.bias,
+                       backend="ref", m_prefix=mp)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+def test_pruned_search_recall_and_accounting(setup):
+    """Pruning with seeding holds recall within 2pt; n_dist stays a
+    positive full-LUT-equivalent count no larger than the unpruned run's
+    (the gate can only remove full evaluations, and the partial pass is
+    charged fractionally)."""
+    eng = InMemoryEngine(setup["graph"], setup["codes"], setup["lut_fn"])
+    plain = eng.search(setup["q"], k=10, h=32, entries=8)
+    pruned = eng.search(setup["q"], k=10, h=32, entries=8, prune_eps=0.2,
+                        m_prefix=2)
+    assert recall_at_k(pruned.ids, setup["gt"], 10) >= \
+        recall_at_k(plain.ids, setup["gt"], 10) - 0.02
+    assert (np.asarray(pruned.n_dist) > 0).all()
+    assert float(np.mean(np.asarray(pruned.n_dist))) <= \
+        float(np.mean(np.asarray(plain.n_dist)))
+
+
+# =========================================================================
+# n_dist counts actually-scored lanes only (satellite: padding never
+# inflates it)
+# =========================================================================
+
+@pytest.mark.parametrize("expand", [1, 4])
+@pytest.mark.parametrize("r_pad", [2, 8])
+def test_ndist_exact_on_path_graph(expand, r_pad):
+    """A 1-D path graph explored end to end scores every vertex exactly
+    once: n_dist == N regardless of expand and of how much sentinel
+    padding the adjacency carries."""
+    n = 12
+    nbrs = np.full((n, r_pad), n, np.int32)
+    for i in range(n):
+        if i > 0:
+            nbrs[i, 0] = i - 1
+        if i < n - 1:
+            nbrs[i, 1] = i + 1
+    vec = np.zeros((n + 1, 2), np.float32)
+    vec[:n, 0] = np.arange(n)
+    vec[n] = 1e6                       # sentinel row far away
+    g = Graph(neighbors=jnp.asarray(nbrs), medoid=jnp.int32(0))
+    q = jnp.asarray([[n - 1 + 0.1, 0.0]], jnp.float32)
+    res = beam_search(g.neighbors, g.medoid, q,
+                      make_exact_dist_fn(jnp.asarray(vec)), h=4,
+                      max_steps=64, expand=expand)
+    assert int(res.n_dist[0]) == n
+    assert int(res.ids[0, 0]) == n - 1
+
+
+def test_streaming_ndist_counts_occupied_delta_only(clustered_data,
+                                                    small_graph):
+    """The fixed-shape delta scan touches every slot, but only OCCUPIED
+    slots are distance work: inserting 3 rows into a 256-slot delta adds
+    exactly 3 to n_dist (capacity never leaks into the count)."""
+    from repro.index import BaseSegment, StreamingEngine
+    from repro.index.segment import encode_codes
+
+    x, q, _ = clustered_data
+    model = train_pq(jax.random.PRNGKey(0), x, 8, 64, iters=8)
+    seg = BaseSegment(graph=small_graph,
+                      codes=jnp.asarray(encode_codes(model, x, "u8")),
+                      vectors=x, layout="u8")
+    eng = StreamingEngine(seg, model, delta_capacity=256)
+    before = np.asarray(eng.search(q[:8], k=10, h=32).n_dist)
+    eng.insert(np.asarray(x)[:3] + 0.01)
+    after = np.asarray(eng.search(q[:8], k=10, h=32).n_dist)
+    np.testing.assert_array_equal(after, before + 3)
+
+
+# =========================================================================
+# hybrid IO: the seed probe is ONE batched read
+# =========================================================================
+
+def test_hybrid_io_charges_seed_probe_once(setup):
+    hyb = HybridEngine(setup["graph"], setup["codes"], setup["lut_fn"],
+                       vectors=setup["x"])
+    res = hyb.search(setup["q"], k=10, h=32, entries=8)
+    rounds = np.asarray(res.rounds, np.float32)
+    io_seeded = np.asarray(hyb.io_time(res, entries=8))
+    np.testing.assert_allclose(io_seeded,
+                               (rounds + 1.0) * hyb.io_latency_s, rtol=1e-6)
+    # entries=1: unchanged pre-PR model, no extra read
+    r1 = hyb.search(setup["q"], k=10, h=32)
+    np.testing.assert_allclose(np.asarray(hyb.io_time(r1)),
+                               np.asarray(r1.rounds, np.float32)
+                               * hyb.io_latency_s, rtol=1e-6)
