@@ -8,6 +8,16 @@ post-churn corpus — before consolidation (tombstoned beam + delta scan)
 and after (next-generation compacted graph) — plus the consolidation wall
 time.
 
+A second, drifted-corpus section backs DESIGN.md §12 (codebook refresh):
+the live distribution narrows hard (most clusters die, fresh rows land in
+the survivors — far past 30% churn), then two IDENTICALLY churned engines
+consolidate — one with frozen codebooks, one with ``refresh=`` retraining
+the quantizer on the live graph — and both serve the same queries at the
+same search budget. The ``streaming/drift/*`` rows record recall/QPS per
+arm and the live-corpus distortion the refresh bought back;
+``streaming/drift_summary`` carries the frozen-vs-refreshed gap the CI
+bench job asserts on.
+
 Run as a section of the driver (emits BENCH_streaming.json via --json-dir,
 uploaded by the CI bench job):
 
@@ -76,7 +86,101 @@ def run():
         evaluate(f"{tag}/post_consolidate", engine, live2,
                  np.asarray(engine.base.vectors),
                  extra=f";consolidate_s={wall:.2f}")
+    rows.extend(drift_rows())
     return rows
+
+
+def drift_rows():
+    """Frozen vs refreshed codebooks under distribution drift (DESIGN.md
+    §12): the live corpus narrows to a quarter of its clusters (~75%
+    deletes + fresh in-survivor inserts), both arms consolidate from the
+    SAME churned state, both serve the same drifted queries at h=32."""
+    import time
+
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks import common as C
+    from repro.graphs import build_vamana
+    from repro.graphs.knn import knn_ids
+    from repro.index import BaseSegment, RefreshConfig, StreamingEngine
+    from repro.index.segment import encode_codes
+    from repro.pq import train_pq
+    from repro.search.metrics import measure_qps, recall_at_k
+
+    # self-contained drift sandbox: cluster labels drive the drift, and the
+    # small per-subspace codebook (M=8, K=16 — the fs4 budget) on 32-d data
+    # is the regime where re-allocating codewords to the live regions
+    # matters most (at the bench corpus's own dim the codes are too coarse
+    # for recall to resolve the gap)
+    r = np.random.default_rng(1)
+    n, d, nc, n_keep = (4000, 32, 24, 6) if C.QUICK else (20000, 32, 32, 8)
+    centers = r.normal(size=(nc, d)).astype(np.float32) * 3
+    lab = r.integers(0, nc, n)
+    z = centers[lab] + r.normal(size=(n, d)).astype(np.float32)
+    basis = (np.linalg.qr(r.normal(size=(d, d)))[0]
+             @ np.diag(np.linspace(1.5, 0.3, d))).astype(np.float32)
+    x = (z @ basis).astype(np.float32)
+    model = train_pq(jax.random.PRNGKey(5), jnp.asarray(x), 8, 16, iters=10)
+    graph = build_vamana(jax.random.PRNGKey(6), jnp.asarray(x), r=16, l=32,
+                         batch=2048)
+
+    keep_c = np.arange(n_keep)
+    dead = np.flatnonzero(~np.isin(lab, keep_c))
+    n_ins = n // 4
+    zi = centers[r.choice(keep_c, n_ins)] + r.normal(
+        size=(n_ins, d)).astype(np.float32)
+    xnew = (zi @ basis).astype(np.float32)
+    churn_frac = (dead.size + n_ins) / n
+
+    def churned():
+        seg = BaseSegment(graph=graph,
+                          codes=jnp.asarray(encode_codes(model, x, "u8")),
+                          vectors=jnp.asarray(x), layout="u8")
+        e = StreamingEngine(seg, model, delta_capacity=n_ins)
+        e.insert(xnew)
+        e.delete(dead)
+        return e
+
+    # post-churn ground truth: compaction order (base survivors then live
+    # delta, both in order) makes corpus row == post-consolidation gid
+    live_base = np.setdiff1d(np.arange(n), dead)
+    corpus = np.concatenate([x[live_base], xnew]).astype(np.float32)
+    nq = 100 if C.QUICK else 500
+    zq = centers[r.choice(keep_c, nq)] + r.normal(
+        size=(nq, d)).astype(np.float32)
+    queries = jnp.asarray((zq @ basis).astype(np.float32))
+    gt, _ = knn_ids(jnp.asarray(corpus), queries, 10)
+
+    out = []
+    recalls = {}
+    for tag, refresh in (("frozen", None),
+                         ("refreshed", RefreshConfig(steps=30,
+                                                     kmeans_iters=10))):
+        engine = churned()
+        t0 = time.time()
+        stats = engine.consolidate(refresh=refresh)
+        wall = time.time() - t0
+        qps, res = measure_qps(
+            lambda q: engine.search(q, k=10, h=32), queries, repeats=2)
+        rec = recall_at_k(res.ids, gt, 10)
+        recalls[tag] = rec
+        extra = ""
+        if stats["refreshed"]:
+            rep = stats["refresh"]
+            extra = (f";distortion_before={rep['distortion_before']:.3f}"
+                     f";distortion_after={rep['distortion_after']:.3f}")
+        out.append((f"streaming/drift/{tag}", 1e6 / max(qps, 1e-9),
+                    f"recall={rec:.3f};qps={qps:.1f};"
+                    f"consolidate_s={wall:.2f};live={engine.n_live}"
+                    f"{extra}"))
+    out.append(("streaming/drift_summary", 0.0,
+                f"frozen={recalls['frozen']:.3f};"
+                f"refreshed={recalls['refreshed']:.3f};"
+                f"delta={recalls['refreshed'] - recalls['frozen']:.3f};"
+                f"churn={churn_frac:.2f}"))
+    return out
 
 
 def main():

@@ -9,7 +9,11 @@
 3. delete some rows (including the graph's own entry point) — tombstones
    mask them out of every answer without touching the graph,
 4. consolidate — the delta folds into the next base generation, tombstoned
-   rows are compacted away, and the snapshot can be restored.
+   rows are compacted away, and the snapshot can be restored,
+5. consolidate with a codebook REFRESH (DESIGN.md §12) — the quantizer
+   retrains on the live graph, every surviving row re-encodes, and the
+   snapshot carries the new codebooks so ``restore()`` needs no
+   caller-side model at all.
 
 ``--dry-run`` shrinks the dataset so CI can prove the walkthrough runs in
 seconds; the pipeline and printed format are identical.
@@ -18,13 +22,14 @@ seconds; the pipeline and printed format are identical.
 import argparse
 import dataclasses
 import sys
+import tempfile
 sys.path.insert(0, "src")
 
 import numpy as np
 import jax
 
 from repro.data import load_dataset
-from repro.index import BaseSegment, StreamingEngine
+from repro.index import BaseSegment, RefreshConfig, StreamingEngine
 from repro.pq import train_pq
 from repro.search.metrics import live_ground_truth, recall_at_k
 
@@ -90,6 +95,30 @@ def main():
                                         ds.queries, 10), 10)
     print(f"generation {engine.generation}: recall@10 = {rec:.3f}  "
           f"live rows = {engine.n_live}")
+
+    # REFRESH: another churn round, then a consolidation that also
+    # retrains the codebooks on the live graph (sized tiny here — a real
+    # deployment would run more steps; see launch/serve.py --refresh-every)
+    engine.delete(np.arange(0, engine.base.n, 5))
+    stats = engine.consolidate(
+        refresh=RefreshConfig(steps=4, kmeans_iters=3, triplet_batch=64,
+                              routing_batch=64, routing_pool_queries=16,
+                              beam_h=8))
+    rep = stats["refresh"]
+    print(f"refreshed consolidation → generation {engine.generation}: "
+          f"live distortion {rep['distortion_before']:.3f} → "
+          f"{rep['distortion_after']:.3f} over {stats['n']} re-encoded rows")
+
+    # the snapshot carries the refreshed quantizer: restore() rebuilds the
+    # engine from disk alone — no model argument
+    with tempfile.TemporaryDirectory() as td:
+        from repro.index.segment import save_segment
+        save_segment(td, engine.base, model=engine.model)
+        restored = StreamingEngine.restore(td)
+        a = np.asarray(engine.search(ds.queries, k=5, h=16).ids)
+        b = np.asarray(restored.search(ds.queries, k=5, h=16).ids)
+        assert np.array_equal(a, b)
+    print("self-contained restore: snapshot → engine, no caller-side model")
 
 
 if __name__ == "__main__":

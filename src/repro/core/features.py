@@ -16,17 +16,41 @@ The paper's text says "learn how to select the correct next-hop"; labeling
 with the quantizer's own (possibly wrong) choice would make the loss
 degenerate, so the supervision is the exact-distance argmin over b_i
 (offline we have the full vectors — this is training-time only).
+
+Sampling under churn (codebook refresh, DESIGN.md §12): both samplers take
+an optional ``tombstones`` uint32 bitset (the streaming index's deleted-id
+words, TRACED — flipping bits between generations never recompiles, and
+output shapes depend only on the batch sizes). Dead vertices never appear
+in any emitted feature: triplet candidates and traced routing beams mask
+them to the sentinel, a dead anchor invalidates its triplet, and the
+routing label is the exact-distance argmin over the LIVE candidates only.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.graphs.adjacency import Graph
 from repro.search import beam
+from repro.search.beam import _bit_get
+
+
+def _dead_fn(tombstones: Optional[jax.Array], n: int):
+    """ids → bool "tombstoned" mask (False everywhere when no bitset).
+    Out-of-range ids (the sentinel n, -1 padding) are never "dead" — they
+    are already invalid and masked by the samplers' own sentinel logic."""
+    if tombstones is None:
+        return lambda ids: jnp.zeros(jnp.shape(ids), bool)
+    ts = jnp.asarray(tombstones, jnp.uint32)
+
+    def dead(ids):
+        ok = (ids >= 0) & (ids < n)
+        return _bit_get(ts, jnp.where(ok, ids, 0)).astype(bool) & ok
+
+    return dead
 
 
 class TripletBatch(NamedTuple):
@@ -62,14 +86,23 @@ def _gather_hops(neighbors: jax.Array, v: jax.Array, n_hops: int) -> jax.Array:
 
 def sample_triplets(key: jax.Array, graph: Graph, x: jax.Array,
                     anchors: jax.Array, *, n_hops: int = 2, k_pos: int = 10,
-                    k_neg: int = 30) -> TripletBatch:
-    """Batched Alg. 1. anchors: (B,) vertex ids."""
+                    k_neg: int = 30,
+                    tombstones: Optional[jax.Array] = None) -> TripletBatch:
+    """Batched Alg. 1. anchors: (B,) vertex ids.
+
+    ``tombstones`` (optional uint32 bitset over [0, n)): dead vertices are
+    masked out of every neighborhood BEFORE ranking — they can never be
+    drawn as positives or negatives — and a dead anchor yields
+    ``valid=False`` (callers should sample anchors from the live set; this
+    is the backstop)."""
     n = graph.n
     xp = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)])
+    dead = _dead_fn(tombstones, n)
 
     def one(key, v):
         cand = _gather_hops(graph.neighbors, v, n_hops)          # (C,)
         cand = jnp.where(cand == v, n, cand)
+        cand = jnp.where(dead(cand), n, cand)
         # dedup: keep first occurrence (sort by id, mask repeats)
         order = jnp.argsort(cand)
         sc = cand[order]
@@ -87,7 +120,7 @@ def sample_triplets(key: jax.Array, graph: Graph, x: jax.Array,
         neg_hi = jnp.minimum(k_pos + k_neg, n_valid)
         neg_idx = neg_lo + jax.random.randint(
             kn, (), 0, jnp.maximum(neg_hi - neg_lo, 1))
-        valid = (n_valid >= 2) & (neg_hi > neg_lo)
+        valid = (n_valid >= 2) & (neg_hi > neg_lo) & ~dead(v)
         return ranked[pos_idx], ranked[jnp.minimum(neg_idx, ranked.shape[0] - 1)], valid
 
     keys = jax.random.split(key, anchors.shape[0])
@@ -101,22 +134,35 @@ def sample_triplets(key: jax.Array, graph: Graph, x: jax.Array,
 
 def sample_routing(graph: Graph, x: jax.Array, queries: jax.Array,
                    codes: jax.Array, lut_fn, *, h: int = 16,
-                   trace_len: int = 48, max_steps: int = 128) -> RoutingBatch:
+                   trace_len: int = 48, max_steps: int = 128,
+                   tombstones: Optional[jax.Array] = None,
+                   entry: Optional[jax.Array] = None) -> RoutingBatch:
     """Batched Alg. 2 with exact-distance next-hop labels.
 
     codes: (N, M) CURRENT compact codes of the base vectors (quantizer-
     dependent — re-extract when the quantizer moves, paper Fig. 2 loop).
+
+    ``tombstones`` makes the routing walks churn-aware: the beam itself
+    routes around dead vertices (never THROUGH them), and because mid-walk
+    traced beams may still hold a dead entry at its large-finite rescue
+    distance (or an unfilled beam's +inf dead slots), every traced
+    candidate is re-scrubbed here — no dead id survives into ``cand``, so
+    the exact-distance label is always a live vertex. ``entry`` overrides
+    the medoid start (e.g. the streaming engine's re-anchored live entry).
     """
     n = graph.n
     codes_p = jnp.concatenate([codes, jnp.zeros((1, codes.shape[1]), codes.dtype)])
     dist_fn = beam.make_adc_dist_fn(codes_p)
     luts = lut_fn(queries)
-    tr = beam.beam_search_trace(graph.neighbors, graph.medoid, luts, dist_fn,
-                                h=h, max_steps=max_steps, trace_len=trace_len)
+    tr = beam.beam_search_trace(graph.neighbors,
+                                graph.medoid if entry is None else entry,
+                                luts, dist_fn, h=h, max_steps=max_steps,
+                                trace_len=trace_len, tombstones=tombstones)
     nq = queries.shape[0]
     xp = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)])
 
     cand = tr.beam_ids.reshape(nq * trace_len, h)                 # (B, h)
+    cand = jnp.where(_dead_fn(tombstones, n)(cand), n, cand)
     hop_valid = tr.hop_valid.reshape(nq * trace_len)
     qrep = jnp.repeat(queries, trace_len, axis=0)                 # (B, D)
 

@@ -180,16 +180,36 @@ def fit(key: jax.Array, cfg: Q.RPQConfig, tcfg: TrainConfig, x: jax.Array,
         graph: Graph, *, params: Optional[Q.RPQParams] = None,
         checkpoint_cb: Optional[Callable] = None,
         start_step: int = 0, opt_state=None, mesh=None,
-        verbose: bool = True) -> TrainState:
+        tombstones=None, verbose: bool = True) -> TrainState:
     """End-to-end RPQ training (paper Fig. 2). Returns the final TrainState.
 
     checkpoint_cb(step, params, opt_state) — wired to dist/checkpoint.py by
     launch/train.py; pure library users can ignore it. With
     ``tcfg.data_parallel`` the jitted step runs under shard_map on ``mesh``
     (default: every local device) — see :func:`make_dp_train_step`.
+
+    ``tombstones`` (optional uint32 deleted-id bitset words over [0, n),
+    the streaming index's Tombstones layout) makes the whole feature loop
+    churn-aware — this is the codebook-refresh path (DESIGN.md §12):
+    triplet anchors and routing queries are drawn from LIVE vertices only,
+    and the bitset threads into both samplers so no dead id reaches any
+    loss term. Warm-start via ``params=`` to refine the serving quantizer
+    instead of training from the k-means origin.
     """
     n = x.shape[0]
     key, kinit = jax.random.split(key)
+    live_ids, ts_dev = None, None
+    if tombstones is not None:
+        words = np.asarray(tombstones, np.uint32)
+        ids = np.arange(n, dtype=np.int64)
+        dead = ((words[ids >> 5] >> (ids & 31).astype(np.uint32)) & 1
+                ).astype(bool)
+        live_np = np.flatnonzero(~dead)
+        if live_np.size == 0:
+            raise ValueError("fit: every vertex is tombstoned — nothing "
+                             "live to sample features from")
+        live_ids = jnp.asarray(live_np, jnp.int32)
+        ts_dev = jnp.asarray(words)
     if params is None:
         params = init_rpq(kinit, cfg, x)
     optimizer = adam(one_cycle(tcfg.lr, tcfg.steps))
@@ -226,14 +246,25 @@ def fit(key: jax.Array, cfg: Q.RPQConfig, tcfg: TrainConfig, x: jax.Array,
                                  or step % tcfg.refresh_every == 0):
             model = to_model(cfg, params)
             codes = pqbase.encode(model, x)
-            qidx = jax.random.choice(k1, n, (tcfg.routing_pool_queries,),
-                                     replace=False)
+            if live_ids is None:
+                qidx = jax.random.choice(k1, n, (tcfg.routing_pool_queries,),
+                                         replace=False)
+            else:  # churn-aware: query AT live vertices only
+                qidx = live_ids[jax.random.choice(
+                    k1, live_ids.shape[0], (tcfg.routing_pool_queries,),
+                    replace=live_ids.shape[0] < tcfg.routing_pool_queries)]
             routing_pool = F.sample_routing(
                 graph, x, x[qidx], codes,
-                lut_fn=lambda q: pqbase.build_lut(model, q), h=tcfg.beam_h)
-        anchors = jax.random.randint(k2, (tcfg.triplet_batch,), 0, n)
+                lut_fn=lambda q: pqbase.build_lut(model, q), h=tcfg.beam_h,
+                tombstones=ts_dev)
+        if live_ids is None:
+            anchors = jax.random.randint(k2, (tcfg.triplet_batch,), 0, n)
+        else:
+            anchors = live_ids[jax.random.randint(
+                k2, (tcfg.triplet_batch,), 0, live_ids.shape[0])]
         trip = F.sample_triplets(k3, graph, x, anchors, n_hops=tcfg.n_hops,
-                                 k_pos=tcfg.k_pos, k_neg=tcfg.k_neg)
+                                 k_pos=tcfg.k_pos, k_neg=tcfg.k_neg,
+                                 tombstones=ts_dev)
         if tcfg.use_routing:
             route = F.subsample_routing(k4, routing_pool, tcfg.routing_batch)
         else:  # placeholder batch (masked out by use_routing=False);

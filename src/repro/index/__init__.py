@@ -12,10 +12,13 @@ Public surface:
   ``search()`` protocol plus ``insert`` / ``delete`` / ``consolidate``.
 * :mod:`repro.index.consolidate` — compaction + graph repair + delta
   fold-in + generation bump.
+* :mod:`repro.index.refresh` — routing-guided codebook refresh at the
+  generation boundary (:class:`RefreshConfig`, :func:`refresh_quantizer`).
 """
 from repro.index.consolidate import consolidate  # noqa: F401
 from repro.index.delta import DeltaFullError, DeltaSegment  # noqa: F401
 from repro.index.engine import StreamingEngine  # noqa: F401
+from repro.index.refresh import RefreshConfig, refresh_quantizer  # noqa: F401
 from repro.index.segment import (  # noqa: F401
     BaseSegment, Tombstones, encode_codes, load_segment, save_segment,
 )

@@ -16,7 +16,17 @@ The invariants (DESIGN.md §10):
   two-sided insert Vamana's builder does, one batch instead of a rebuild.
 * **atomicity** — the new segment snapshots through dist/checkpoint.py's
   write-tmp-then-rename before the engine swaps generations, so a crash
-  mid-consolidation leaves the previous generation restorable.
+  mid-consolidation leaves the previous generation restorable. With a
+  codebook refresh the snapshot also carries the NEW quantizer, and the
+  engine's model swaps together with the segment — strictly after the
+  snapshot — so a crash anywhere in the refresh (including mid-retrain)
+  leaves the previous generation restorable with its OLD codebooks.
+* **codebook refresh** (DESIGN.md §12, ``refresh=``) — before re-encoding,
+  :func:`repro.index.refresh.refresh_quantizer` retrains the quantizer on
+  triplet + routing features of the LIVE base graph (tombstone-aware), and
+  every surviving row (base + delta) is re-encoded with the new model, so
+  the new generation's codes, seed hash table and LUT protocol all agree
+  with the refreshed codebooks.
 
 Candidate sets for the fold-in use exact distances over the full corpus
 (`graphs/knn.knn_ids`) — right for the bounded deltas this subsystem
@@ -67,18 +77,34 @@ def _compact_valid_first(cand: np.ndarray, width: int,
 def consolidate(engine, *, key: Optional[jax.Array] = None,
                 alpha: float = 1.2, l: int = 48,
                 ckpt_dir: Optional[str] = None,
-                keep: Optional[int] = None) -> dict:
+                keep: Optional[int] = None,
+                refresh=None) -> dict:
     """Compact ``engine`` (a :class:`repro.index.engine.StreamingEngine`)
     into a fresh base generation and swap it in.
 
+    ``refresh`` switches on the codebook-refresh arm (DESIGN.md §12):
+    ``True`` uses the default :class:`repro.index.refresh.RefreshConfig`,
+    or pass a config. The quantizer retrains on the live base graph
+    (tombstone-aware routing + triplet features, warm-started from the
+    current codebooks), all surviving rows re-encode with the new model,
+    and model + segment swap in together — after the atomic snapshot.
+
     Returns a stats dict with ``old2new`` — the (n_base + delta_capacity,)
     global-id remap (-1 = dropped) callers need to translate ids held
-    across the consolidation.
+    across the consolidation — plus ``refresh`` (the retrain report) when
+    the refresh arm ran.
     """
     del key  # deterministic: candidate sets are exact, no sampling
     base, delta, tombs = engine.base, engine.delta, engine.tombstones
     n_base, c_occ = base.n, delta.count
     r = base.graph.degree
+
+    model_new, refresh_report = engine.model, None
+    if refresh:
+        from repro.index.refresh import RefreshConfig, refresh_quantizer
+        rcfg = refresh if isinstance(refresh, RefreshConfig) else None
+        model_new, refresh_report = refresh_quantizer(
+            base, engine.model, tombstones=tombs._words, cfg=rcfg)
 
     live_b = ~tombs.contains(np.arange(n_base))
     live_d = ~tombs.contains(n_base + np.arange(c_occ))
@@ -95,8 +121,14 @@ def consolidate(engine, *, key: Optional[jax.Array] = None,
     old2new[n_base + np.flatnonzero(live_d)] = nb + np.arange(nd)
     vec_new = np.concatenate([np.asarray(base.vectors)[live_b],
                               delta.vectors[:c_occ][live_d]])
-    codes_new = np.concatenate([np.asarray(base.codes)[live_b],
-                                delta.codes[:c_occ][live_d]])
+    if refresh_report is not None:
+        # refreshed codebooks: EVERY surviving row re-encodes (base + delta
+        # alike — one quantizer per generation, never mixed codes)
+        from repro.index.segment import encode_codes
+        codes_new = encode_codes(model_new, vec_new, base.layout)
+    else:
+        codes_new = np.concatenate([np.asarray(base.codes)[live_b],
+                                    delta.codes[:c_occ][live_d]])
     xp = kops.pad_sentinel_row(jnp.asarray(vec_new, jnp.float32))
 
     # ---- surviving base adjacency, dead edges repaired -------------------
@@ -168,7 +200,16 @@ def consolidate(engine, *, key: Optional[jax.Array] = None,
         codes=jnp.asarray(codes_new), vectors=jnp.asarray(vec_new),
         layout=base.layout, generation=base.generation + 1)
     if ckpt_dir:
-        save_segment(ckpt_dir, seg, keep=keep)
+        # snapshot carries the (possibly refreshed) quantizer: restore() is
+        # self-contained even after codebooks change across generations
+        save_segment(ckpt_dir, seg, keep=keep, model=model_new)
+    # swap model + segment together, strictly AFTER the snapshot — a crash
+    # anywhere above leaves the previous generation serving old codebooks
+    engine.model = model_new
     engine._install(seg)
-    return {"generation": seg.generation, "n": n_new,
-            "dropped": int(tombs.count), "folded": nd, "old2new": old2new}
+    stats = {"generation": seg.generation, "n": n_new,
+             "dropped": int(tombs.count), "folded": nd, "old2new": old2new,
+             "refreshed": refresh_report is not None}
+    if refresh_report is not None:
+        stats["refresh"] = refresh_report
+    return stats

@@ -163,28 +163,43 @@ class StreamingEngine:
     def consolidate(self, *, key: Optional[jax.Array] = None,
                     alpha: float = 1.2, l: int = 48,
                     ckpt_dir: Optional[str] = None,
-                    keep: Optional[int] = None) -> dict:
+                    keep: Optional[int] = None,
+                    refresh=None) -> dict:
         """Fold delta + tombstones into the next base generation (see
-        :func:`repro.index.consolidate.consolidate`)."""
+        :func:`repro.index.consolidate.consolidate`). ``refresh`` (True or
+        a :class:`repro.index.refresh.RefreshConfig`) retrains the
+        quantizer on the live graph and re-encodes the new generation."""
         from repro.index.consolidate import consolidate
 
         return consolidate(self, key=key, alpha=alpha, l=l,
-                           ckpt_dir=ckpt_dir, keep=keep)
+                           ckpt_dir=ckpt_dir, keep=keep, refresh=refresh)
 
     @classmethod
-    def restore(cls, ckpt_dir: str, model: pqbase.QuantizerModel, *,
+    def restore(cls, ckpt_dir: str,
+                model: Optional[pqbase.QuantizerModel] = None, *,
                 generation: Optional[int] = None, delta_capacity: int = 1024,
                 delta_degree: int = 8) -> "StreamingEngine":
         """Resume from the last (or a given) consolidated generation's
         atomic snapshot — delta and tombstones restart empty, exactly the
-        state the snapshot froze. The snapshot stores codes but no
-        codebooks, so the caller must supply the SAME quantizer the
-        segment was encoded with; the width/layout guard below catches the
-        common mismatches (wrong M, u8 model against an fs4 snapshot)."""
+        state the snapshot froze.
+
+        Snapshots written since codebook refresh (DESIGN.md §12) carry the
+        quantizer the codes were encoded with, so ``model=None`` restores
+        self-contained — REQUIRED after a refreshed consolidation, where no
+        caller-held model is guaranteed to match the generation on disk. An
+        explicit ``model`` overrides the stored one (legacy snapshots need
+        it); the width/layout guard below catches the common mismatches
+        (wrong M, u8 model against an fs4 snapshot)."""
         from repro.index.segment import load_segment
         from repro.pq.pack import FS_K, packed_width
 
-        seg = load_segment(ckpt_dir, generation)
+        seg, stored = load_segment(ckpt_dir, generation, with_model=True)
+        if model is None:
+            if stored is None:
+                raise ValueError(
+                    "restore: snapshot has no stored quantizer (pre-refresh "
+                    "format) — pass the model the segment was encoded with")
+            model = stored
         want = packed_width(model.m) if seg.layout == "fs4" else model.m
         if seg.code_width != want or (seg.layout == "fs4"
                                       and model.k > FS_K):

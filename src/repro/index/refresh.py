@@ -1,0 +1,166 @@
+"""Routing-guided codebook refresh for the streaming index (DESIGN.md §12).
+
+The serving stack runs on statically trained PQ codes, but the paper's
+contribution is the *learned* quantizer — trained on neighborhood and
+routing features of the live proximity graph. This module closes that loop
+at consolidation time (the FreshDiskANN generation boundary is the natural
+retraining hook): :func:`refresh_quantizer` takes the CURRENT base segment
+plus its tombstone bitset and produces a better quantizer for the next
+generation, which :func:`repro.index.consolidate.consolidate` then uses to
+re-encode every surviving row (base + delta), rebuild the u8/fs4 codes and
+the PQ-hash seed table, snapshot the new generation WITH its codebooks, and
+hot-swap model + segment atomically.
+
+Two refinement stages, both warm-started from the serving codebooks:
+
+1. **Lloyd warm start** (``kmeans_iters`` iterations): classic k-means over
+   the LIVE rotated sub-vectors, initialized at the current codebooks.
+   This is what absorbs distribution drift — cells migrate toward where
+   the live data actually is — and it is cheap and monotone in distortion.
+2. **Routing-guided gradient steps** (``steps`` Adam steps on the paper's
+   joint loss): the existing data-parallel ``core/trainer.fit`` path with
+   ``tombstones=`` — triplet anchors and routing-feature queries are drawn
+   from live vertices of the live graph only (``core/features.py`` masks
+   dead ids out of every neighborhood and every traced beam), so the
+   quantizer is tuned for how queries actually route on THIS graph, not
+   just for reconstruction.
+
+Rotation handling: serving rotations stay frozen during a refresh (the
+default — a refresh refines codebooks against drift; re-learning R is a
+full retrain's job). Training runs on pre-rotated vectors ``x @ R.T`` with
+``learn_rotation=False``; squared Euclidean distance is rotation-invariant,
+so the live graph built over the original vectors is exactly as valid in
+the rotated space, and the refreshed model keeps the original R.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizer as Q
+from repro.core import trainer as T
+from repro.index.segment import BaseSegment
+from repro.pq import base as pqbase
+from repro.pq.kmeans import kmeans_multi
+
+
+@dataclasses.dataclass(frozen=True)
+class RefreshConfig:
+    """Knobs for one codebook refresh (sized for a consolidation pause, not
+    a from-scratch training run — tens of steps, small batches)."""
+
+    steps: int = 40                 # routing-guided Adam steps (0 = Lloyd only)
+    kmeans_iters: int = 5           # warm-started Lloyd iterations (0 = skip)
+    lr: float = 1e-3
+    triplet_batch: int = 256
+    routing_batch: int = 256
+    routing_pool_queries: int = 64
+    routing_refresh_every: int = 20  # re-extract routing features this often
+    beam_h: int = 8
+    n_hops: int = 2
+    k_pos: int = 10
+    k_neg: int = 30
+    use_routing: bool = True
+    use_neighborhood: bool = True
+    data_parallel: bool = False     # trainer's shard_map path (multi-device)
+    max_sample: int = 20_000        # live-row cap for the Lloyd stage
+    seed: int = 0
+    verbose: bool = False
+
+
+def _live_mask(tombstones: Optional[np.ndarray], n: int) -> np.ndarray:
+    """(n,) bool live mask from uint32 bitset words (all-live when None)."""
+    if tombstones is None:
+        return np.ones((n,), bool)
+    words = np.asarray(tombstones, np.uint32)
+    ids = np.arange(n, dtype=np.int64)
+    return ((words[ids >> 5] >> (ids & 31).astype(np.uint32)) & 1) == 0
+
+
+def refresh_quantizer(base: BaseSegment, model: pqbase.QuantizerModel, *,
+                      tombstones: Optional[np.ndarray] = None,
+                      cfg: Optional[RefreshConfig] = None,
+                      key: Optional[jax.Array] = None,
+                      ) -> tuple[pqbase.QuantizerModel, dict]:
+    """Retrain the quantizer against the LIVE rows of ``base``.
+
+    Args:
+      base:       the current (pre-compaction) base segment — its graph is
+                  the live routing structure the features are sampled from.
+      model:      the serving quantizer to warm-start from (its rotation is
+                  kept; its codebooks are the starting point).
+      tombstones: optional uint32 bitset words over the GLOBAL id space
+                  (only bits < base.n matter here): dead vertices never
+                  appear as anchors, positives/negatives, or routing
+                  waypoints, and never contribute to the Lloyd stage.
+      cfg:        :class:`RefreshConfig` (default: a CI-sized refresh).
+      key:        PRNG key (default: from ``cfg.seed``).
+
+    Returns:
+      (new_model, report) — ``new_model`` shares ``model.r`` with fresh
+      codebooks; ``report`` carries live counts and the mean squared
+      reconstruction error over live rows before/after (the distortion the
+      AiSAQ line argues is the resident artifact worth keeping small).
+    """
+    cfg = cfg if cfg is not None else RefreshConfig()
+    key = key if key is not None else jax.random.PRNGKey(cfg.seed)
+    n, d = base.n, base.dim
+    m, k = model.m, model.k
+    live = _live_mask(tombstones, n)
+    n_live = int(live.sum())
+    if n_live < k:
+        raise ValueError(
+            f"refresh_quantizer: only {n_live} live rows but K={k} codewords "
+            f"per subspace — consolidate without refresh or add data")
+
+    x = jnp.asarray(base.vectors, jnp.float32)
+    xr = x @ model.r.T                       # train in the rotated space
+    k_lloyd, k_fit = jax.random.split(key)
+
+    live_idx = np.flatnonzero(live)
+    if live_idx.size > cfg.max_sample:
+        sel = np.random.default_rng(cfg.seed).choice(
+            live_idx, cfg.max_sample, replace=False)
+        live_idx = np.sort(sel)
+    x_live = jnp.asarray(np.asarray(x)[live_idx])
+    report = {"n_live": n_live, "steps": cfg.steps,
+              "kmeans_iters": cfg.kmeans_iters,
+              "distortion_before": float(pqbase.distortion(model, x_live))}
+
+    # ---- stage 1: warm-started Lloyd on live rotated sub-vectors ---------
+    codebooks = jnp.asarray(model.codebooks, jnp.float32)
+    if cfg.kmeans_iters > 0:
+        sub = jnp.asarray(np.asarray(xr)[live_idx]).reshape(
+            live_idx.size, m, d // m).transpose(1, 0, 2)     # (M, L, dsub)
+        codebooks = kmeans_multi(k_lloyd, sub, k, iters=cfg.kmeans_iters,
+                                 init=codebooks)
+
+    # ---- stage 2: routing-guided gradient steps on the live graph --------
+    history: list = []
+    if cfg.steps > 0:
+        qcfg = Q.RPQConfig(dim=d, m=m, k=k, learn_rotation=False)
+        tcfg = T.TrainConfig(
+            steps=cfg.steps, lr=cfg.lr, triplet_batch=cfg.triplet_batch,
+            routing_batch=cfg.routing_batch,
+            routing_pool_queries=cfg.routing_pool_queries,
+            refresh_every=cfg.routing_refresh_every, beam_h=cfg.beam_h,
+            n_hops=cfg.n_hops, k_pos=cfg.k_pos, k_neg=cfg.k_neg,
+            use_routing=cfg.use_routing,
+            use_neighborhood=cfg.use_neighborhood,
+            data_parallel=cfg.data_parallel,
+            log_every=max(cfg.steps // 4, 1))
+        state = T.fit(k_fit, qcfg, tcfg, xr, base.graph,
+                      params=Q.init_params(qcfg, codebooks),
+                      tombstones=tombstones, verbose=cfg.verbose)
+        codebooks = state.params.codebooks
+        history = state.history
+
+    new_model = pqbase.QuantizerModel(r=model.r, codebooks=codebooks)
+    report["distortion_after"] = float(pqbase.distortion(new_model, x_live))
+    report["history"] = history
+    return new_model, report

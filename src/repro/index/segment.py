@@ -160,28 +160,53 @@ class BaseSegment:
 
 
 def save_segment(directory: str, seg: BaseSegment,
-                 keep: Optional[int] = None) -> str:
+                 keep: Optional[int] = None,
+                 model: Optional[pqbase.QuantizerModel] = None) -> str:
     """Atomic snapshot of a base segment at step = generation
     (dist/checkpoint.py: readers see the old complete generation or the new
-    one, never a half-written consolidation)."""
-    return ckpt.save(
-        directory, seg.generation, keep=keep,
-        index={"neighbors": np.asarray(seg.graph.neighbors),
-               "medoid": np.asarray(seg.graph.medoid),
-               "codes": np.asarray(seg.codes),
-               "vectors": np.asarray(seg.vectors),
-               "layout": seg.layout,
-               "generation": int(seg.generation)})
+    one, never a half-written consolidation).
+
+    ``model`` persists the quantizer the codes were encoded with (rotation
+    + codebooks + M/K/layout metadata) INSIDE the snapshot, so a restart
+    resumes self-contained — required since codebook refresh (DESIGN.md
+    §12) means the serving quantizer changes across generations and no
+    caller-side model is guaranteed to match. ``model=None`` writes the
+    legacy codes-only format (restore then needs an explicit model).
+    """
+    index = {"neighbors": np.asarray(seg.graph.neighbors),
+             "medoid": np.asarray(seg.graph.medoid),
+             "codes": np.asarray(seg.codes),
+             "vectors": np.asarray(seg.vectors),
+             "layout": seg.layout,
+             "generation": int(seg.generation)}
+    if model is not None:
+        index["quantizer"] = {
+            "r": np.asarray(model.r, np.float32),
+            "codebooks": np.asarray(model.codebooks, np.float32),
+            "m": int(model.m), "k": int(model.k)}
+    return ckpt.save(directory, seg.generation, keep=keep, index=index)
 
 
-def load_segment(directory: str,
-                 generation: Optional[int] = None) -> BaseSegment:
-    """Restore the latest (or a specific) consolidated generation."""
+def load_segment(directory: str, generation: Optional[int] = None, *,
+                 with_model: bool = False):
+    """Restore the latest (or a specific) consolidated generation.
+
+    ``with_model=True`` returns ``(segment, model_or_None)`` — the model is
+    ``None`` for pre-refresh (codebook-less) snapshots, which still load;
+    the caller decides whether an explicit model can stand in."""
     state = ckpt.restore(directory, step=generation)
     t = state["index"]
     graph = Graph(neighbors=jnp.asarray(t["neighbors"], jnp.int32),
                   medoid=jnp.asarray(t["medoid"], jnp.int32))
-    return BaseSegment(graph=graph, codes=jnp.asarray(t["codes"]),
-                       vectors=jnp.asarray(t["vectors"], jnp.float32),
-                       layout=str(t["layout"]),
-                       generation=int(t["generation"]))
+    seg = BaseSegment(graph=graph, codes=jnp.asarray(t["codes"]),
+                      vectors=jnp.asarray(t["vectors"], jnp.float32),
+                      layout=str(t["layout"]),
+                      generation=int(t["generation"]))
+    if not with_model:
+        return seg
+    q = t.get("quantizer")
+    model = (pqbase.QuantizerModel(
+        r=jnp.asarray(q["r"], jnp.float32),
+        codebooks=jnp.asarray(q["codebooks"], jnp.float32))
+        if q is not None else None)
+    return seg, model

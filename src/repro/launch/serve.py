@@ -49,6 +49,12 @@ Scenarios (search/engine.py, DESIGN.md §5–§6):
                       followed by a consolidation that folds the delta into
                       the next base generation, snapshots it atomically
                       next to the checkpoint, and re-evaluates.
+                      ``--refresh-every N`` additionally RETRAINS the
+                      quantizer on the live graph every N rounds and at
+                      the final consolidation (DESIGN.md §12): each new
+                      generation re-encodes against the refreshed
+                      codebooks and its snapshot carries them, so a
+                      restart restores self-contained.
 """
 
 from __future__ import annotations
@@ -119,8 +125,11 @@ def run_streaming(args, model, ds) -> None:
           f"{len(stream)}, delta capacity {cap}, layout {args.codes}")
 
     rng = np.random.default_rng(0)
-    # gid → vector row for live-corpus ground truth: base rows then stream
-    all_x = np.concatenate([base_x, stream]) if len(stream) else base_x
+    # gid → vector row for live-corpus ground truth: written at insert time
+    # (consolidation renumbers gids, so a static base+stream concat would
+    # go stale after the first mid-stream generation bump)
+    all_x = np.zeros((n0 + cap, base_x.shape[1]), np.float32)
+    all_x[:n0] = base_x
     live = np.zeros(n0 + cap, bool)
     live[:n0] = True
 
@@ -136,32 +145,53 @@ def run_streaming(args, model, ds) -> None:
               f"live={engine.n_live} gen={engine.generation} "
               f"resident={engine.memory_bytes()/1e6:.1f}MB")
 
+    def consolidate_now(refresh) -> dict:
+        nonlocal live, all_x
+        stats = engine.consolidate(
+            ckpt_dir=f"{args.ckpt_dir}/streaming_index", keep=3,
+            refresh=refresh)
+        # consolidation renumbers: translate the live-corpus bookkeeping
+        old_live = np.flatnonzero(live)
+        live = np.zeros(stats["n"] + cap, bool)
+        live[stats["old2new"][old_live]] = True
+        all_x = np.concatenate([
+            np.asarray(engine.base.vectors),
+            np.zeros((cap, base_x.shape[1]), np.float32)])
+        extra = ""
+        if stats["refreshed"]:
+            rep = stats["refresh"]
+            extra = (f", codebooks refreshed (live distortion "
+                     f"{rep['distortion_before']:.3f} → "
+                     f"{rep['distortion_after']:.3f})")
+        print(f"[serve] consolidated → generation {stats['generation']}: "
+              f"{stats['n']} rows ({stats['dropped']} dropped, "
+              f"{stats['folded']} folded in){extra}, snapshot at "
+              f"{args.ckpt_dir}/streaming_index")
+        return stats
+
     rounds = max(args.churn_rounds, 1)
     per = -(-max(len(stream), 1) // rounds)
     for i in range(rounds):
-        # contiguous chunks keep gid n0+s ↔ stream[s] (delta slots are
-        # assigned in insertion order)
         batch = stream[i * per:(i + 1) * per]
         if len(batch):
             gids = engine.insert(batch)
+            all_x[gids] = batch
             live[gids] = True
-        live_base = np.flatnonzero(live[:n0])
+        base_rows = engine.base.n
+        live_base = np.flatnonzero(live[:base_rows])
         dead = rng.choice(live_base, min(len(batch), len(live_base)),
                           replace=False)
         engine.delete(dead)
         live[dead] = False
         evaluate(f"round{i}")
-    stats = engine.consolidate(ckpt_dir=f"{args.ckpt_dir}/streaming_index",
-                               keep=3)
-    # consolidation renumbers: translate the live-corpus bookkeeping
-    old_live = np.flatnonzero(live)
-    live = np.zeros(stats["n"] + cap, bool)
-    live[stats["old2new"][old_live]] = True
-    all_x = np.asarray(engine.base.vectors)
-    print(f"[serve] consolidated → generation {stats['generation']}: "
-          f"{stats['n']} rows ({stats['dropped']} dropped, "
-          f"{stats['folded']} folded in), snapshot at "
-          f"{args.ckpt_dir}/streaming_index")
+        # mid-stream refreshed consolidations close the learning loop
+        # (DESIGN.md §12) while the stream keeps flowing; the final
+        # consolidation below covers the tail
+        if (args.refresh_every and (i + 1) % args.refresh_every == 0
+                and i + 1 < rounds):
+            consolidate_now(refresh=True)
+            evaluate(f"refreshed{i}")
+    consolidate_now(refresh=bool(args.refresh_every))
     evaluate("consolidated")
 
 
@@ -205,6 +235,13 @@ def main():
     ap.add_argument("--churn-rounds", type=int, default=4,
                     help="streaming scenario: interleaved insert/delete/"
                     "query rounds before consolidation")
+    ap.add_argument("--refresh-every", type=int, default=0,
+                    help="streaming scenario: run a codebook-REFRESHED "
+                    "consolidation every N churn rounds (DESIGN.md §12) — "
+                    "the quantizer retrains on the live graph and the new "
+                    "generation re-encodes against it; the final "
+                    "consolidation refreshes too. 0 = codebooks stay "
+                    "frozen across generations (the pre-refresh behavior)")
     ap.add_argument("--port-stdin", action="store_true",
                     help="read whitespace-separated query vectors on stdin")
     args = ap.parse_args()

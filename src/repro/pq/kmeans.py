@@ -19,18 +19,28 @@ from repro.kernels import ops as kops
 
 @functools.partial(jax.jit, static_argnames=("k", "iters", "block"))
 def kmeans(key: jax.Array, x: jax.Array, k: int, *, iters: int = 20,
-           block: int = 8192) -> tuple[jax.Array, jax.Array]:
+           block: int = 8192,
+           init: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
     """Lloyd's algorithm. Returns (centroids (K, D), assignments (N,)).
 
     Any K ≤ N works — K=256 byte codes and K=16 fast-scan nibble codes are
     the two serving regimes (small K leans harder on the empty-cluster
     re-seeding below: 16 seeds land in few visible clusters more often).
+
+    ``init`` (K, D) warm-starts the centroids instead of sampling them —
+    the codebook-refresh path (repro/index/refresh.py) refines the SERVING
+    codebooks against drifted live data, so codes of unchanged rows move
+    as little as the data demands.
     """
     n, d = x.shape
     assert k <= n, f"kmeans needs K <= N, got K={k} > N={n}"
     x = x.astype(jnp.float32)
-    perm = jax.random.permutation(key, n)
-    cent0 = x[perm[:k]]
+    if init is None:
+        perm = jax.random.permutation(key, n)
+        cent0 = x[perm[:k]]
+    else:
+        assert init.shape == (k, d), (init.shape, (k, d))
+        cent0 = jnp.asarray(init, jnp.float32)
 
     n_pad = (-n) % block
     xp = jnp.pad(x, ((0, n_pad), (0, 0)))
@@ -65,13 +75,20 @@ def kmeans(key: jax.Array, x: jax.Array, k: int, *, iters: int = 20,
 
 @functools.partial(jax.jit, static_argnames=("k", "iters", "block"))
 def kmeans_multi(key: jax.Array, x: jax.Array, k: int, *, iters: int = 20,
-                 block: int = 8192) -> jax.Array:
+                 block: int = 8192, init: jax.Array | None = None) -> jax.Array:
     """Independent k-means per leading axis: x (M, N, d) → centroids (M, K, d).
 
     This is exactly "train the M PQ sub-codebooks"; vmapped so all subspaces
-    run in one XLA program.
+    run in one XLA program. ``init`` (M, K, d) warm-starts every subspace
+    (see :func:`kmeans`).
     """
     m = x.shape[0]
     keys = jax.random.split(key, m)
-    cent, _ = jax.vmap(lambda kk, xx: kmeans(kk, xx, k, iters=iters, block=block))(keys, x)
+    if init is None:
+        cent, _ = jax.vmap(
+            lambda kk, xx: kmeans(kk, xx, k, iters=iters, block=block))(keys, x)
+    else:
+        cent, _ = jax.vmap(
+            lambda kk, xx, c0: kmeans(kk, xx, k, iters=iters, block=block,
+                                      init=c0))(keys, x, init)
     return cent

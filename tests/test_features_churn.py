@@ -1,0 +1,167 @@
+"""Feature sampling under churn (core/features.py ``tombstones=``).
+
+The codebook-refresh loop (DESIGN.md §12) retrains the quantizer on
+features of the LIVE graph while the tombstone bitset marks deleted rows.
+These tests pin the contract that makes that sound: no dead vertex ever
+appears in any emitted feature (triplet legs or routing candidates), a
+dead anchor invalidates its triplet, output shapes are fixed (churn never
+retraces the samplers), and sampling is seeded-deterministic.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import features as F
+from repro.index.segment import Tombstones, encode_codes
+from repro.pq import base as pqbase
+from repro.pq import train_pq
+
+
+@pytest.fixture(scope="module")
+def churn_setup(clustered_data, small_graph):
+    x, _, _ = clustered_data
+    n = x.shape[0]
+    ts = Tombstones(n)
+    rng = np.random.default_rng(5)
+    dead = np.sort(rng.choice(n, n // 5, replace=False))   # 20% churn
+    ts.add(dead)
+    model = train_pq(jax.random.PRNGKey(3), x, 8, 16, iters=6)
+    return x, small_graph, ts, dead, model
+
+
+def live_anchors(n, dead, count, seed=2):
+    live = np.setdiff1d(np.arange(n), dead)
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.choice(live, count, replace=False), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# No dead ids in any emitted feature
+# ---------------------------------------------------------------------------
+
+def test_triplets_exclude_dead_ids(churn_setup):
+    x, g, ts, dead, _ = churn_setup
+    anchors = live_anchors(g.n, dead, 128)
+    t = F.sample_triplets(jax.random.PRNGKey(1), g, x, anchors,
+                          tombstones=ts.words)
+    ok = np.asarray(t.valid)
+    assert ok.mean() > 0.8          # masking 20% must not starve sampling
+    vp, vn = np.asarray(t.vpos)[ok], np.asarray(t.vneg)[ok]
+    assert not np.isin(vp, dead).any()
+    assert not np.isin(vn, dead).any()
+    # and masking changed the draw only via exclusion: legs are live rows
+    assert (vp < g.n).all() and (vn < g.n).all()
+
+
+def test_dead_anchor_invalidates_triplet(churn_setup):
+    x, g, ts, dead, _ = churn_setup
+    anchors = jnp.asarray(dead[:64], jnp.int32)
+    t = F.sample_triplets(jax.random.PRNGKey(1), g, x, anchors,
+                          tombstones=ts.words)
+    assert not np.asarray(t.valid).any()
+
+
+def test_routing_excludes_dead_ids(churn_setup):
+    x, g, ts, dead, model = churn_setup
+    codes = jnp.asarray(encode_codes(model, x, "u8"))
+    # entry must be live for this check to exercise real routing
+    live = np.setdiff1d(np.arange(g.n), dead)
+    entry = jnp.int32(live[0])
+    rb = F.sample_routing(g, x, x[:16], codes,
+                          lut_fn=lambda q: pqbase.build_lut(model, q),
+                          h=8, trace_len=16, tombstones=ts.words,
+                          entry=entry)
+    cand = np.asarray(rb.cand)
+    real = cand[cand < g.n]          # sentinel g.n = masked/padding
+    assert not np.isin(real, dead).any()
+    # labels always point at live candidates on valid hops
+    ok = np.asarray(rb.valid)
+    assert ok.sum() > 0
+    labeled = cand[ok, np.asarray(rb.label)[ok]]
+    assert (labeled < g.n).all()
+    assert not np.isin(labeled, dead).any()
+
+
+def test_routing_label_is_exact_argmin_over_live(churn_setup):
+    x, g, ts, dead, model = churn_setup
+    codes = jnp.asarray(encode_codes(model, x, "u8"))
+    live = np.setdiff1d(np.arange(g.n), dead)
+    rb = F.sample_routing(g, x, x[:8], codes,
+                          lut_fn=lambda q: pqbase.build_lut(model, q),
+                          h=8, trace_len=8, tombstones=ts.words,
+                          entry=jnp.int32(live[0]))
+    ok = np.asarray(rb.valid)
+    cand = np.asarray(rb.cand)[ok]
+    qv = np.asarray(rb.q)[ok]
+    xp = np.concatenate([np.asarray(x),
+                         np.zeros((1, x.shape[1]), np.float32)])
+    d = np.sum((xp[cand] - qv[:, None]) ** 2, -1)
+    d[cand == g.n] = np.inf
+    assert (d.argmin(1) == np.asarray(rb.label)[ok]).all()
+
+
+# ---------------------------------------------------------------------------
+# Fixed shapes / no retrace across churn, seeded determinism
+# ---------------------------------------------------------------------------
+
+def test_no_retrace_across_tombstone_patterns(churn_setup):
+    """Tombstone words are TRACED: flipping bits between generations must
+    reuse the same compiled sampler (shapes depend only on batch sizes)."""
+    x, g, ts, dead, _ = churn_setup
+    anchors = live_anchors(g.n, dead, 32)
+
+    f = jax.jit(lambda key, a, w: F.sample_triplets(
+        key, g, x, a, tombstones=w))
+    t1 = f(jax.random.PRNGKey(0), anchors, ts.words)
+    ts2 = Tombstones(g.n)
+    ts2.add(np.arange(0, g.n, 7))            # a different churn pattern
+    t2 = f(jax.random.PRNGKey(0), anchors, ts2.words)
+    assert f._cache_size() == 1
+    assert t1.v.shape == t2.v.shape and t1.valid.shape == t2.valid.shape
+
+
+def test_routing_shapes_fixed_under_churn(churn_setup):
+    x, g, ts, dead, model = churn_setup
+    codes = jnp.asarray(encode_codes(model, x, "u8"))
+    lut_fn = lambda q: pqbase.build_lut(model, q)  # noqa: E731
+    rb0 = F.sample_routing(g, x, x[:8], codes, lut_fn=lut_fn,
+                           h=8, trace_len=8)
+    rb1 = F.sample_routing(g, x, x[:8], codes, lut_fn=lut_fn,
+                           h=8, trace_len=8, tombstones=ts.words)
+    assert rb0.cand.shape == rb1.cand.shape == (64, 8)
+    assert rb0.q.shape == rb1.q.shape
+    assert rb0.label.shape == rb1.label.shape
+
+
+def test_sampling_is_seeded_deterministic(churn_setup):
+    x, g, ts, dead, model = churn_setup
+    anchors = live_anchors(g.n, dead, 64)
+    t1 = F.sample_triplets(jax.random.PRNGKey(9), g, x, anchors,
+                           tombstones=ts.words)
+    t2 = F.sample_triplets(jax.random.PRNGKey(9), g, x, anchors,
+                           tombstones=ts.words)
+    for a, b in zip(t1, t2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    codes = jnp.asarray(encode_codes(model, x, "u8"))
+    lut_fn = lambda q: pqbase.build_lut(model, q)  # noqa: E731
+    r1 = F.sample_routing(g, x, x[:8], codes, lut_fn=lut_fn, h=8,
+                          trace_len=8, tombstones=ts.words)
+    r2 = F.sample_routing(g, x, x[:8], codes, lut_fn=lut_fn, h=8,
+                          trace_len=8, tombstones=ts.words)
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_no_tombstones_path_unchanged(churn_setup):
+    """tombstones=None must be byte-identical to the pre-churn sampler
+    (the all-live bitset is a no-op, not a behavior change)."""
+    x, g, ts, dead, _ = churn_setup
+    anchors = jnp.arange(64, dtype=jnp.int32)
+    t0 = F.sample_triplets(jax.random.PRNGKey(4), g, x, anchors)
+    empty = Tombstones(g.n)
+    t1 = F.sample_triplets(jax.random.PRNGKey(4), g, x, anchors,
+                           tombstones=empty.words)
+    for a, b in zip(t0, t1):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,365 @@
+"""Codebook refresh across streaming generations (repro/index/refresh.py +
+the refresh arm of consolidate(), DESIGN.md §12).
+
+Pins the full loop: the refreshed snapshot persists its quantizer so
+``restore()`` is self-contained (with a regression for pre-refresh
+codebook-less snapshots), every surviving row re-encodes against the new
+codebooks in both layouts, the PQ-hash seed table rebuilds against them,
+post-refresh serving is bit-identical to a from-scratch engine on the new
+generation (ids, dists AND n_dist accounting), a crash between retraining
+and the atomic snapshot leaves the previous generation restorable with its
+OLD codebooks, and — the acceptance bar — refreshed codebooks beat frozen
+ones on recall under distribution drift at an equal search budget.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.graphs import build_vamana
+from repro.graphs.knn import knn_ids
+from repro.index import (BaseSegment, RefreshConfig, StreamingEngine,
+                         Tombstones, refresh_quantizer)
+from repro.index.segment import encode_codes, load_segment, save_segment
+from repro.pq import train_pq, train_pq_fs4
+from repro.pq.pack import unpack_codes
+from repro.search.metrics import recall_at_k
+
+# sized so a refreshed consolidate stays in test-suite time, not train time
+TINY = RefreshConfig(steps=4, kmeans_iters=2, triplet_batch=64,
+                     routing_batch=64, routing_pool_queries=16,
+                     routing_refresh_every=4, beam_h=8)
+
+
+@pytest.fixture(scope="module")
+def models(clustered_data):
+    x, _, _ = clustered_data
+    return {"u8": train_pq(jax.random.PRNGKey(3), x, 8, 32, iters=8),
+            "fs4": train_pq_fs4(jax.random.PRNGKey(3), x, 8, iters=8)}
+
+
+def make_engine(clustered_data, small_graph, models, layout="u8"):
+    x, _, _ = clustered_data
+    model = models[layout]
+    seg = BaseSegment(graph=small_graph,
+                      codes=jnp.asarray(encode_codes(model, x, layout)),
+                      vectors=x, layout=layout)
+    return StreamingEngine(seg, model, delta_capacity=512)
+
+
+def churn(eng, x, *, n_del=300, n_ins=100, seed=11):
+    rng = np.random.default_rng(seed)
+    rows = np.asarray(x)[rng.integers(0, x.shape[0], n_ins)]
+    gids = eng.insert(rows + 0.1 * rng.normal(size=rows.shape
+                                              ).astype(np.float32))
+    # deletes from the engine's OWN base rows — valid after a compaction
+    # shrank the id space below len(x)
+    eng.delete(rng.choice(eng.base.n, n_del, replace=False))
+    return gids
+
+
+# ---------------------------------------------------------------------------
+# refresh_quantizer unit behavior
+# ---------------------------------------------------------------------------
+
+def test_refresh_reduces_distortion_and_keeps_rotation(clustered_data,
+                                                       small_graph, models):
+    x, _, _ = clustered_data
+    model = models["u8"]
+    seg = BaseSegment(graph=small_graph,
+                      codes=jnp.asarray(encode_codes(model, x, "u8")),
+                      vectors=x)
+    ts = Tombstones(x.shape[0])
+    ts.add(np.arange(0, x.shape[0], 3))     # 1/3 churn
+    # Lloyd-only: warm-started k-means is monotone in distortion
+    new, rep = refresh_quantizer(
+        seg, model, tombstones=ts._words,
+        cfg=RefreshConfig(steps=0, kmeans_iters=6))
+    assert rep["distortion_after"] <= rep["distortion_before"] + 1e-4
+    assert rep["n_live"] == x.shape[0] - ts.count
+    np.testing.assert_array_equal(np.asarray(new.r), np.asarray(model.r))
+    assert new.codebooks.shape == model.codebooks.shape
+    # the full two-stage path also returns finite, same-shape codebooks
+    new2, rep2 = refresh_quantizer(seg, model, tombstones=ts._words,
+                                   cfg=TINY)
+    assert np.isfinite(np.asarray(new2.codebooks)).all()
+    assert len(rep2["history"]) > 0
+
+
+def test_refresh_too_few_live_rows_raises(clustered_data, small_graph,
+                                          models):
+    x, _, _ = clustered_data
+    model = models["u8"]
+    seg = BaseSegment(graph=small_graph,
+                      codes=jnp.asarray(encode_codes(model, x, "u8")),
+                      vectors=x)
+    ts = Tombstones(x.shape[0])
+    ts.add(np.arange(x.shape[0] - 5))       # 5 live < K=32 codewords
+    with pytest.raises(ValueError, match="live rows"):
+        refresh_quantizer(seg, model, tombstones=ts._words, cfg=TINY)
+
+
+# ---------------------------------------------------------------------------
+# Snapshot persistence: the quantizer travels with the generation
+# ---------------------------------------------------------------------------
+
+def test_snapshot_roundtrips_quantizer(clustered_data, small_graph, models,
+                                       tmp_path):
+    x, _, _ = clustered_data
+    model = models["u8"]
+    seg = BaseSegment(graph=small_graph,
+                      codes=jnp.asarray(encode_codes(model, x, "u8")),
+                      vectors=x)
+    save_segment(str(tmp_path), seg, model=model)
+    seg2, stored = load_segment(str(tmp_path), with_model=True)
+    assert stored is not None
+    np.testing.assert_array_equal(np.asarray(stored.r), np.asarray(model.r))
+    np.testing.assert_array_equal(np.asarray(stored.codebooks),
+                                  np.asarray(model.codebooks))
+    assert (stored.m, stored.k) == (model.m, model.k)
+    # default load path is unchanged (returns just the segment)
+    seg3 = load_segment(str(tmp_path))
+    assert seg3.n == seg.n
+
+
+@pytest.mark.parametrize("layout", ["u8", "fs4"])
+def test_restore_self_contained_after_refresh(clustered_data, small_graph,
+                                              models, layout, tmp_path):
+    """The point of persisting codebooks: after a refreshed consolidation
+    NO caller-held model matches the generation on disk — restore() must
+    reconstruct the quantizer from the snapshot alone and serve
+    identically."""
+    x, q, _ = clustered_data
+    eng = make_engine(clustered_data, small_graph, models, layout)
+    churn(eng, x)
+    stats = eng.consolidate(ckpt_dir=str(tmp_path), refresh=TINY)
+    assert stats["refreshed"] and "refresh" in stats
+    res = eng.search(q, k=10, h=32)
+    restored = StreamingEngine.restore(str(tmp_path))       # no model arg
+    assert restored.generation == 1
+    np.testing.assert_array_equal(
+        np.asarray(restored.model.codebooks), np.asarray(eng.model.codebooks))
+    res2 = restored.search(q, k=10, h=32)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(res2.ids))
+
+
+def test_legacy_codebookless_snapshot_regression(clustered_data, small_graph,
+                                                 models, tmp_path):
+    """Pre-refresh snapshots (no stored quantizer) must still load: with an
+    explicit model they serve; without one restore() fails loudly instead
+    of guessing; and the mismatch guard still rejects a wrong model."""
+    x, q, _ = clustered_data
+    model = models["u8"]
+    seg = BaseSegment(graph=small_graph,
+                      codes=jnp.asarray(encode_codes(model, x, "u8")),
+                      vectors=x)
+    save_segment(str(tmp_path), seg)        # legacy format: model omitted
+    _, stored = load_segment(str(tmp_path), with_model=True)
+    assert stored is None
+    with pytest.raises(ValueError, match="no stored quantizer"):
+        StreamingEngine.restore(str(tmp_path))
+    eng = StreamingEngine.restore(str(tmp_path), model)
+    assert np.isfinite(np.asarray(eng.search(q, k=5, h=16).dists)[:, 0]).all()
+    wrong = train_pq(jax.random.PRNGKey(8), x, 4, 32, iters=2)
+    with pytest.raises(ValueError, match="does not match"):
+        StreamingEngine.restore(str(tmp_path), wrong)
+
+
+def test_explicit_model_overrides_stored(clustered_data, small_graph, models,
+                                         tmp_path):
+    x, _, _ = clustered_data
+    model = models["u8"]
+    seg = BaseSegment(graph=small_graph,
+                      codes=jnp.asarray(encode_codes(model, x, "u8")),
+                      vectors=x)
+    save_segment(str(tmp_path), seg, model=model)
+    override = train_pq(jax.random.PRNGKey(9), x, 8, 32, iters=2)
+    eng = StreamingEngine.restore(str(tmp_path), override)
+    np.testing.assert_array_equal(np.asarray(eng.model.codebooks),
+                                  np.asarray(override.codebooks))
+
+
+# ---------------------------------------------------------------------------
+# Re-encode + rebuilt serving state
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", ["u8", "fs4"])
+def test_reencoded_codes_roundtrip(clustered_data, small_graph, models,
+                                   layout):
+    """Post-refresh resident codes ARE the new model's encoding of the
+    surviving vectors — in the segment's own layout (u8 ids, fs4 packed
+    nibbles)."""
+    x, _, _ = clustered_data
+    eng = make_engine(clustered_data, small_graph, models, layout)
+    churn(eng, x)
+    eng.consolidate(refresh=TINY)
+    expect = encode_codes(eng.model, np.asarray(eng.base.vectors), layout)
+    np.testing.assert_array_equal(np.asarray(eng.base.codes), expect)
+    # and the codes actually changed (the refresh moved the codebooks)
+    frozen = make_engine(clustered_data, small_graph, models, layout)
+    churn(frozen, x)
+    frozen.consolidate()
+    assert not np.array_equal(np.asarray(eng.base.codes),
+                              np.asarray(frozen.base.codes))
+
+
+def test_seed_index_rebuilt_against_new_codebooks(clustered_data,
+                                                  small_graph, models):
+    """The PQ-hash seed table keys fold the resident codes; after a refresh
+    it must be rebuilt from the NEW model's codes (a stale table would
+    hash queries into the wrong buckets)."""
+    from repro.search.seed import build_seed_index
+
+    x, q, _ = clustered_data
+    eng = make_engine(clustered_data, small_graph, models, "fs4")
+    eng.search(q[:4], k=5, h=16, entries=4)     # build the gen-0 table
+    assert eng._seedix is not None
+    churn(eng, x)
+    eng.consolidate(refresh=TINY)
+    assert eng._seedix is None                  # _install reset it
+    eng.search(q[:4], k=5, h=16, entries=4)     # lazily rebuilt
+    expect = build_seed_index(np.asarray(
+        unpack_codes(jnp.asarray(eng.base.codes), eng.model.m)))
+    np.testing.assert_array_equal(np.asarray(eng._seedix.table),
+                                  np.asarray(expect.table))
+    np.testing.assert_array_equal(np.asarray(eng._seedix.codes),
+                                  np.asarray(expect.codes))
+
+
+@pytest.mark.parametrize("entries", [1, 4])
+def test_post_refresh_serving_matches_fresh_engine(clustered_data,
+                                                   small_graph, models,
+                                                   entries):
+    """Equivalence oracle for the hot swap: the refreshed engine must serve
+    EXACTLY like a from-scratch engine on the new generation — same ids,
+    same dists, same n_dist. Any stale cache (dist fns, padded codes, seed
+    table, delta device arrays) or accounting drift breaks this."""
+    x, q, _ = clustered_data
+    eng = make_engine(clustered_data, small_graph, models)
+    churn(eng, x)
+    eng.consolidate(refresh=TINY)
+    fresh = StreamingEngine(eng.base, eng.model, delta_capacity=512)
+    a = eng.search(q, k=10, h=32, entries=entries)
+    b = fresh.search(q, k=10, h=32, entries=entries)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+    np.testing.assert_array_equal(np.asarray(a.n_dist), np.asarray(b.n_dist))
+
+
+# ---------------------------------------------------------------------------
+# Crash safety: interrupt between retraining and the atomic snapshot
+# ---------------------------------------------------------------------------
+
+def test_crash_mid_refresh_previous_generation_restores(clustered_data,
+                                                        small_graph, models,
+                                                        tmp_path,
+                                                        monkeypatch):
+    """Kill consolidate(refresh=True) AFTER the retrain produced new
+    codebooks but BEFORE the snapshot/swap: the engine must keep serving
+    the old generation with OLD codebooks, and restore() from disk must
+    come back with the OLD codebooks too."""
+    import importlib
+
+    # NB: repro.index re-exports the consolidate FUNCTION under the same
+    # name, so ``import repro.index.consolidate as C`` binds the function
+    C = importlib.import_module("repro.index.consolidate")
+
+    x, q, _ = clustered_data
+    eng = make_engine(clustered_data, small_graph, models)
+    churn(eng, x, seed=7)
+    eng.consolidate(ckpt_dir=str(tmp_path))          # gen-1 snapshot on disk
+    old_books = np.asarray(eng.model.codebooks).copy()
+    churn(eng, x, n_del=200, n_ins=50, seed=13)
+    n_live = eng.n_live
+    before = eng.search(q, k=10, h=32)
+
+    seen = {}
+
+    def boom(directory, seg, keep=None, model=None):
+        # the refresh DID run: consolidate hands save_segment new codebooks
+        seen["retrained"] = (model is not None and not np.array_equal(
+            np.asarray(model.codebooks), old_books))
+        raise RuntimeError("disk died")
+
+    monkeypatch.setattr(C, "save_segment", boom)
+    with pytest.raises(RuntimeError, match="disk died"):
+        eng.consolidate(ckpt_dir=str(tmp_path), refresh=TINY)
+    assert seen["retrained"]
+
+    # engine untouched: generation, model, churn state, serving
+    assert eng.generation == 1 and eng.n_live == n_live
+    np.testing.assert_array_equal(np.asarray(eng.model.codebooks), old_books)
+    after = eng.search(q, k=10, h=32)
+    np.testing.assert_array_equal(np.asarray(before.ids),
+                                  np.asarray(after.ids))
+
+    # disk untouched: the gen-1 snapshot restores with OLD codebooks
+    restored = StreamingEngine.restore(str(tmp_path))
+    assert restored.generation == 1
+    np.testing.assert_array_equal(np.asarray(restored.model.codebooks),
+                                  old_books)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: refreshed codebooks beat frozen ones under drift
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_drift_recall_refreshed_beats_frozen():
+    """Distribution drift (the live corpus narrows to 6 of 24 clusters,
+    ~75% deletes + fresh in-cluster inserts — well past the 30% churn bar):
+    at an equal search budget the refreshed generation must beat the frozen
+    one on recall@10, and the retrain must cut live distortion hard (the
+    frozen model wastes most of its codewords on dead regions)."""
+    r = np.random.default_rng(1)
+    n, d, nc = 3000, 32, 24
+    centers = r.normal(size=(nc, d)).astype(np.float32) * 3
+    lab = r.integers(0, nc, n)
+    z = centers[lab] + r.normal(size=(n, d)).astype(np.float32)
+    basis = (np.linalg.qr(r.normal(size=(d, d)))[0]
+             @ np.diag(np.linspace(1.5, 0.3, d))).astype(np.float32)
+    x = (z @ basis).astype(np.float32)
+    model = train_pq(jax.random.PRNGKey(3), jnp.asarray(x), 8, 16, iters=8)
+    g = build_vamana(jax.random.PRNGKey(0), jnp.asarray(x), r=16, l=32,
+                     batch=1024)
+
+    keep_c = np.arange(6)
+    dead = np.flatnonzero(~np.isin(lab, keep_c))
+    zi = centers[r.choice(keep_c, 800)] + r.normal(size=(800, d)
+                                                   ).astype(np.float32)
+    xnew = (zi @ basis).astype(np.float32)
+    assert dead.size + len(xnew) >= 0.3 * n          # ≥30% churn, by a lot
+
+    def churned():
+        seg = BaseSegment(graph=g,
+                          codes=jnp.asarray(encode_codes(model, x, "u8")),
+                          vectors=jnp.asarray(x), layout="u8")
+        e = StreamingEngine(seg, model, delta_capacity=1024)
+        e.insert(xnew)
+        e.delete(dead)
+        return e
+
+    # post-churn ground truth; compaction order (base survivors then delta)
+    # makes corpus row == new global id, so gt indexes both engines directly
+    live_base = np.setdiff1d(np.arange(n), dead)
+    corpus = np.concatenate([x[live_base], xnew]).astype(np.float32)
+    zq = centers[r.choice(keep_c, 100)] + r.normal(size=(100, d)
+                                                   ).astype(np.float32)
+    q = jnp.asarray((zq @ basis).astype(np.float32))
+    gt, _ = knn_ids(jnp.asarray(corpus), q, 10)
+
+    frozen = churned()
+    frozen.consolidate()
+    refreshed = churned()
+    stats = refreshed.consolidate(
+        refresh=RefreshConfig(steps=30, kmeans_iters=10))
+    rep = stats["refresh"]
+    # locally calibrated: drift halves distortion (42.7 → 21.7); assert a
+    # comfortable fraction of that
+    assert rep["distortion_after"] < 0.75 * rep["distortion_before"], rep
+
+    r_frozen = recall_at_k(frozen.search(q, k=10, h=32).ids, gt, 10)
+    r_refresh = recall_at_k(refreshed.search(q, k=10, h=32).ids, gt, 10)
+    # calibrated gap ≈ +0.10 at h=32; require less than half of it
+    assert r_refresh >= r_frozen + 0.04, (r_frozen, r_refresh)
