@@ -26,7 +26,7 @@ import traceback
 
 def sections():
     from benchmarks import kernel_adc, paper_tables as pt
-    from benchmarks import sharded_serving, streaming
+    from benchmarks import resilience, sharded_serving, streaming
 
     return {
         "kernels": kernel_adc.run,
@@ -45,6 +45,10 @@ def sections():
         # streaming mutable index under churn (DESIGN.md §10): recall/QPS
         # at 0/5/10% inserts+deletes, before and after consolidation
         "streaming": streaming.run,
+        # resilience under injected faults (DESIGN.md §13): deadline
+        # budgets, the degradation ladder, snapshot corruption/crash
+        # drills, and the seeded 4-shard chaos acceptance row
+        "resilience": resilience.run,
     }
 
 

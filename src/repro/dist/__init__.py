@@ -6,7 +6,11 @@
 * :mod:`repro.dist.compression` — int8 gradient compression with error
   feedback (communication-efficient data parallelism).
 * :mod:`repro.dist.fault`       — failure injection, supervised restart,
-  straggler-tolerant partial top-k merge for scatter-gather serving.
+  straggler-tolerant partial top-k merge + quorum resolution for
+  scatter-gather serving, and the seeded ChaosPlan fault script.
+* :mod:`repro.dist.retry`       — exponential backoff + seeded jitter,
+  deadline-aware retry; the one retry vocabulary for the repo.
 """
 
-from repro.dist import checkpoint, compression, fault, sharding  # noqa: F401
+from repro.dist import (checkpoint, compression, fault, retry,  # noqa: F401
+                        sharding)

@@ -17,6 +17,15 @@ Non-array leaves (str/int/float/bool/None) round-trip through the JSON
 structure file, so ``extra={"dataset": ..., "m": 8}`` metadata needs no
 special casing. NamedTuple nodes restore as plain field dicts unless a
 ``like`` template supplies the concrete type.
+
+* **verified** — every array node in the ``.json`` manifest carries the
+  CRC32 of its raw bytes, checked on decode (DESIGN.md §13). The zip
+  container has its own CRC, but it only covers the *container*: corruption
+  introduced before ``save`` rewrote the zip (bad DMA, a buggy transform,
+  bitrot on a re-packed copy) passes it — the manifest checksum is the
+  end-to-end one. A mismatch raises :class:`ChecksumError`, which callers
+  like ``index.segment.load_segment`` turn into generation fallback.
+  Checkpoints written before this field simply skip the check.
 """
 
 from __future__ import annotations
@@ -24,13 +33,32 @@ from __future__ import annotations
 import json
 import os
 import shutil
-from typing import Any, Optional
+import zlib
+from typing import Any, Callable, Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.dist import retry as _retry
+
 _STEP_PREFIX = "step_"
+
+
+class ChecksumError(ValueError):
+    """An array's bytes don't match the CRC32 its manifest recorded."""
+
+
+# Chaos seam (DESIGN.md §13): drills install a hook that may raise
+# TransientIOError before any step-directory read; `restore(retry=...)`
+# wraps the read, so the retry path is exercised without monkeypatching
+# the filesystem. None in production.
+_IO_FAULT_HOOK: Optional[Callable[[str], None]] = None
+
+
+def set_io_fault_hook(hook: Optional[Callable[[str], None]]) -> None:
+    global _IO_FAULT_HOOK
+    _IO_FAULT_HOOK = hook
 
 
 def _step_dir(directory: str, step: int) -> str:
@@ -54,9 +82,11 @@ def _resolve_dtype(name: str) -> np.dtype:
 def _encode(obj, arrays: list) -> Any:
     if _is_array(obj):
         a = np.asarray(obj)
-        arrays.append(np.frombuffer(a.tobytes(), np.uint8))
+        raw = a.tobytes()
+        arrays.append(np.frombuffer(raw, np.uint8))
         return {"kind": "array", "i": len(arrays) - 1,
-                "dtype": str(a.dtype), "shape": list(a.shape)}
+                "dtype": str(a.dtype), "shape": list(a.shape),
+                "crc32": zlib.crc32(raw)}
     if isinstance(obj, tuple) and hasattr(obj, "_fields"):  # NamedTuple
         return {"kind": "namedtuple", "name": type(obj).__name__,
                 "fields": {f: _encode(getattr(obj, f), arrays)
@@ -76,7 +106,17 @@ def _decode(node, arrays) -> Any:
     kind = node["kind"]
     if kind == "array":
         buf = arrays[f"a{node['i']}"]
-        a = np.frombuffer(buf.tobytes(), _resolve_dtype(node["dtype"]))
+        raw = buf.tobytes()
+        want = node.get("crc32")   # absent in pre-§13 checkpoints
+        if want is not None:
+            got = zlib.crc32(raw)
+            if got != want:
+                raise ChecksumError(
+                    f"checkpoint array a{node['i']} "
+                    f"(dtype={node['dtype']}, shape={node['shape']}): "
+                    f"crc32 {got:#010x} != manifest {want:#010x} — "
+                    "snapshot bytes are corrupt")
+        a = np.frombuffer(raw, _resolve_dtype(node["dtype"]))
         return jnp.asarray(a.reshape(node["shape"]))
     if kind == "namedtuple":
         return {f: _decode(v, arrays) for f, v in node["fields"].items()}
@@ -164,29 +204,57 @@ def latest_step(directory: str) -> Optional[int]:
 
 
 def restore(directory: str, step: Optional[int] = None,
-            like: Optional[dict] = None) -> dict:
+            like: Optional[dict] = None,
+            retry: Optional[_retry.RetryPolicy] = None) -> dict:
     """Load a checkpoint: ``{"step": s, "<name>": tree, ...}``.
 
-    ``step=None`` loads the latest. ``like={"<name>": template}`` re-imposes
-    the template's container types (e.g. NamedTuple params / OptState) on
-    the named trees; array values always come from the checkpoint and are
-    returned as host-replicated ``jnp`` arrays, restorable under any device
-    count (re-shard with dist.sharding afterwards).
+    ``step=None`` loads the latest; no checkpoints at all raises a clear
+    ``FileNotFoundError("no checkpoints under <dir>")``, and an explicit
+    ``step`` that doesn't exist raises one naming the steps that do. Every
+    array is CRC32-verified against its manifest (:class:`ChecksumError`
+    on mismatch — deterministic corruption, never retried).
+
+    ``like={"<name>": template}`` re-imposes the template's container types
+    (e.g. NamedTuple params / OptState) on the named trees; array values
+    always come from the checkpoint and are returned as host-replicated
+    ``jnp`` arrays, restorable under any device count (re-shard with
+    dist.sharding afterwards).
+
+    ``retry`` (a :class:`repro.dist.retry.RetryPolicy`) retries TRANSIENT
+    read failures — ``TransientIOError`` (chaos-injected) and ``OSError``
+    races on live directories — with exponential backoff, seeded by the
+    step number so drills replay.
     """
+    steps = all_steps(directory)
     if step is None:
-        step = latest_step(directory)
-        if step is None:
+        if not steps:
             raise FileNotFoundError(f"no checkpoints under {directory!r}")
+        step = steps[-1]
+    elif step not in steps:
+        raise FileNotFoundError(
+            f"no checkpoint for step {step} under {directory!r} "
+            f"(available: {steps if steps else 'none'})")
     sdir = _step_dir(directory, step)
-    with open(os.path.join(sdir, "_meta.json")) as f:
-        meta = json.load(f)
-    out: dict = {"step": meta["step"]}
-    for name in meta["trees"]:
-        with open(os.path.join(sdir, f"{name}.json")) as f:
-            structure = json.load(f)
-        with np.load(os.path.join(sdir, f"{name}.npz")) as arrays:
-            decoded = _decode(structure, arrays)
-        if like is not None and name in like:
-            decoded = _restore_like(like[name], decoded)
-        out[name] = decoded
+
+    def _read() -> dict:
+        if _IO_FAULT_HOOK is not None:
+            _IO_FAULT_HOOK(sdir)
+        with open(os.path.join(sdir, "_meta.json")) as f:
+            meta = json.load(f)
+        out: dict = {"step": meta["step"]}
+        for name in meta["trees"]:
+            with open(os.path.join(sdir, f"{name}.json")) as f:
+                structure = json.load(f)
+            with np.load(os.path.join(sdir, f"{name}.npz")) as arrays:
+                decoded = _decode(structure, arrays)
+            if like is not None and name in like:
+                decoded = _restore_like(like[name], decoded)
+            out[name] = decoded
+        return out
+
+    if retry is None:
+        return _read()
+    out, _ = _retry.call_with_retry(
+        _read, policy=retry,
+        retry_on=(_retry.TransientIOError, OSError), seed=int(step))
     return out

@@ -78,7 +78,7 @@ def consolidate(engine, *, key: Optional[jax.Array] = None,
                 alpha: float = 1.2, l: int = 48,
                 ckpt_dir: Optional[str] = None,
                 keep: Optional[int] = None,
-                refresh=None) -> dict:
+                refresh=None, chaos=None) -> dict:
     """Compact ``engine`` (a :class:`repro.index.engine.StreamingEngine`)
     into a fresh base generation and swap it in.
 
@@ -93,6 +93,14 @@ def consolidate(engine, *, key: Optional[jax.Array] = None,
     global-id remap (-1 = dropped) callers need to translate ids held
     across the consolidation — plus ``refresh`` (the retrain report) when
     the refresh arm ran.
+
+    ``chaos`` is the fault-drill phase hook (``dist.fault.ChaosPlan
+    .consolidate_hook()``, DESIGN.md §13): called with ``"pre_snapshot"``
+    just before the atomic save and ``"post_snapshot"`` just after it
+    (before the in-memory swap). A hook that raises exercises the two
+    crash-consistency windows — nothing-durable-yet vs
+    snapshot-durable-but-unswapped — both of which must leave a restorable
+    generation on disk.
     """
     del key  # deterministic: candidate sets are exact, no sampling
     base, delta, tombs = engine.base, engine.delta, engine.tombstones
@@ -199,10 +207,14 @@ def consolidate(engine, *, key: Optional[jax.Array] = None,
                     medoid=jnp.asarray(medoid, jnp.int32)),
         codes=jnp.asarray(codes_new), vectors=jnp.asarray(vec_new),
         layout=base.layout, generation=base.generation + 1)
+    if chaos is not None:
+        chaos("pre_snapshot")
     if ckpt_dir:
         # snapshot carries the (possibly refreshed) quantizer: restore() is
         # self-contained even after codebooks change across generations
         save_segment(ckpt_dir, seg, keep=keep, model=model_new)
+    if chaos is not None:
+        chaos("post_snapshot")
     # swap model + segment together, strictly AFTER the snapshot — a crash
     # anywhere above leaves the previous generation serving old codebooks
     engine.model = model_new

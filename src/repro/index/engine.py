@@ -71,6 +71,19 @@ def _merge_delta(beam_ids, beam_dists, delta_codes, luts, live, *,
     return jnp.take_along_axis(all_ids, order, axis=1), -neg
 
 
+@functools.partial(jax.jit, static_argnames=("k", "n_base"))
+def _base_only_topk(beam_ids, beam_dists, *, k: int, n_base: int):
+    """Degraded merge (skip_delta): base arm only, same sentinel semantics
+    as :func:`_merge_delta` — beam sentinel slots (id ``n_base``) and any
+    non-finite candidate report id -1, so skipping the delta scan can never
+    leak a padding id or a scrubbed tombstone."""
+    bids = jnp.where(beam_ids < n_base, beam_ids, -1)
+    bdists = jnp.where(beam_ids < n_base, beam_dists, INF)
+    bids = jnp.where(jnp.isfinite(bdists), bids, -1)
+    neg, order = jax.lax.top_k(-bdists, k)
+    return jnp.take_along_axis(bids, order, axis=1), -neg
+
+
 @dataclasses.dataclass
 class StreamingEngine:
     """Mutable index serving live queries under insert/delete churn.
@@ -164,21 +177,24 @@ class StreamingEngine:
                     alpha: float = 1.2, l: int = 48,
                     ckpt_dir: Optional[str] = None,
                     keep: Optional[int] = None,
-                    refresh=None) -> dict:
+                    refresh=None, chaos=None) -> dict:
         """Fold delta + tombstones into the next base generation (see
         :func:`repro.index.consolidate.consolidate`). ``refresh`` (True or
         a :class:`repro.index.refresh.RefreshConfig`) retrains the
-        quantizer on the live graph and re-encodes the new generation."""
+        quantizer on the live graph and re-encodes the new generation.
+        ``chaos`` is the fault-drill phase hook (DESIGN.md §13)."""
         from repro.index.consolidate import consolidate
 
         return consolidate(self, key=key, alpha=alpha, l=l,
-                           ckpt_dir=ckpt_dir, keep=keep, refresh=refresh)
+                           ckpt_dir=ckpt_dir, keep=keep, refresh=refresh,
+                           chaos=chaos)
 
     @classmethod
     def restore(cls, ckpt_dir: str,
                 model: Optional[pqbase.QuantizerModel] = None, *,
                 generation: Optional[int] = None, delta_capacity: int = 1024,
-                delta_degree: int = 8) -> "StreamingEngine":
+                delta_degree: int = 8, retry=None,
+                on_fallback=None) -> "StreamingEngine":
         """Resume from the last (or a given) consolidated generation's
         atomic snapshot — delta and tombstones restart empty, exactly the
         state the snapshot froze.
@@ -189,11 +205,20 @@ class StreamingEngine:
         caller-held model is guaranteed to match the generation on disk. An
         explicit ``model`` overrides the stored one (legacy snapshots need
         it); the width/layout guard below catches the common mismatches
-        (wrong M, u8 model against an fs4 snapshot)."""
+        (wrong M, u8 model against an fs4 snapshot).
+
+        Every generation's arrays verify against the manifest CRC32s on
+        read (DESIGN.md §13); with ``generation=None`` a corrupt or
+        unreadable newest snapshot falls back generation-by-generation to
+        the newest INTACT one (``on_fallback(generation, error)`` observes
+        each skip), and ``retry`` (a :class:`repro.dist.retry.RetryPolicy`)
+        re-reads transient I/O failures before declaring a generation bad.
+        """
         from repro.index.segment import load_segment
         from repro.pq.pack import FS_K, packed_width
 
-        seg, stored = load_segment(ckpt_dir, generation, with_model=True)
+        seg, stored = load_segment(ckpt_dir, generation, with_model=True,
+                                   retry=retry, on_fallback=on_fallback)
         if model is None:
             if stored is None:
                 raise ValueError(
@@ -233,7 +258,9 @@ class StreamingEngine:
 
     def search(self, queries: jax.Array, *, k: int = 10, h: int = 32,
                max_steps: int = 512, expand: int = 1, entries: int = 1,
-               prune_eps: float = 0.0, m_prefix: int = 0) -> SearchResult:
+               prune_eps: float = 0.0, m_prefix: int = 0,
+               max_rounds=None, max_n_dist=None,
+               skip_delta: bool = False) -> SearchResult:
         """Serve a query batch over base ∪ delta minus tombstones.
 
         Guarantee: a tombstoned id is NEVER returned, at any beam width, in
@@ -244,6 +271,13 @@ class StreamingEngine:
         (dead candidates score DEAD_ENTRY_DIST — live seeds outrank them,
         an all-dead candidate set still routes), ``prune_eps>0`` gates
         full-LUT scoring behind the partial-LUT lower bound.
+
+        ``max_rounds``/``max_n_dist`` cap the base beam per call (traced —
+        no retrace across values; capped queries report ``truncated``).
+        ``skip_delta=True`` is the last degradation rung (DESIGN.md §13):
+        the bulk delta scan is skipped and queries answer base-only — fresh
+        inserts go invisible until the next consolidation, but the
+        tombstone guarantee holds unchanged.
         """
         queries = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
         luts = self.lut_fn(queries)
@@ -273,17 +307,26 @@ class StreamingEngine:
             _cached_dist_fn(self._dist_fns, self._codes_p, luts), h=h,
             max_steps=max_steps, expand=expand, tombstones=self._ts_dev,
             lb_dist_fn=lb_fn, m_prefix=mp, m_total=mt,
-            prune_eps=prune_eps if mp else 0.0, lb_scale_fn=cal_fn)
-        kk = min(k, h + self.delta.capacity)
-        ids, dists = _merge_delta(
-            res.ids, res.dists, self._delta_codes_dev, luts,
-            self._live_dev, k=kk, n_base=self.base.n)
+            prune_eps=prune_eps if mp else 0.0, lb_scale_fn=cal_fn,
+            max_rounds=max_rounds, max_n_dist=max_n_dist)
+        if skip_delta:
+            kk = min(k, h)
+            ids, dists = _base_only_topk(res.ids, res.dists, k=kk,
+                                         n_base=self.base.n)
+            delta_cost = 0
+        else:
+            kk = min(k, h + self.delta.capacity)
+            ids, dists = _merge_delta(
+                res.ids, res.dists, self._delta_codes_dev, luts,
+                self._live_dev, k=kk, n_base=self.base.n)
+            delta_cost = self.delta.count
         # count only OCCUPIED delta slots as distance work: the fixed-shape
         # bulk scan touches every slot, but the unoccupied tail is
         # sentinel-masked padding, not scored candidates (same accounting
         # as the beam's sentinel lanes); the seed probe's candidates count
-        n_dist = res.n_dist + jnp.int32(self.delta.count + seed_cost)
-        return SearchResult(ids, dists, res.hops, n_dist, res.rounds)
+        n_dist = res.n_dist + jnp.int32(delta_cost + seed_cost)
+        return SearchResult(ids, dists, res.hops, n_dist, res.rounds,
+                            truncated=res.truncated)
 
     # -- accounting --------------------------------------------------------
 

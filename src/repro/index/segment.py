@@ -14,6 +14,7 @@ with a bumped generation, snapshotted atomically via
 from __future__ import annotations
 
 import dataclasses
+import zipfile
 from typing import Optional
 
 import numpy as np
@@ -187,14 +188,9 @@ def save_segment(directory: str, seg: BaseSegment,
     return ckpt.save(directory, seg.generation, keep=keep, index=index)
 
 
-def load_segment(directory: str, generation: Optional[int] = None, *,
-                 with_model: bool = False):
-    """Restore the latest (or a specific) consolidated generation.
-
-    ``with_model=True`` returns ``(segment, model_or_None)`` — the model is
-    ``None`` for pre-refresh (codebook-less) snapshots, which still load;
-    the caller decides whether an explicit model can stand in."""
-    state = ckpt.restore(directory, step=generation)
+def _load_one(directory: str, generation: Optional[int],
+              with_model: bool, retry):
+    state = ckpt.restore(directory, step=generation, retry=retry)
     t = state["index"]
     graph = Graph(neighbors=jnp.asarray(t["neighbors"], jnp.int32),
                   medoid=jnp.asarray(t["medoid"], jnp.int32))
@@ -210,3 +206,43 @@ def load_segment(directory: str, generation: Optional[int] = None, *,
         codebooks=jnp.asarray(q["codebooks"], jnp.float32))
         if q is not None else None)
     return seg, model
+
+
+def load_segment(directory: str, generation: Optional[int] = None, *,
+                 with_model: bool = False, retry=None,
+                 on_fallback=None):
+    """Restore the newest INTACT (or a specific) consolidated generation.
+
+    Every snapshot read is CRC32-verified (dist/checkpoint.py, DESIGN.md
+    §13). With ``generation=None`` a snapshot that fails verification — or
+    is otherwise unreadable (truncated zip, missing tree, malformed
+    manifest) — does NOT poison the restore: the loader falls back
+    generation-by-generation to the newest intact one, calling
+    ``on_fallback(generation, error)`` per rejected snapshot, and raises a
+    clear ``RuntimeError`` naming every failure only when none survives.
+    An EXPLICIT ``generation`` never falls back — you asked for that one.
+
+    ``retry`` (a ``dist.retry.RetryPolicy``) retries transient read faults
+    per generation before giving up on it. ``with_model=True`` returns
+    ``(segment, model_or_None)`` — the model is ``None`` for pre-refresh
+    (codebook-less) snapshots, which still load; the caller decides whether
+    an explicit model can stand in."""
+    if generation is not None:
+        return _load_one(directory, generation, with_model, retry)
+    steps = ckpt.all_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {directory!r}")
+    failures = []
+    for gen in reversed(steps):
+        try:
+            return _load_one(directory, gen, with_model, retry)
+        except (ckpt.ChecksumError, OSError, KeyError, ValueError,
+                zipfile.BadZipFile) as e:
+            failures.append((gen, e))
+            if on_fallback is not None:
+                on_fallback(gen, e)
+    detail = "; ".join(f"gen {g}: {type(e).__name__}: {e}"
+                       for g, e in failures)
+    raise RuntimeError(
+        f"no intact snapshot under {directory!r} — every generation failed "
+        f"verification or read: {detail}")

@@ -492,7 +492,7 @@ def _rpq_cell(arch_id: str, shape, mesh) -> Cell:
         fs4 = shape.name.endswith("_fs4")
 
         def fn(neighbors, medoids, codes, luts):
-            gids, dists, hops, ndist, rounds = se.sharded_graph_topk(
+            gids, dists, hops, ndist, rounds, _trunc = se.sharded_graph_topk(
                 mesh, all_axes, neighbors, medoids, codes, luts, k=kk,
                 h=hh, max_steps=4 * hh, expand=ee)
             ids, ds = se.merge_shard_topk(gids, dists, kk)

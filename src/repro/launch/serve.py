@@ -63,6 +63,7 @@ import argparse
 import os
 import sys
 import time
+from typing import Optional
 
 import numpy as np
 import jax
@@ -73,11 +74,14 @@ from repro.core.quantizer import RPQParams
 from repro.core.trainer import to_model
 from repro.data import load_dataset
 from repro.dist import checkpoint as ckpt
+from repro.dist.fault import ChaosPlan, InjectedFailure
+from repro.dist.retry import RetryPolicy
 from repro.graphs.knn import knn_ids
 from repro.graphs.partition import PartitionedGraph, build_partitioned_vamana
 from repro.launch.train import build_or_load_graph
 from repro.pq import base as pqbase
 from repro.pq import pack
+from repro.search.degrade import DegradationPolicy
 from repro.search.engine import (HybridEngine, InMemoryEngine, ShardedEngine,
                                  ShardedGraphEngine)
 from repro.search.metrics import live_ground_truth, measure_qps, recall_at_k
@@ -101,7 +105,26 @@ def build_or_load_partitioned_graph(key, x, cache_path: str, n_shards: int,
     return pg
 
 
-def run_streaming(args, model, ds) -> None:
+def calibrate_max_rounds(engine, queries, deadline_s: float, **kw) -> int:
+    """Turn a wall-clock deadline into a per-call round budget: run one
+    warmup batch (absorbs compile), time a steady-state batch, divide the
+    observed per-round latency into the deadline (DESIGN.md §13). The
+    budget is a TRACED argument downstream, so re-calibrating under drift
+    never recompiles."""
+    res = engine.search(queries, **kw)
+    jax.block_until_ready(res.dists)
+    t0 = time.perf_counter()
+    res = engine.search(queries, **kw)
+    jax.block_until_ready(res.dists)
+    elapsed = time.perf_counter() - t0
+    rounds = 1.0
+    if res.rounds is not None:
+        rounds = max(float(np.asarray(res.rounds).max()), 1.0)
+    per_round = elapsed / rounds
+    return max(1, int(deadline_s / per_round))
+
+
+def run_streaming(args, model, ds, plan: Optional[ChaosPlan] = None) -> None:
     """The churn loop: hold out the dataset tail as an insert stream, then
     interleave insert / delete / query batches through a StreamingEngine
     and consolidate at the end (DESIGN.md §10)."""
@@ -133,23 +156,37 @@ def run_streaming(args, model, ds) -> None:
     live = np.zeros(n0 + cap, bool)
     live[:n0] = True
 
+    policy = DegradationPolicy()
+    budget = {"max_rounds": None}
+
     def evaluate(tag: str) -> None:
+        if args.deadline_ms and budget["max_rounds"] is None:
+            budget["max_rounds"] = calibrate_max_rounds(
+                engine, ds.queries, args.deadline_ms / 1e3, k=args.k,
+                h=args.h)
+            print(f"[serve] deadline {args.deadline_ms}ms → "
+                  f"max_rounds={budget['max_rounds']}")
+        skw = policy.apply(engine, args.degrade_level, h=args.h,
+                           expand=args.expand, entries=args.entries,
+                           prune_eps=args.prune_eps,
+                           max_rounds=budget["max_rounds"])
         gt_g = live_ground_truth(all_x, np.flatnonzero(live), ds.queries,
                                  args.k)
         qps, res = measure_qps(
-            lambda q: engine.search(q, k=args.k, h=args.h,
-                                    expand=args.expand, entries=args.entries,
-                                    prune_eps=args.prune_eps), ds.queries)
+            lambda q: engine.search(q, k=args.k, **skw), ds.queries)
+        trunc = (f" truncated={float(np.asarray(res.truncated).mean()):.2f}"
+                 if res.truncated is not None else "")
         print(f"[serve] streaming/{tag}: recall@{args.k}="
               f"{recall_at_k(res.ids, gt_g, args.k):.4f} qps={qps:.1f} "
               f"live={engine.n_live} gen={engine.generation} "
-              f"resident={engine.memory_bytes()/1e6:.1f}MB")
+              f"resident={engine.memory_bytes()/1e6:.1f}MB{trunc}")
 
-    def consolidate_now(refresh) -> dict:
+    snap_dir = f"{args.ckpt_dir}/streaming_index"
+
+    def consolidate_now(refresh, chaos=None) -> dict:
         nonlocal live, all_x
-        stats = engine.consolidate(
-            ckpt_dir=f"{args.ckpt_dir}/streaming_index", keep=3,
-            refresh=refresh)
+        stats = engine.consolidate(ckpt_dir=snap_dir, keep=3,
+                                   refresh=refresh, chaos=chaos)
         # consolidation renumbers: translate the live-corpus bookkeeping
         old_live = np.flatnonzero(live)
         live = np.zeros(stats["n"] + cap, bool)
@@ -166,7 +203,7 @@ def run_streaming(args, model, ds) -> None:
         print(f"[serve] consolidated → generation {stats['generation']}: "
               f"{stats['n']} rows ({stats['dropped']} dropped, "
               f"{stats['folded']} folded in){extra}, snapshot at "
-              f"{args.ckpt_dir}/streaming_index")
+              f"{snap_dir}")
         return stats
 
     rounds = max(args.churn_rounds, 1)
@@ -191,6 +228,41 @@ def run_streaming(args, model, ds) -> None:
                 and i + 1 < rounds):
             consolidate_now(refresh=True)
             evaluate(f"refreshed{i}")
+    if plan is not None and plan.crash_phase is not None:
+        # chaos drill (DESIGN.md §13): crash mid-consolidation, then prove
+        # a restart lands on an intact generation — with the newest
+        # snapshot corrupted on top when the plan says so. The drill must
+        # demonstrate FALLBACK, not data loss: establish a durable intact
+        # generation first (two when corruption will also eat the newest
+        # one — a pre_snapshot crash writes nothing, so the corruptor
+        # would otherwise hit the only snapshot on disk).
+        consolidate_now(refresh=False)
+        if plan.corrupt_latest_snapshot:
+            consolidate_now(refresh=False)
+        try:
+            consolidate_now(refresh=bool(args.refresh_every),
+                            chaos=plan.consolidate_hook())
+        except InjectedFailure as e:
+            print(f"[serve] chaos: injected crash during consolidation "
+                  f"({e}); restarting from {snap_dir}")
+        if plan.corrupt_latest_snapshot:
+            from repro.dist.fault import corrupt_snapshot
+            step = corrupt_snapshot(snap_dir, seed=plan.seed)
+            print(f"[serve] chaos: corrupted snapshot generation {step}")
+        engine = StreamingEngine.restore(
+            snap_dir, delta_capacity=cap, retry=RetryPolicy(),
+            on_fallback=lambda g, e: print(
+                f"[serve] chaos: generation {g} failed verification "
+                f"({type(e).__name__}) — falling back"))
+        live = np.zeros(engine.base.n + cap, bool)
+        live[:engine.base.n] = True
+        all_x = np.concatenate([np.asarray(engine.base.vectors),
+                                np.zeros((cap, base_x.shape[1]),
+                                         np.float32)])
+        print(f"[serve] chaos: restored generation {engine.generation} "
+              f"({engine.n_live} live rows)")
+        evaluate("restored")
+        return
     consolidate_now(refresh=bool(args.refresh_every))
     evaluate("consolidated")
 
@@ -242,11 +314,42 @@ def main():
                     "generation re-encodes against it; the final "
                     "consolidation refreshes too. 0 = codebooks stay "
                     "frozen across generations (the pre-refresh behavior)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-batch serving deadline (DESIGN.md §13): a "
+                    "warmup batch calibrates the per-round latency and the "
+                    "beam gets the max_rounds budget that fits — capped "
+                    "queries return best-so-far with truncated flags set. "
+                    "0 = no deadline. For sharded-graph it also sets the "
+                    "straggler deadline of the quorum merge")
+    ap.add_argument("--degrade-level", type=int, default=0,
+                    help="degradation ladder rung (DESIGN.md §13, "
+                    "search/degrade.py): 0 = full config, each level sheds "
+                    "the next recall-for-compute knob (L1 expand, L2 "
+                    "entries, L3 aggressive prune, L4 rerank, L5 delta "
+                    "scan)")
+    ap.add_argument("--chaos", default="",
+                    help="fault-injection plan (DESIGN.md §13), e.g. "
+                    "'dead=1,straggler=2,straggler_ms=50,io=0.05,corrupt,"
+                    "crash=consolidate,seed=7': kill shards, slow shards, "
+                    "inject transient I/O faults, corrupt the newest "
+                    "snapshot, crash mid-consolidation — serving must "
+                    "degrade, never throw")
     ap.add_argument("--port-stdin", action="store_true",
                     help="read whitespace-separated query vectors on stdin")
     args = ap.parse_args()
 
-    state = ckpt.restore(args.ckpt_dir)
+    plan = ChaosPlan.parse(args.chaos) if args.chaos else None
+    retry = None
+    if plan is not None and plan.io_fault_p > 0:
+        # every checkpoint read in this process now fails transiently with
+        # probability io_fault_p — and retries through the backoff policy
+        ckpt.set_io_fault_hook(plan.io_fault())
+        retry = RetryPolicy()
+        print(f"[serve] chaos: transient I/O fault p={plan.io_fault_p} "
+              f"injected on checkpoint reads (retry up to "
+              f"{retry.max_attempts} attempts)")
+
+    state = ckpt.restore(args.ckpt_dir, retry=retry)
     extra = state.get("extra") or {}
     ds = load_dataset(extra.get("dataset", args.dataset))
     m, k = extra.get("m", 8), extra.get("k", 64)
@@ -269,7 +372,7 @@ def main():
             raise SystemExit(
                 "--port-stdin is not available with --scenario streaming: "
                 "the scenario runs a fixed churn loop, not a query port")
-        run_streaming(args, model, ds)
+        run_streaming(args, model, ds, plan)
         return
 
     codes = pqbase.encode(model, ds.base)
@@ -326,17 +429,41 @@ def main():
                   f"({dt:.1f} ms, {int(res.hops[0])} hops)")
         return
 
+    policy = DegradationPolicy()
+    skw = policy.apply(engine, args.degrade_level, h=args.h,
+                       expand=args.expand, entries=args.entries,
+                       prune_eps=args.prune_eps)
+    if args.deadline_ms and not isinstance(engine, ShardedEngine):
+        # the graph-free exhaustive scan has no rounds to budget; its
+        # deadline story is the quorum merge below
+        mr = calibrate_max_rounds(engine, ds.queries,
+                                  args.deadline_ms / 1e3, k=args.k, **skw)
+        skw["max_rounds"] = mr
+        print(f"[serve] deadline {args.deadline_ms}ms → max_rounds={mr}")
+    if plan is not None and hasattr(engine, "n_shards"):
+        skw["alive"] = list(plan.alive(engine.n_shards))
+        dead = engine.n_shards - sum(skw["alive"])
+        msg = f"[serve] chaos: {dead}/{engine.n_shards} shard(s) dead"
+        if isinstance(engine, ShardedGraphEngine):
+            skw["shard_latency_s"] = list(plan.latencies(engine.n_shards))
+            if args.deadline_ms:
+                skw["deadline_s"] = args.deadline_ms / 1e3
+                msg += (f", stragglers {list(plan.straggler_shards)} at "
+                        f"{plan.straggler_latency_s*1e3:.0f}ms vs "
+                        f"{args.deadline_ms}ms deadline quorum")
+        print(msg)
+
     gt, _ = knn_ids(ds.base, ds.queries, args.k)
-    qps, res = measure_qps(lambda q: engine.search(q, k=args.k, h=args.h,
-                                                   expand=args.expand,
-                                                   entries=args.entries,
-                                                   prune_eps=args.prune_eps),
+    qps, res = measure_qps(lambda q: engine.search(q, k=args.k, **skw),
                            ds.queries)
     rounds = (f"rounds={float(res.rounds.mean()):.1f} "
               if res.rounds is not None else "")
+    trunc = (f"truncated={float(np.asarray(res.truncated).mean()):.2f} "
+             if res.truncated is not None else "")
+    degr = "DEGRADED " if res.degraded else ""
     print(f"[serve] {args.scenario}: recall@{args.k}="
           f"{recall_at_k(res.ids, gt, args.k):.4f} qps={qps:.1f} "
-          f"hops={float(res.hops.mean()):.1f} {rounds}"
+          f"hops={float(res.hops.mean()):.1f} {rounds}{trunc}{degr}"
           f"resident={engine.memory_bytes()/1e6:.1f}MB")
 
 

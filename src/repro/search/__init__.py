@@ -13,6 +13,9 @@ Public surface:
 * :mod:`repro.search.engine`  — ``InMemoryEngine`` / ``HybridEngine`` /
   ``ShardedEngine`` / ``ShardedGraphEngine`` plus the shard_map scatter
   bodies they (and launch/cells.py) compile.
+* :mod:`repro.search.degrade` — the deadline-aware degradation ladder
+  (DESIGN.md §13): numbered recall-for-compute rungs over the adaptive
+  routing knobs, rerank and delta scan.
 * :mod:`repro.search.metrics` — recall@k and QPS measurement.
 """
 from repro.search.beam import (  # noqa: F401
@@ -24,6 +27,9 @@ from repro.search.seed import (  # noqa: F401
 )
 from repro.search.engine import (  # noqa: F401
     HybridEngine, InMemoryEngine, ShardedEngine, ShardedGraphEngine,
+)
+from repro.search.degrade import (  # noqa: F401
+    DegradationPolicy, recommend_level,
 )
 from repro.search.metrics import (  # noqa: F401
     live_ground_truth, measure_qps, recall_at_k,

@@ -64,6 +64,20 @@ disables the pass entirely (bit-identical).
 ``n_dist`` then counts full-LUT-equivalents: each partial score adds
 ``m_prefix / m_total`` of a distance evaluation, each full score adds one.
 
+**Deadline budgets** (resilience, DESIGN.md §13): ``max_rounds`` /
+``max_n_dist`` bound the per-call compute — rounds and (full-LUT-equivalent)
+distance evaluations respectively. Both are TRACED scalars, so sweeping a
+deadline never retraces, and both gate only the ``while_loop`` *condition*:
+under ``vmap``, JAX's while_loop batching masks the whole carry for any lane
+whose own cond is false, so an exhausted query freezes — best-so-far beam,
+honest counters — while other lanes keep stepping, with zero body-side
+masking. The early exit is fixed-shape (the beam arrays never change size);
+``SearchResult.truncated`` flags every query that stopped with unexpanded
+finite candidates still pending — whether the round budget, the n_dist
+budget, or ``max_steps`` cut it off. ``None`` (the default) compiles the
+check out entirely: bit-identical to the pre-budget beam, the same
+zero-cost-when-off contract as ``expand=1`` and ``prune_eps=0``.
+
 `beam_search_trace` additionally records the ranked candidate beam at every
 round — exactly the paper's Definition 6 routing features.
 """
@@ -95,6 +109,16 @@ class SearchResult(NamedTuple):
     # expand=1, rounds == hops. None for results that never ran a beam
     # (hand-built tuples, pure-scan engines).
     rounds: Optional[jax.Array] = None
+    # (Q,) bool — True where the search stopped with unexpanded finite
+    # candidates still pending (a deadline budget or max_steps cut it off):
+    # the beam is an honest best-so-far, not a converged answer. None for
+    # results that never ran a beam.
+    truncated: Optional[jax.Array] = None
+    # Host-side python bool set by the sharded engines: True when the
+    # answer is known incomplete at the SERVING layer (dead shards dropped
+    # from the merge, stragglers charged dead by the quorum deadline).
+    # None for single-process engines and raw beam results.
+    degraded: Optional[bool] = None
 
 
 class Trace(NamedTuple):
@@ -167,10 +191,13 @@ def _single_query(neighbors: jax.Array, entries: jax.Array, qdata,
                   lb_dist_fn: Optional[Callable] = None,
                   m_prefix: int = 0, m_total: int = 0,
                   prune_eps: float = 0.0,
-                  lb_scale_fn: Optional[Callable] = None):
+                  lb_scale_fn: Optional[Callable] = None,
+                  max_rounds: Optional[jax.Array] = None,
+                  max_n_dist: Optional[jax.Array] = None):
     """Search for ONE query; built to be vmapped. ``entries`` is the (S,)
     per-query entry set (S=1 ≡ the classic single-entry beam, bit-identical).
-    Returns result (+trace)."""
+    ``max_rounds`` / ``max_n_dist`` are TRACED deadline budgets gating only
+    the loop condition (see module docstring). Returns result (+trace)."""
     n = neighbors.shape[0]
     r = neighbors.shape[1]
     e = max(1, min(expand, h))
@@ -241,7 +268,23 @@ def _single_query(neighbors: jax.Array, entries: jax.Array, qdata,
 
     def cond(state):
         step, ids, dists, exp, visited, hops, ndist, tbi, tbd, tbv = state
-        return jnp.logical_and(step < max_steps, jnp.any(~exp & (dists < INF)))
+        live = jnp.logical_and(step < max_steps,
+                               jnp.any(~exp & (dists < INF)))
+        # deadline budgets (None compiles out — bit-identical): checked
+        # before each round, so rounds never exceeds max_rounds and n_dist
+        # overshoots its cap by at most one round's frontier. Under vmap
+        # the while_loop batching rule freezes the whole carry of a lane
+        # whose cond is false, so an exhausted query keeps its best-so-far
+        # beam while the rest of the batch keeps stepping.
+        if max_rounds is not None:
+            live = jnp.logical_and(live, step < max_rounds)
+        if max_n_dist is not None:
+            # loop-internal ndist is in SUBSPACE units when pruning is on
+            # (converted back after the loop); scale the cap to match
+            cap = jnp.int32(max_n_dist) * (jnp.int32(m_total) if prune
+                                           else jnp.int32(1))
+            live = jnp.logical_and(live, ndist < cap)
+        return live
 
     def body(state):
         step, ids, dists, exp, visited, hops, ndist, tbi, tbd, tbv = state
@@ -335,13 +378,18 @@ def _single_query(neighbors: jax.Array, entries: jax.Array, qdata,
         # subspace units → full-LUT-equivalents (ceil: a lone partial score
         # still counts as work done)
         ndist = (ndist + jnp.int32(m_total - 1)) // jnp.int32(m_total)
+    # honest truncation flag: unexpanded finite candidates still pending
+    # means SOMETHING stopped us short of convergence (budget or max_steps)
+    # — the beam is best-so-far, not the converged answer. Computed before
+    # the tombstone scrub: the pending frontier, not the scrub, decides it.
+    truncated = jnp.any(~exp & (dists < INF))
     if tombstones is not None:
         # scrub: a tombstoned id (incl. a dead entry at DEAD_ENTRY_DIST)
         # NEVER appears in the returned beam, at any width
         dead = is_dead(ids)
         ids = jnp.where(dead, n, ids)
         dists = jnp.where(dead, INF, dists)
-    res = (ids, dists, hops, ndist, step)
+    res = (ids, dists, hops, ndist, step, truncated)
     return res + ((tbi, tbd, tbv) if do_trace else ())
 
 
@@ -368,7 +416,8 @@ def beam_search(neighbors: jax.Array, entry: jax.Array, qdatas,
                 lb_dist_fn: Optional[Callable] = None,
                 m_prefix: int = 0, m_total: int = 0,
                 prune_eps: float = 0.0,
-                lb_scale_fn: Optional[Callable] = None) -> SearchResult:
+                lb_scale_fn: Optional[Callable] = None,
+                max_rounds=None, max_n_dist=None) -> SearchResult:
     """Batched beam search.
 
     Args:
@@ -408,6 +457,15 @@ def beam_search(neighbors: jax.Array, entry: jax.Array, qdatas,
                  (``make_lb_scale_fn``): qdata -> scalar cal ≥ 1. Default
                  None uses the uniform mass ratio cal = M/m′, which
                  over-prunes on anisotropic data (DESIGN.md §11).
+      max_rounds / max_n_dist: per-call deadline budgets (DESIGN.md §13) —
+                 a round cap and a distance-evaluation cap (full-LUT
+                 equivalents; under hop pruning the n_dist overshoot is at
+                 most one round's frontier). TRACED scalars shared across
+                 the batch: sweeping a deadline never retraces, and the
+                 early exit is fixed-shape. An exhausted query returns its
+                 best-so-far beam with ``truncated=True``; ``None``
+                 (default) compiles the check out — bit-identical to the
+                 unbudgeted beam.
     """
     nq = jax.tree.leaves(qdatas)[0].shape[0]
     entries = _normalize_entries(entry, nq)
@@ -416,9 +474,11 @@ def beam_search(neighbors: jax.Array, entry: jax.Array, qdatas,
                                      lb_dist_fn=lb_dist_fn,
                                      m_prefix=m_prefix, m_total=m_total,
                                      prune_eps=prune_eps,
-                                     lb_scale_fn=lb_scale_fn)
-    ids, dists, hops, ndist, rounds = jax.vmap(fn)(entries, qdatas)
-    return SearchResult(ids, dists, hops, ndist, rounds)
+                                     lb_scale_fn=lb_scale_fn,
+                                     max_rounds=max_rounds,
+                                     max_n_dist=max_n_dist)
+    ids, dists, hops, ndist, rounds, truncated = jax.vmap(fn)(entries, qdatas)
+    return SearchResult(ids, dists, hops, ndist, rounds, truncated)
 
 
 @functools.partial(jax.jit, static_argnames=("dist_fn", "h", "max_steps",
@@ -433,7 +493,8 @@ def beam_search_trace(neighbors: jax.Array, entry: jax.Array, qdatas,
                       lb_dist_fn: Optional[Callable] = None,
                       m_prefix: int = 0, m_total: int = 0,
                       prune_eps: float = 0.0,
-                      lb_scale_fn: Optional[Callable] = None) -> Trace:
+                      lb_scale_fn: Optional[Callable] = None,
+                      max_rounds=None, max_n_dist=None) -> Trace:
     """Beam search that also records the ranked beam at every round.
 
     ``hop_valid[q, t]`` flags ROUNDS (while_loop trips): with expand=E one
@@ -448,10 +509,13 @@ def beam_search_trace(neighbors: jax.Array, entry: jax.Array, qdatas,
                                      lb_dist_fn=lb_dist_fn,
                                      m_prefix=m_prefix, m_total=m_total,
                                      prune_eps=prune_eps,
-                                     lb_scale_fn=lb_scale_fn)
-    ids, dists, hops, ndist, rounds, tbi, tbd, tbv = \
+                                     lb_scale_fn=lb_scale_fn,
+                                     max_rounds=max_rounds,
+                                     max_n_dist=max_n_dist)
+    ids, dists, hops, ndist, rounds, truncated, tbi, tbd, tbv = \
         jax.vmap(fn)(entries, qdatas)
-    return Trace(tbi, tbd, tbv, SearchResult(ids, dists, hops, ndist, rounds))
+    return Trace(tbi, tbd, tbv,
+                 SearchResult(ids, dists, hops, ndist, rounds, truncated))
 
 
 # --------------------------------------------------------------------------

@@ -58,7 +58,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro._compat import shard_map
 from repro.dist import sharding as shd
-from repro.dist.fault import partial_merge
+from repro.dist.fault import partial_merge, resolve_quorum
 from repro.graphs.adjacency import Graph
 from repro.graphs.partition import PartitionedGraph
 from repro.kernels import ops as kops
@@ -167,7 +167,11 @@ class InMemoryEngine:
 
     def search(self, queries: jax.Array, *, k: int = 10, h: int = 32,
                max_steps: int = 512, expand: int = 1, entries: int = 1,
-               prune_eps: float = 0.0, m_prefix: int = 0) -> SearchResult:
+               prune_eps: float = 0.0, m_prefix: int = 0,
+               max_rounds=None, max_n_dist=None) -> SearchResult:
+        """``max_rounds``/``max_n_dist`` are per-call deadline budgets
+        (DESIGN.md §13): traced round / distance-evaluation caps; an
+        exhausted query returns best-so-far with ``truncated=True``."""
         luts = self.lut_fn(queries)
         dist_fn = _cached_dist_fn(self._dist_fns, self._codes_p, luts)
         mp, mt = _prune_cfg(luts, prune_eps, m_prefix)
@@ -187,9 +191,11 @@ class InMemoryEngine:
                                expand=expand, lb_dist_fn=lb_fn,
                                m_prefix=mp, m_total=mt,
                                prune_eps=prune_eps if mp else 0.0,
-                               lb_scale_fn=cal_fn)
+                               lb_scale_fn=cal_fn,
+                               max_rounds=max_rounds, max_n_dist=max_n_dist)
         return SearchResult(res.ids[:, :k], res.dists[:, :k], res.hops,
-                            res.n_dist + seed_cost, res.rounds)
+                            res.n_dist + seed_cost, res.rounds,
+                            res.truncated)
 
     def memory_bytes(self) -> int:
         return (self.codes.size * self.codes.dtype.itemsize
@@ -224,9 +230,16 @@ class HybridEngine:
     def search(self, queries: jax.Array, *, k: int = 10, h: int = 32,
                max_steps: int = 512, rerank: int = 0, expand: int = 1,
                entries: int = 1, prune_eps: float = 0.0,
-               m_prefix: int = 0) -> SearchResult:
-        """rerank = how many beam candidates to re-rank exactly (0 → h)."""
-        rerank = rerank or h
+               m_prefix: int = 0, max_rounds=None,
+               max_n_dist=None) -> SearchResult:
+        """rerank = how many beam candidates to re-rank exactly (0 → h;
+        NEGATIVE skips the exact rerank entirely and answers from ADC
+        distances — degradation-ladder level 4, DESIGN.md §13, saving the
+        rerank's "SSD" vector reads under a tight deadline).
+        ``max_rounds``/``max_n_dist``: traced per-call deadline budgets;
+        exhausted queries return best-so-far with ``truncated=True``."""
+        skip_rerank = rerank < 0
+        rerank = h if rerank <= 0 else rerank
         k = min(k, rerank)  # cannot return more results than candidates
         luts = self.lut_fn(queries)
         dist_fn = _cached_dist_fn(self._dist_fns, self._codes_p, luts)
@@ -247,13 +260,19 @@ class HybridEngine:
                                expand=expand, lb_dist_fn=lb_fn,
                                m_prefix=mp, m_total=mt,
                                prune_eps=prune_eps if mp else 0.0,
-                               lb_scale_fn=cal_fn)
-        ids, dists = _exact_rerank(self._vec_p, queries, res.ids, rerank, k)
+                               lb_scale_fn=cal_fn,
+                               max_rounds=max_rounds, max_n_dist=max_n_dist)
+        if skip_rerank:
+            ids, dists = res.ids[:, :k], res.dists[:, :k]
+        else:
+            ids, dists = _exact_rerank(self._vec_p, queries, res.ids,
+                                       rerank, k)
         return SearchResult(ids, dists, res.hops, res.n_dist + seed_cost,
-                            res.rounds)
+                            res.rounds, res.truncated)
 
     def io_time(self, res: SearchResult, *, expand: int = 1,
-                entries: int = 1) -> jax.Array:
+                entries: int = 1, io_fault_p: float = 0.0,
+                retry=None) -> jax.Array:
         """Modeled SSD time per query: one 4 KiB block read per expansion,
         but with frontier batching (``expand=E``) the ≤E reads of a round
         are issued CONCURRENTLY — DiskANN's beam-width IO batching — so the
@@ -264,14 +283,27 @@ class HybridEngine:
         Multi-entry seeding (``entries>1``) charges ONE extra batched read:
         the bucket-probe candidates are contiguous small rows fetched in a
         single IO burst (the same batching model as a round's ≤E
-        concurrent block reads), not a read per entry."""
+        concurrent block reads), not a read per entry.
+
+        ``io_fault_p``/``retry`` extend the model with transient-fault
+        recovery (DESIGN.md §13): each round's batched read independently
+        fails with probability ``io_fault_p`` per attempt and is retried
+        under ``retry`` (a ``dist.retry.RetryPolicy``) — the per-read cost
+        becomes the closed-form expected time over attempts + nominal
+        backoff sleeps (``dist.retry.expected_retry_time_s``), so the
+        resilience bench's retry-overhead rows are deterministic."""
         if res.rounds is not None:
             rounds = res.rounds.astype(jnp.float32)
         else:
             rounds = jnp.ceil(res.hops.astype(jnp.float32) / expand)
         if entries > 1:
             rounds = rounds + jnp.float32(1.0)
-        return rounds * self.io_latency_s
+        per_read = self.io_latency_s
+        if io_fault_p > 0.0 and retry is not None:
+            from repro.dist.retry import expected_retry_time_s
+            per_read = expected_retry_time_s(retry, self.io_latency_s,
+                                             io_fault_p)
+        return rounds * jnp.float32(per_read)
 
     def memory_bytes(self) -> int:
         # resident = codes (+ codebook, negligible); graph+vectors on SSD
@@ -446,7 +478,7 @@ class ShardedEngine:
         gids, dists = np.asarray(gids), np.asarray(dists)
         if alive is None:
             alive = [True] * self.n_shards
-        ids, ds = partial_merge(list(gids), list(dists), alive, k)
+        merged = partial_merge(list(gids), list(dists), alive, k)
         q = queries.shape[0]
         # n_dist counts REAL rows scanned: each alive shard scanned its
         # slice of the n corpus rows — the divisibility-padding rows it
@@ -454,10 +486,12 @@ class ShardedEngine:
         scanned = sum(
             max(0, min(self.n - i * n_local, n_local))
             for i, a in enumerate(alive) if a)
-        return SearchResult(jnp.asarray(ids), jnp.asarray(ds),
+        return SearchResult(jnp.asarray(merged.ids), jnp.asarray(merged.dists),
                             hops=jnp.zeros((q,), jnp.int32),
                             n_dist=jnp.full((q,), scanned, jnp.int32),
-                            rounds=jnp.zeros((q,), jnp.int32))
+                            rounds=jnp.zeros((q,), jnp.int32),
+                            truncated=jnp.zeros((q,), bool),
+                            degraded=merged.degraded)
 
     def memory_bytes(self) -> int:
         # UNPADDED sizes: what the index costs, not the divisibility slack
@@ -480,7 +514,7 @@ def _shard_codes_pad(codes_l: jax.Array) -> jax.Array:
 def _local_beam(neighbors_l, medoid_l, codes_l, luts, *, h: int,
                 max_steps: int, backend: str, expand: int,
                 seed_l=None, seed_cfg=None, prune_eps: float = 0.0,
-                m_prefix: int = 0):
+                m_prefix: int = 0, max_rounds=None, max_n_dist=None):
     """Route over THIS shard's subgraph with ADC distances (u8 or fs4-
     packed layout, decided by the lut type). Returns the raw per-shard
     beam result (local ids).
@@ -513,10 +547,24 @@ def _local_beam(neighbors_l, medoid_l, codes_l, luts, *, h: int,
                            h=h, max_steps=max_steps, expand=expand,
                            lb_dist_fn=lb_fn, m_prefix=mp, m_total=mt,
                            prune_eps=prune_eps if mp else 0.0,
-                           lb_scale_fn=cal_fn)
+                           lb_scale_fn=cal_fn,
+                           max_rounds=max_rounds, max_n_dist=max_n_dist)
     if seed_cost:
         res = res._replace(n_dist=res.n_dist + jnp.int32(seed_cost))
     return res
+
+
+def _split_budget(rest: tuple, budget_cfg: tuple):
+    """Peel the trailing traced budget scalars off a shard_map body's
+    ``*rest`` (appended after the regular inputs by the wrappers below;
+    ``budget_cfg`` = (has_max_rounds, has_max_n_dist) statics)."""
+    nb = sum(bool(b) for b in budget_cfg)
+    if not nb:
+        return rest, None, None
+    rest, tail = rest[:-nb], list(rest[-nb:])
+    mr = tail.pop(0) if budget_cfg[0] else None
+    mnd = tail.pop(0) if budget_cfg[1] else None
+    return rest, mr, mnd
 
 
 def _mask_to_global(ids, dists, *, mesh, axes, n_local: int, n_valid: int):
@@ -533,38 +581,45 @@ def _local_graph_topk(neighbors_l, medoid_l, codes_l, *rest, mesh, axes,
                       n_local: int, k: int, h: int, max_steps: int,
                       n_valid: int, backend: str, expand: int,
                       seed_cfg=None, prune_eps: float = 0.0,
-                      m_prefix: int = 0):
+                      m_prefix: int = 0, budget_cfg=(False, False)):
     """One shard's scatter half: beam-search my subgraph, return LOCAL
     top-k with GLOBAL ids. (1, Q, k) leading shard axis for the gather.
     ``rest`` is (luts,) classically, (table, pivots, seed_codes, luts)
-    when per-shard seeding rides along (``seed_cfg`` set)."""
+    when per-shard seeding rides along (``seed_cfg`` set), with the traced
+    deadline-budget scalars appended last per ``budget_cfg``."""
+    rest, max_rounds, max_n_dist = _split_budget(rest, budget_cfg)
     seed_l = rest[:3] if seed_cfg is not None else None
     luts = rest[-1]
     res = _local_beam(neighbors_l, medoid_l, codes_l, luts, h=h,
                       max_steps=max_steps, backend=backend, expand=expand,
                       seed_l=seed_l, seed_cfg=seed_cfg,
-                      prune_eps=prune_eps, m_prefix=m_prefix)
+                      prune_eps=prune_eps, m_prefix=m_prefix,
+                      max_rounds=max_rounds, max_n_dist=max_n_dist)
     gids, d = _mask_to_global(res.ids[:, :k], res.dists[:, :k], mesh=mesh,
                               axes=axes, n_local=n_local, n_valid=n_valid)
     return gids[None], d[None], res.hops[None], res.n_dist[None], \
-        res.rounds[None]
+        res.rounds[None], res.truncated[None]
 
 
 def _local_graph_serve(neighbors_l, medoid_l, codes_l, vectors_l, *rest,
                        mesh, axes, n_local: int, k: int, h: int,
                        shortlist: int, max_steps: int, n_valid: int,
                        backend: str, expand: int, seed_cfg=None,
-                       prune_eps: float = 0.0, m_prefix: int = 0):
+                       prune_eps: float = 0.0, m_prefix: int = 0,
+                       budget_cfg=(False, False)):
     """Scatter half with DiskANN-style local refinement: beam shortlist →
     exact rerank against my vector rows → LOCAL top-k, global ids.
     ``rest`` is (luts, queries), preceded by the three seed blocks when
-    ``seed_cfg`` is set (as in :func:`_local_graph_topk`)."""
+    ``seed_cfg`` is set (as in :func:`_local_graph_topk`), with the traced
+    deadline-budget scalars appended last per ``budget_cfg``."""
+    rest, max_rounds, max_n_dist = _split_budget(rest, budget_cfg)
     seed_l = rest[:3] if seed_cfg is not None else None
     luts, queries = rest[-2], rest[-1]
     res = _local_beam(neighbors_l, medoid_l, codes_l, luts, h=h,
                       max_steps=max_steps, backend=backend, expand=expand,
                       seed_l=seed_l, seed_cfg=seed_cfg,
-                      prune_eps=prune_eps, m_prefix=m_prefix)
+                      prune_eps=prune_eps, m_prefix=m_prefix,
+                      max_rounds=max_rounds, max_n_dist=max_n_dist)
     cand = jnp.minimum(res.ids[:, :shortlist], n_local)   # clamp sentinel
     vec_p = kops.pad_sentinel_row(vectors_l[0])
     cv = vec_p[cand]                                      # (Q, shortlist, D)
@@ -575,7 +630,7 @@ def _local_graph_serve(neighbors_l, medoid_l, codes_l, vectors_l, *rest,
     gids, d = _mask_to_global(ids, -neg, mesh=mesh, axes=axes,
                               n_local=n_local, n_valid=n_valid)
     return gids[None], d[None], res.hops[None], res.n_dist[None], \
-        res.rounds[None]
+        res.rounds[None], res.truncated[None]
 
 
 def sharded_graph_topk(mesh, axes: tuple, neighbors, medoids, codes, luts, *,
@@ -583,7 +638,8 @@ def sharded_graph_topk(mesh, axes: tuple, neighbors, medoids, codes, luts, *,
                        n_valid: Optional[int] = None, backend: str = "auto",
                        expand: int = 1, seed_stack=None, seed_k: int = 0,
                        seed_m_hash: int = 0, entries: int = 1,
-                       prune_eps: float = 0.0, m_prefix: int = 0):
+                       prune_eps: float = 0.0, m_prefix: int = 0,
+                       max_rounds=None, max_n_dist=None):
     """Scatter: shard-stacked independent subgraphs × replicated LUTs →
     per-shard (S, Q, k) GLOBAL ids + ADC distances (+ (S, Q)
     hops/n_dist/rounds).
@@ -609,20 +665,26 @@ def sharded_graph_topk(mesh, axes: tuple, neighbors, medoids, codes, luts, *,
                   (DESIGN.md §11).
       prune_eps/m_prefix: partial-LUT hop pruning of each local beam
                   (ε = 0 off — bit-identical).
+      max_rounds/max_n_dist: traced per-call deadline budgets of each
+                  local beam (DESIGN.md §13), replicated to every shard
+                  (spec P()); None compiles out — bit-identical.
 
     Each shard routes ONLY over its own subgraph — no inter-shard edges, no
     mid-search collectives; the only cross-device traffic is the O(S·Q·k)
     shortlist gather (vs. O(Q·N/S) for the scan engine's full distances).
+    The sixth output is the per-shard (S, Q) ``truncated`` flags.
     """
     s = shd.axis_size(mesh, axes)
     n_local = neighbors.shape[1]
     seeding = seed_stack is not None and entries > 1
+    budget_cfg = (max_rounds is not None, max_n_dist is not None)
     body = partial(_local_graph_topk, mesh=mesh, axes=axes, n_local=n_local,
                    k=k, h=h, max_steps=max_steps,
                    n_valid=s * n_local if n_valid is None else n_valid,
                    backend=backend, expand=expand,
                    seed_cfg=(seed_k, seed_m_hash, entries) if seeding
-                   else None, prune_eps=prune_eps, m_prefix=m_prefix)
+                   else None, prune_eps=prune_eps, m_prefix=m_prefix,
+                   budget_cfg=budget_cfg)
     ins = [neighbors, medoids, codes]
     specs = [P(axes, None, None), P(axes), P(axes, None, None)]
     if seeding:
@@ -630,10 +692,15 @@ def sharded_graph_topk(mesh, axes: tuple, neighbors, medoids, codes, luts, *,
         specs += [P(axes, None, None), P(axes, None), P(axes, None, None)]
     ins.append(luts)
     specs.append(_lut_specs(luts))
+    for b in (max_rounds, max_n_dist):
+        if b is not None:
+            ins.append(jnp.asarray(b, jnp.int32))
+            specs.append(P())
     return shard_map(
         body, mesh=mesh, in_specs=tuple(specs),
         out_specs=(P(axes, None, None), P(axes, None, None),
-                   P(axes, None), P(axes, None), P(axes, None)))(*ins)
+                   P(axes, None), P(axes, None), P(axes, None),
+                   P(axes, None)))(*ins)
 
 
 def sharded_graph_serve(mesh, axes: tuple, neighbors, medoids, codes,
@@ -643,23 +710,27 @@ def sharded_graph_serve(mesh, axes: tuple, neighbors, medoids, codes,
                         backend: str = "auto", expand: int = 1,
                         seed_stack=None, seed_k: int = 0,
                         seed_m_hash: int = 0, entries: int = 1,
-                        prune_eps: float = 0.0, m_prefix: int = 0):
+                        prune_eps: float = 0.0, m_prefix: int = 0,
+                        max_rounds=None, max_n_dist=None):
     """Scatter with local exact rerank: like :func:`sharded_graph_topk` but
     every shard re-ranks its beam shortlist against its resident vector
     rows (S, n_local, D) before answering — the DiskANN shortlist pattern
     with the SSD replaced by the shard's own HBM. Adaptive-routing kwargs
-    (``seed_stack``/``entries``/``prune_eps``/``m_prefix``) as in
+    (``seed_stack``/``entries``/``prune_eps``/``m_prefix``) and the traced
+    deadline budgets (``max_rounds``/``max_n_dist``) as in
     :func:`sharded_graph_topk`."""
     s = shd.axis_size(mesh, axes)
     n_local = neighbors.shape[1]
     seeding = seed_stack is not None and entries > 1
+    budget_cfg = (max_rounds is not None, max_n_dist is not None)
     body = partial(_local_graph_serve, mesh=mesh, axes=axes,
                    n_local=n_local, k=k, h=h,
                    shortlist=min(shortlist or h, h), max_steps=max_steps,
                    n_valid=s * n_local if n_valid is None else n_valid,
                    backend=backend, expand=expand,
                    seed_cfg=(seed_k, seed_m_hash, entries) if seeding
-                   else None, prune_eps=prune_eps, m_prefix=m_prefix)
+                   else None, prune_eps=prune_eps, m_prefix=m_prefix,
+                   budget_cfg=budget_cfg)
     ins = [neighbors, medoids, codes, vectors]
     specs = [P(axes, None, None), P(axes), P(axes, None, None),
              P(axes, None, None)]
@@ -668,10 +739,15 @@ def sharded_graph_serve(mesh, axes: tuple, neighbors, medoids, codes,
         specs += [P(axes, None, None), P(axes, None), P(axes, None, None)]
     ins += [luts, queries]
     specs += [_lut_specs(luts), P(None, None)]
+    for b in (max_rounds, max_n_dist):
+        if b is not None:
+            ins.append(jnp.asarray(b, jnp.int32))
+            specs.append(P())
     return shard_map(
         body, mesh=mesh, in_specs=tuple(specs),
         out_specs=(P(axes, None, None), P(axes, None, None),
-                   P(axes, None), P(axes, None), P(axes, None)))(*ins)
+                   P(axes, None), P(axes, None), P(axes, None),
+                   P(axes, None)))(*ins)
 
 
 def _stack_rows(x: jax.Array, n_shards: int, n_local: int) -> jax.Array:
@@ -793,8 +869,12 @@ class ShardedGraphEngine:
 
     def _scatter(self, luts, queries, k: int, h: int, max_steps: int,
                  expand: int, entries: int, prune_eps: float,
-                 m_prefix: int):
-        key = (k, h, max_steps, expand, entries, prune_eps, m_prefix)
+                 m_prefix: int, max_rounds=None, max_n_dist=None):
+        # budgets are TRACED — the cache keys on their PRESENCE (a distinct
+        # compiled body with/without the check), never on their values, so
+        # sweeping a deadline hits one cache entry
+        key = (k, h, max_steps, expand, entries, prune_eps, m_prefix,
+               max_rounds is not None, max_n_dist is not None)
         seed_stack = seed_k = seed_m_hash = None
         if entries > 1:
             *seed_stack, seed_k, seed_m_hash = self._seed_stack(luts)
@@ -806,29 +886,37 @@ class ShardedGraphEngine:
                             seed_m_hash=seed_m_hash or 0)
             if self.vectors is None:
                 fn = jax.jit(
-                    lambda nb, md, cd, lu, seed: sharded_graph_topk(
+                    lambda nb, md, cd, lu, seed, mr, mnd: sharded_graph_topk(
                         self.mesh, self._axes, nb, md, cd, lu, k=k, h=h,
                         max_steps=max_steps, n_valid=self.n,
                         backend=self.backend, expand=expand,
-                        seed_stack=seed, **adaptive))
+                        seed_stack=seed, max_rounds=mr, max_n_dist=mnd,
+                        **adaptive))
             else:
                 fn = jax.jit(
-                    lambda nb, md, cd, vc, lu, q, seed: sharded_graph_serve(
+                    lambda nb, md, cd, vc, lu, q, seed, mr, mnd:
+                    sharded_graph_serve(
                         self.mesh, self._axes, nb, md, cd, vc, lu, q, k=k,
                         h=h, shortlist=h, max_steps=max_steps,
                         n_valid=self.n, backend=self.backend,
-                        expand=expand, seed_stack=seed, **adaptive))
+                        expand=expand, seed_stack=seed, max_rounds=mr,
+                        max_n_dist=mnd, **adaptive))
             self._jit_cache[key] = fn
         if self.vectors is None:
             return fn(self._nbrs_s, self._medoids_s, self._codes_s, luts,
-                      seed_stack)
+                      seed_stack, max_rounds, max_n_dist)
         return fn(self._nbrs_s, self._medoids_s, self._codes_s, self._vec_s,
-                  luts, queries, seed_stack)
+                  luts, queries, seed_stack, max_rounds, max_n_dist)
 
     def search(self, queries: jax.Array, *, k: int = 10, h: int = 32,
                max_steps: int = 512, expand: int = 1,
                alive: Optional[Sequence[bool]] = None, entries: int = 1,
-               prune_eps: float = 0.0, m_prefix: int = 0) -> SearchResult:
+               prune_eps: float = 0.0, m_prefix: int = 0,
+               max_rounds=None, max_n_dist=None,
+               deadline_s: Optional[float] = None,
+               quorum: Optional[int] = None,
+               shard_latency_s: Optional[Sequence[float]] = None
+               ) -> SearchResult:
         """Route every query on every (alive) shard, merge the shortlists.
 
         ``hops``/``n_dist`` report the SUM over alive shards — the total
@@ -839,25 +927,54 @@ class ShardedGraphEngine:
         ``m_prefix`` are the adaptive-routing knobs (DESIGN.md §11),
         applied PER SHARD: every shard seeds its local beam from its own
         coarse index and prunes its own hops.
+
+        ``max_rounds``/``max_n_dist`` are per-call compute budgets applied
+        to EVERY shard's local beam (traced — sweeping them never
+        retraces). ``deadline_s``+``shard_latency_s`` model the quorum
+        merge (DESIGN.md §13): shards whose modeled latency exceeds the
+        straggler deadline are charged as dead for this call — provided at
+        least ``quorum`` (default: majority of alive) fast shards remain;
+        otherwise the fastest ``quorum`` alive shards are kept even past
+        the deadline (quorum outranks deadline). ``truncated`` is
+        any-over-merged-shards; ``degraded`` is True whenever the answer
+        merged fewer shards than were declared alive, or none at all.
         """
         queries = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
         kk = min(k, h, self.graph.n_local)
         luts = jax.tree.map(jnp.asarray, self.lut_fn(queries))
-        gids, dists, hops, ndist, rounds = self._scatter(
+        gids, dists, hops, ndist, rounds, trunc = self._scatter(
             luts, queries, kk, h, max_steps, expand, entries, prune_eps,
-            m_prefix)
+            m_prefix, max_rounds=max_rounds, max_n_dist=max_n_dist)
         gids, dists = np.asarray(gids), np.asarray(dists)
         if alive is None:
             alive = [True] * self.n_shards
-        ids, ds = partial_merge(list(gids), list(dists), alive, k)
+        alive = list(alive)
+        quorum_degraded = False
+        if deadline_s is not None or quorum is not None:
+            lat = (list(shard_latency_s) if shard_latency_s is not None
+                   else [0.0] * self.n_shards)
+            decision = resolve_quorum(alive, lat, deadline_s, quorum)
+            alive = list(decision.alive)
+            quorum_degraded = decision.degraded
+        merged = partial_merge(list(gids), list(dists), alive, k)
         mask = np.asarray(alive, bool)
-        hops = np.asarray(hops)[mask].sum(0)
-        ndist = np.asarray(ndist)[mask].sum(0)
-        rounds = np.asarray(rounds)[mask].max(0)
-        return SearchResult(jnp.asarray(ids), jnp.asarray(ds),
+        q = queries.shape[0]
+        if mask.any():
+            hops = np.asarray(hops)[mask].sum(0)
+            ndist = np.asarray(ndist)[mask].sum(0)
+            rounds = np.asarray(rounds)[mask].max(0)
+            trunc = np.asarray(trunc)[mask].any(0)
+        else:  # every shard dead: sentinel answer, zero-work counters
+            hops = np.zeros((q,), np.int32)
+            ndist = np.zeros((q,), np.int32)
+            rounds = np.zeros((q,), np.int32)
+            trunc = np.zeros((q,), bool)
+        return SearchResult(jnp.asarray(merged.ids), jnp.asarray(merged.dists),
                             hops=jnp.asarray(hops, jnp.int32),
                             n_dist=jnp.asarray(ndist, jnp.int32),
-                            rounds=jnp.asarray(rounds, jnp.int32))
+                            rounds=jnp.asarray(rounds, jnp.int32),
+                            truncated=jnp.asarray(trunc),
+                            degraded=bool(merged.degraded or quorum_degraded))
 
     def memory_bytes(self) -> int:
         # UNPADDED codes + per-shard adjacency (+ vectors when resident)

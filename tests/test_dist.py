@@ -119,13 +119,17 @@ def test_partial_merge_straggler_tolerance(rng):
            np.asarray([[20, 21, 22]])]
     ds = [np.asarray([[0.1, 0.5, 0.9]]), np.asarray([[0.2, 0.6, 1.0]]),
           np.asarray([[0.0, 0.3, 0.7]])]
-    mi, md = partial_merge(ids, ds, [True, True, True], k=3)
-    assert mi[0].tolist() == [20, 0, 10]
+    merged = partial_merge(ids, ds, [True, True, True], k=3)
+    assert merged.ids[0].tolist() == [20, 0, 10]
+    assert not merged.degraded
     # shard 2 (the best) dies: merge still succeeds with survivors
-    mi, md = partial_merge(ids, ds, [True, True, False], k=3)
-    assert mi[0].tolist() == [0, 10, 1]
-    with pytest.raises(RuntimeError):
-        partial_merge(ids, ds, [False, False, False], k=3)
+    merged = partial_merge(ids, ds, [True, True, False], k=3)
+    assert merged.ids[0].tolist() == [0, 10, 1]
+    assert merged.degraded
+    # ALL shards dead: sentinel answer, never an exception (DESIGN.md §13)
+    merged = partial_merge(ids, ds, [False, False, False], k=3)
+    assert merged.degraded
+    assert (merged.ids == -1).all() and np.isinf(merged.dists).all()
 
 
 def test_train_driver_crash_resume_bitexact(tmp_path):

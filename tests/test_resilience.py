@@ -1,0 +1,590 @@
+"""Resilient serving (DESIGN.md §13): deadline budgets, the degradation
+ladder, retry/backoff, quorum merge, snapshot verification, and the seeded
+chaos acceptance drill.
+
+The contracts under test:
+
+* budgets compile out: ``max_rounds=None`` / ``max_n_dist=None`` is the
+  pre-§13 beam, and a huge budget is BITWISE identical to no budget;
+* budgets bind per lane: no query's ``rounds`` ever exceeds ``max_rounds``
+  (the vmapped while_loop freezes each lane's carry independently), and
+  capped queries report honest ``truncated`` flags;
+* a truncated query NEVER returns a tombstoned id — including word-boundary
+  ids (31/32/63/64) and the skip_delta degraded path;
+* retry/backoff is deterministic (seeded jitter), deadline-aware, and is
+  the schedule ``supervise`` restarts follow;
+* ``partial_merge`` answers sentinels — never raises — at S ∈ {1, 4}
+  all-dead, and ``resolve_quorum`` charges stragglers dead only while the
+  quorum holds;
+* snapshot manifests carry per-array CRC32s: silent corruption raises
+  ``ChecksumError`` on an explicit generation and falls back to the newest
+  intact generation otherwise, with a clear error when nothing survives;
+* the ISSUE's seeded chaos plan (dead shard + straggler + corrupted newest
+  snapshot + crash mid-consolidate) serves every query within budget,
+  never throws, stays within 5 recall points of fault-free on the
+  reachable corpus, and restores the newest checksum-intact generation.
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.dist import checkpoint as ckpt
+from repro.dist.fault import (ChaosPlan, InjectedFailure, corrupt_snapshot,
+                              partial_merge, resolve_quorum, supervise)
+from repro.dist.retry import (DeadlineExceeded, RetryPolicy, TransientIOError,
+                              backoff_schedule, call_with_retry,
+                              expected_retry_time_s)
+from repro.index import BaseSegment, StreamingEngine
+from repro.index.segment import encode_codes, load_segment, save_segment
+from repro.pq import base as pqbase
+from repro.pq import train_pq
+from repro.search.degrade import (MAX_LEVEL, DegradationPolicy,
+                                  recommend_level)
+from repro.search.engine import HybridEngine, InMemoryEngine
+
+
+@pytest.fixture(scope="module")
+def setup(clustered_data, small_graph):
+    x, q, gt = clustered_data
+    model = train_pq(jax.random.PRNGKey(0), x, 8, 32, iters=8)
+    return dict(x=x, q=q, gt=np.asarray(gt), graph=small_graph, model=model,
+                codes=pqbase.encode(model, x),
+                lut_fn=lambda qq: pqbase.build_lut(model, qq))
+
+
+def streaming_engine(setup, capacity=256):
+    seg = BaseSegment(graph=setup["graph"],
+                      codes=jnp.asarray(encode_codes(
+                          setup["model"], np.asarray(setup["x"]), "u8")),
+                      vectors=setup["x"], layout="u8")
+    return StreamingEngine(seg, setup["model"], delta_capacity=capacity)
+
+
+# =========================================================================
+# Deadline budgets on the beam
+# =========================================================================
+
+def test_budget_none_is_bitwise_identical_to_huge_budget(setup):
+    """The budget=None trace is the pre-§13 beam; a budget too large to
+    bind must produce the SAME bits (the cond-only gating never perturbs
+    the carry)."""
+    eng = InMemoryEngine(setup["graph"], setup["codes"], setup["lut_fn"])
+    a = eng.search(setup["q"], k=10, h=32)
+    b = eng.search(setup["q"], k=10, h=32, max_rounds=10**6,
+                   max_n_dist=10**9)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+    np.testing.assert_array_equal(np.asarray(a.rounds),
+                                  np.asarray(b.rounds))
+    assert not np.asarray(b.truncated).any()
+
+
+def test_max_rounds_binds_per_lane_with_honest_truncation(setup):
+    """No lane exceeds the cap; lanes that stopped early on their own are
+    NOT flagged; capped-mid-walk lanes are."""
+    eng = InMemoryEngine(setup["graph"], setup["codes"], setup["lut_fn"])
+    free = eng.search(setup["q"], k=10, h=32)
+    capped = eng.search(setup["q"], k=10, h=32, max_rounds=2)
+    rounds = np.asarray(capped.rounds)
+    assert rounds.max() <= 2
+    trunc = np.asarray(capped.truncated)
+    # lanes that naturally converged in <= 2 rounds must not be flagged
+    natural = np.asarray(free.rounds) <= 2
+    assert not trunc[natural].any()
+    # the cap must actually bind somewhere on this corpus
+    assert trunc[~natural].all()
+    # best-so-far answers are still real ids with finite distances
+    assert (np.asarray(capped.ids) >= 0).all()
+    assert np.isfinite(np.asarray(capped.dists)).all()
+
+
+def test_max_rounds_sweep_is_monotone_to_convergence(setup):
+    """Recall (vs the unbudgeted beam's own answer) grows with the budget
+    and reaches exact agreement once the budget covers every lane."""
+    eng = InMemoryEngine(setup["graph"], setup["codes"], setup["lut_fn"])
+    free = eng.search(setup["q"], k=10, h=32)
+    full_budget = int(np.asarray(free.rounds).max())
+    agree_prev = -1.0
+    for budget in (1, 4, full_budget):
+        res = eng.search(setup["q"], k=10, h=32, max_rounds=budget)
+        agree = float(np.mean(np.asarray(res.ids) == np.asarray(free.ids)))
+        assert agree >= agree_prev - 1e-9
+        agree_prev = agree
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(free.ids))
+    assert not np.asarray(res.truncated).any()
+
+
+def test_max_n_dist_caps_distance_work(setup):
+    """The n_dist budget stops the walk within one round's overshoot and
+    flags the stop; a huge cap is a no-op."""
+    eng = InMemoryEngine(setup["graph"], setup["codes"], setup["lut_fn"])
+    free = eng.search(setup["q"], k=10, h=32)
+    cap = int(np.asarray(free.n_dist).max()) // 4
+    res = eng.search(setup["q"], k=10, h=32, max_n_dist=cap)
+    ndist = np.asarray(res.n_dist)
+    # the check runs before each round, so overshoot <= one frontier (R+1
+    # lanes per expanded node; expand=1 here → degree+1 per round)
+    per_round = setup["graph"].neighbors.shape[1] + 1
+    assert (ndist <= cap + per_round).all()
+    binds = np.asarray(free.n_dist) > cap
+    assert binds.any() and np.asarray(res.truncated)[binds].all()
+
+
+def test_hybrid_budget_and_skip_rerank(setup):
+    """HybridEngine threads budgets through its beam, and rerank=-1 (the
+    L4 degradation rung) answers straight from the ADC beam."""
+    hyb = HybridEngine(setup["graph"], setup["codes"], setup["lut_fn"],
+                       vectors=setup["x"])
+    capped = hyb.search(setup["q"], k=10, h=32, max_rounds=2)
+    assert np.asarray(capped.rounds).max() <= 2
+    assert np.asarray(capped.truncated).any()
+    adc_only = hyb.search(setup["q"], k=10, h=32, rerank=-1)
+    mem = InMemoryEngine(setup["graph"], setup["codes"], setup["lut_fn"])
+    np.testing.assert_array_equal(
+        np.asarray(adc_only.ids),
+        np.asarray(mem.search(setup["q"], k=10, h=32).ids))
+
+
+# =========================================================================
+# Tombstones × truncation (the degraded path keeps the hard guarantee)
+# =========================================================================
+
+@pytest.mark.parametrize("skip_delta", [False, True])
+def test_truncated_search_never_returns_tombstoned_word_boundary_ids(
+        setup, skip_delta):
+    """Word-boundary ids (31/32/63/64) tombstoned, beam truncated at 1
+    round: the scrub happens AFTER the early exit, so no budget and no
+    degradation rung may leak a deleted id."""
+    eng = streaming_engine(setup)
+    boundary = [31, 32, 63, 64]
+    gids = eng.insert(np.asarray(setup["x"])[boundary] * 1.0)
+    eng.delete(boundary)          # base rows at the bitset word boundaries
+    eng.delete(gids[:2])          # plus delta rows
+    for budget in (1, 3, None):
+        res = eng.search(setup["q"], k=10, h=32, max_rounds=budget,
+                         skip_delta=skip_delta)
+        ids = np.asarray(res.ids)
+        assert not np.isin(ids, boundary).any()
+        assert not np.isin(ids, gids[:2]).any()
+        if skip_delta:            # the delta arm is dark entirely
+            assert not np.isin(ids, gids).any()
+
+
+def test_skip_delta_preserves_base_answers(setup):
+    """skip_delta answers base-only: same base ids as the merged path
+    returns once delta candidates are discounted."""
+    eng = streaming_engine(setup)
+    eng.insert(np.asarray(setup["q"])[:4])     # delta rows AT the queries
+    merged = eng.search(setup["q"][:4], k=5, h=32)
+    base_only = eng.search(setup["q"][:4], k=5, h=32, skip_delta=True)
+    assert (np.asarray(merged.ids)[:, 0] >= eng.base.n).all()
+    ids = np.asarray(base_only.ids)
+    assert (ids < eng.base.n).all() and (ids >= 0).all()
+
+
+# =========================================================================
+# Degradation ladder
+# =========================================================================
+
+def test_degradation_ladder_is_cumulative_and_clamped():
+    pol = DegradationPolicy()
+    assert pol.overrides(0) == {}
+    assert pol.overrides(1) == {"expand": 1}
+    l3 = pol.overrides(3)
+    assert l3["expand"] == 1 and l3["entries"] == 1
+    assert l3["prune_eps"] == pol.prune_eps
+    assert pol.overrides(5)["skip_delta"] is True
+    assert pol.overrides(99) == pol.overrides(MAX_LEVEL)  # clamped
+    capped = DegradationPolicy(max_level=2)
+    assert "prune_eps" not in capped.overrides(5)
+    with pytest.raises(ValueError):
+        DegradationPolicy(max_level=MAX_LEVEL + 1)
+
+
+def test_degradation_apply_filters_per_engine(setup):
+    """One ladder, many engines: rungs an engine cannot express are
+    dropped, caller kwargs survive underneath."""
+    pol = DegradationPolicy()
+    mem = InMemoryEngine(setup["graph"], setup["codes"], setup["lut_fn"])
+    kw = pol.apply(mem, 5, h=32, entries=8)
+    assert "rerank" not in kw and "skip_delta" not in kw
+    assert kw["entries"] == 1 and kw["expand"] == 1 and kw["h"] == 32
+    hyb = HybridEngine(setup["graph"], setup["codes"], setup["lut_fn"],
+                       vectors=setup["x"])
+    assert pol.apply(hyb, 4)["rerank"] == -1
+    stream = streaming_engine(setup)
+    assert pol.apply(stream, 5)["skip_delta"] is True
+    # the ladder must actually shed distance work on a real engine
+    full = pol.search(mem, setup["q"], level=0, h=32, entries=8,
+                      prune_eps=0.1, expand=4)
+    shed = pol.search(mem, setup["q"], level=3, h=32, entries=8,
+                      prune_eps=0.1, expand=4)
+    assert (np.asarray(shed.n_dist).mean()
+            < np.asarray(full.n_dist).mean())
+
+
+def test_recommend_level_hysteresis():
+    pol = DegradationPolicy()
+    assert recommend_level(pol, observed_s=0.2, deadline_s=0.1,
+                           current=0) == 1
+    assert recommend_level(pol, observed_s=0.05, deadline_s=0.1,
+                           current=1) == 0
+    # inside the hysteresis band: hold
+    assert recommend_level(pol, observed_s=0.09, deadline_s=0.1,
+                           current=2) == 2
+    assert recommend_level(pol, observed_s=9.9, deadline_s=0.1,
+                           current=MAX_LEVEL) == MAX_LEVEL
+
+
+# =========================================================================
+# Retry / backoff / supervise
+# =========================================================================
+
+def test_backoff_schedule_nominal_and_jittered():
+    pol = RetryPolicy(max_attempts=5, base_delay_s=0.01, multiplier=2.0,
+                      max_delay_s=0.05, jitter=0.25)
+    assert backoff_schedule(pol, seed=None) == [0.01, 0.02, 0.04, 0.05]
+    j1 = backoff_schedule(pol, seed=7)
+    assert j1 == backoff_schedule(pol, seed=7)      # deterministic
+    assert j1 != backoff_schedule(pol, seed=8)
+    for nom, jit in zip([0.01, 0.02, 0.04, 0.05], j1):
+        assert 0.75 * nom <= jit <= 1.25 * nom
+
+
+def test_call_with_retry_schedule_with_fake_sleep():
+    slept = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            raise TransientIOError("flap")
+        return "ok"
+
+    pol = RetryPolicy(max_attempts=4, base_delay_s=0.01, jitter=0.0)
+    out, retries = call_with_retry(flaky, policy=pol, sleep=slept.append)
+    assert out == "ok" and retries == 2
+    assert slept == backoff_schedule(pol)[:2]
+
+    with pytest.raises(ValueError):    # non-retryable propagates at once
+        call_with_retry(lambda: (_ for _ in ()).throw(ValueError("bug")),
+                        policy=pol, sleep=slept.append)
+
+    with pytest.raises(TransientIOError):   # attempts exhausted re-raises
+        call_with_retry(lambda: (_ for _ in ()).throw(
+            TransientIOError("down")), policy=pol, sleep=lambda s: None)
+
+
+def test_call_with_retry_deadline():
+    """A sleep that would cross the deadline raises DeadlineExceeded
+    instead of parking the caller — and it chains the causal error."""
+    clock = {"t": 0.0}
+
+    def fake_sleep(s):
+        clock["t"] += s
+
+    pol = RetryPolicy(max_attempts=10, base_delay_s=0.04, multiplier=2.0,
+                      jitter=0.0, deadline_s=0.1)
+    with pytest.raises(DeadlineExceeded) as ei:
+        call_with_retry(
+            lambda: (_ for _ in ()).throw(TransientIOError("down")),
+            policy=pol, sleep=fake_sleep, clock=lambda: clock["t"])
+    assert isinstance(ei.value.__cause__, TransientIOError)
+    assert clock["t"] <= pol.deadline_s
+    # DeadlineExceeded(TimeoutError) is an OSError: outer handlers that
+    # catch I/O errors see it without special-casing
+    assert isinstance(ei.value, OSError)
+
+
+def test_expected_retry_time_closed_form():
+    pol = RetryPolicy(max_attempts=3, base_delay_s=0.01, multiplier=2.0,
+                      jitter=0.0)
+    p, lat = 0.5, 0.002
+    want = (lat + p * (0.01 + lat) + p * p * (0.02 + lat))
+    assert expected_retry_time_s(pol, lat, p) == pytest.approx(want)
+    assert expected_retry_time_s(pol, lat, 0.0) == pytest.approx(lat)
+
+
+def test_supervise_restarts_follow_backoff_schedule():
+    slept, calls = [], {"n": 0}
+
+    def run():
+        calls["n"] += 1
+        if calls["n"] <= 3:
+            raise InjectedFailure(f"crash {calls['n']}")
+        return "done"
+
+    pol = RetryPolicy(max_attempts=2, base_delay_s=0.01, multiplier=2.0,
+                      max_delay_s=1.0, jitter=0.1)
+    out, restarts = supervise(run, max_restarts=3, backoff=pol, seed=5,
+                              sleep=slept.append)
+    assert out == "done" and restarts == 3
+    want = backoff_schedule(dataclasses.replace(pol, max_attempts=4),
+                            seed=5)
+    assert slept == want
+    # exhausting restarts propagates the crash (no swallow)
+    calls["n"] = 0
+    with pytest.raises(InjectedFailure):
+        supervise(run, max_restarts=1, backoff=pol, sleep=lambda s: None)
+
+
+# =========================================================================
+# partial_merge / quorum
+# =========================================================================
+
+@pytest.mark.parametrize("n_shards", [1, 4])
+def test_partial_merge_all_dead_returns_sentinels(n_shards):
+    """All-shards-dead answers (-1, +inf, degraded=True) — never raises
+    (the pre-§13 behavior was a RuntimeError)."""
+    rng = np.random.default_rng(0)
+    ids = [rng.integers(0, 100, (3, 5)) for _ in range(n_shards)]
+    ds = [rng.random((3, 5)).astype(np.float32) for _ in range(n_shards)]
+    merged = partial_merge(ids, ds, [False] * n_shards, k=5)
+    assert merged.degraded
+    assert merged.ids.shape == (3, 5) and (merged.ids == -1).all()
+    assert np.isinf(merged.dists).all()
+    # one alive shard un-degrades nothing silently
+    if n_shards == 4:
+        alive = [True] + [False] * 3
+        m2 = partial_merge(ids, ds, alive, k=5)
+        assert m2.degraded and (m2.ids != -1).any()
+
+
+def test_resolve_quorum_straggler_and_quorum_floor():
+    alive = [True, True, True, True]
+    lat = [0.002, 0.050, 0.002, 0.002]
+    # straggler misses the 10ms deadline, majority quorum (2 of 4) holds
+    dec = resolve_quorum(alive, lat, 0.010, None)
+    assert dec.alive == [True, False, True, True] and dec.degraded
+    assert dec.waited_s == pytest.approx(0.002)
+    # quorum outranks the deadline: with Q=4 the straggler must be waited on
+    dec = resolve_quorum(alive, lat, 0.010, 4)
+    assert dec.alive == alive and not dec.degraded
+    assert dec.waited_s == pytest.approx(0.050)
+    # dead shards never count, even under quorum pressure
+    dec = resolve_quorum([False, True, False, True], lat, 0.001, 3)
+    assert dec.alive == [False, True, False, True] and dec.degraded
+    # no deadline → liveness passes through
+    dec = resolve_quorum(alive, None, None, None)
+    assert dec.alive == alive and not dec.degraded
+    assert resolve_quorum([False] * 4, lat, 0.01, None).degraded
+
+
+def test_chaos_plan_parse_grammar():
+    plan = ChaosPlan.parse("dead=0+2, straggler=1; straggler_ms=40,"
+                           "latency_ms=3,io=0.25,corrupt,"
+                           "crash=consolidate,seed=9")
+    assert plan.dead_shards == (0, 2) and plan.straggler_shards == (1,)
+    assert plan.straggler_latency_s == pytest.approx(0.040)
+    assert plan.shard_latency_s == pytest.approx(0.003)
+    assert plan.io_fault_p == 0.25 and plan.corrupt_latest_snapshot
+    assert plan.crash_phase == "consolidate" and plan.seed == 9
+    assert plan.alive(4) == [False, True, False, True]
+    assert list(plan.latencies(4)) == pytest.approx(
+        [0.003, 0.040, 0.003, 0.003])
+    with pytest.raises(ValueError):
+        ChaosPlan.parse("crash=sideways")
+    with pytest.raises(ValueError):
+        ChaosPlan.parse("banana=1")
+
+
+# =========================================================================
+# Snapshot integrity
+# =========================================================================
+
+def test_restore_empty_or_missing_dir_raises_clear_error(tmp_path):
+    empty = str(tmp_path / "nothing")
+    os.makedirs(empty)
+    with pytest.raises(FileNotFoundError, match="no checkpoints under"):
+        ckpt.restore(empty)
+    with pytest.raises(FileNotFoundError, match="no checkpoints under"):
+        ckpt.restore(str(tmp_path / "never_created"))
+    with pytest.raises(FileNotFoundError, match="no checkpoints under"):
+        load_segment(empty)
+
+
+def test_restore_missing_step_lists_available(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, step=3, state={"w": np.arange(4.0)})
+    with pytest.raises(FileNotFoundError, match="available"):
+        ckpt.restore(d, step=7)
+
+
+def test_checksum_verifies_and_detects_silent_corruption(tmp_path):
+    d = str(tmp_path)
+    state = {"w": np.arange(64, dtype=np.float32).reshape(8, 8),
+             "meta": {"note": "x"}}
+    ckpt.save(d, step=1, state=state)
+    back = ckpt.restore(d)                 # intact: verifies silently
+    np.testing.assert_array_equal(np.asarray(back["state"]["w"]),
+                                  state["w"])
+    corrupt_snapshot(d, seed=0)
+    with pytest.raises(ckpt.ChecksumError, match="crc32"):
+        ckpt.restore(d, step=1)
+
+
+def test_load_segment_falls_back_to_newest_intact_generation(setup,
+                                                             tmp_path):
+    d = str(tmp_path)
+    eng = streaming_engine(setup, capacity=64)
+    eng.insert(np.asarray(setup["x"])[:8] * 1.01)
+    eng.consolidate(ckpt_dir=d)            # generation 1
+    eng.insert(np.asarray(setup["x"])[8:16] * 1.01)
+    eng.consolidate(ckpt_dir=d)            # generation 2
+    newest = corrupt_snapshot(d, seed=1)
+    assert newest == 2
+    seen = []
+    seg, _ = load_segment(d, with_model=True,
+                          on_fallback=lambda g, e: seen.append((g, e)))
+    assert seg.generation == 1
+    assert [g for g, _ in seen] == [2]
+    assert isinstance(seen[0][1], ckpt.ChecksumError)
+    # explicit generation NEVER falls back — the caller asked for those bits
+    with pytest.raises(ckpt.ChecksumError):
+        load_segment(d, 2)
+    # restore() rides the same path
+    eng2 = StreamingEngine.restore(d, delta_capacity=64)
+    assert eng2.generation == 1
+    # every generation corrupt → one clear error naming the failures
+    corrupt_snapshot(d, step=1, seed=2)
+    with pytest.raises(RuntimeError, match="no intact snapshot"):
+        load_segment(d)
+
+
+def test_restore_retries_transient_io_faults(setup, tmp_path):
+    d = str(tmp_path)
+    eng = streaming_engine(setup, capacity=64)
+    eng.consolidate(ckpt_dir=d)
+    always, hits = ChaosPlan(seed=0, io_fault_p=1.0).io_fault(), {"n": 0}
+
+    def hook(path):
+        hits["n"] += 1
+        if hits["n"] <= 2:                 # two flaps, then healthy
+            raise TransientIOError(f"injected: {path}")
+    ckpt.set_io_fault_hook(hook)
+    try:
+        eng2 = StreamingEngine.restore(
+            d, delta_capacity=64,
+            retry=RetryPolicy(max_attempts=4, base_delay_s=1e-4))
+        assert eng2.generation == 1
+        # without a retry policy the same fault surfaces
+        hits["n"] = 0
+        with pytest.raises((RuntimeError, TransientIOError)):
+            StreamingEngine.restore(d, delta_capacity=64)
+    finally:
+        ckpt.set_io_fault_hook(None)
+    assert always is not None
+
+
+# =========================================================================
+# The seeded chaos acceptance drill (ISSUE plan, forced 4-device split)
+# =========================================================================
+
+_CHAOS_SUBPROC = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax, jax.numpy as jnp
+from repro.dist.fault import ChaosPlan, InjectedFailure, corrupt_snapshot, \\
+    resolve_quorum
+from repro.graphs.partition import build_partitioned_vamana, shard_bounds
+from repro.graphs.vamana import build_vamana
+from repro.index import BaseSegment, StreamingEngine
+from repro.index.segment import encode_codes
+from repro.pq import base as pqbase
+from repro.pq.pq import train_pq
+from repro.search.engine import ShardedGraphEngine
+from repro.search.metrics import live_ground_truth, recall_at_k
+
+assert len(jax.devices()) == 4
+N, D, Q, TOPK, H, BUDGET = 512, 32, 50, 10, 32, 64
+r = np.random.default_rng(7)
+centers = r.normal(size=(8, D)) * 2.5
+x = (centers[r.integers(0, 8, N)] + r.normal(size=(N, D))).astype(np.float32)
+q = (centers[r.integers(0, 8, Q)] + r.normal(size=(Q, D))).astype(np.float32)
+x, q = jnp.asarray(x), jnp.asarray(q)
+model = train_pq(jax.random.PRNGKey(0), x, 8, 16, iters=8)
+codes = pqbase.encode(model, x)
+lut_fn = lambda qq: pqbase.build_lut(model, qq)
+
+plan = ChaosPlan(seed=7, dead_shards=(0,), straggler_shards=(1,),
+                 straggler_latency_s=0.050, shard_latency_s=0.002,
+                 corrupt_latest_snapshot=True, crash_phase="consolidate")
+deadline_s = 0.010
+
+# --- sharded serving under the plan: never throws, budget holds ---------
+pg = build_partitioned_vamana(jax.random.PRNGKey(1), x, 4, r=12, l=24)
+eng = ShardedGraphEngine(pg, codes, lut_fn, vectors=x)
+from repro.graphs.knn import knn_ids
+gt, _ = knn_ids(x, q, TOPK)
+free = eng.search(q, k=TOPK, h=H, max_rounds=BUDGET)
+rec_free = recall_at_k(free.ids, np.asarray(gt), TOPK)
+
+fault = eng.search(q, k=TOPK, h=H, max_rounds=BUDGET,
+                   alive=plan.alive(4), deadline_s=deadline_s,
+                   shard_latency_s=list(plan.latencies(4)))
+assert fault.degraded, "dead+straggler answer must be marked degraded"
+assert np.asarray(fault.rounds).max() <= BUDGET
+assert np.asarray(fault.truncated).shape == (Q,)      # honest flags exist
+dec = resolve_quorum(plan.alive(4), list(plan.latencies(4)), deadline_s,
+                     None)
+assert dec.alive == [False, False, True, True]
+reach = np.concatenate([np.arange(lo, hi) for s, (lo, hi)
+                        in enumerate(shard_bounds(N, 4)) if dec.alive[s]])
+banned = np.setdiff1d(np.arange(N), reach)
+assert not np.isin(np.asarray(fault.ids), banned).any(), \\
+    "answer leaked rows from a dead or straggler-charged shard"
+gt_reach = live_ground_truth(np.asarray(x), reach, q, TOPK)
+rec_fault = recall_at_k(fault.ids, gt_reach, TOPK)
+assert rec_fault >= rec_free - 0.05, (rec_fault, rec_free)
+print(f"SHARDED_OK free={rec_free:.3f} fault={rec_fault:.3f}")
+
+# --- streaming under the plan: crash + corruption, restore stays intact --
+g = build_vamana(jax.random.PRNGKey(2), x, r=12, l=24)
+seg = BaseSegment(graph=g, codes=jnp.asarray(encode_codes(model, np.asarray(x), "u8")),
+                  vectors=x, layout="u8")
+se = StreamingEngine(seg, model, delta_capacity=64)
+d = {snap_dir!r}
+se.insert(np.asarray(x)[:16] * 1.01)
+se.consolidate(ckpt_dir=d)                       # generation 1, intact
+se.insert(np.asarray(x)[16:32] * 1.01)
+try:
+    se.consolidate(ckpt_dir=d, chaos=plan.consolidate_hook())
+    raise SystemExit("chaos crash did not fire")
+except InjectedFailure:
+    pass                                          # gen-2 snapshot durable
+corrupted = corrupt_snapshot(d, seed=plan.seed)   # newest (gen 2) corrupted
+falls = []
+se2 = StreamingEngine.restore(d, delta_capacity=64,
+                              on_fallback=lambda gen, e: falls.append(gen))
+assert corrupted == 2 and se2.generation == 1 and falls == [2], \\
+    (corrupted, se2.generation, falls)
+res = se2.search(q, k=TOPK, h=H, max_rounds=4)
+assert np.isfinite(np.asarray(res.dists)[:, 0]).all()
+print("RESTORE_OK gen=%d" % se2.generation)
+"""
+
+
+def test_seeded_chaos_plan_acceptance(tmp_path):
+    """The ISSUE acceptance drill: under {1 dead shard + 1 straggler + 1
+    corrupted latest snapshot + crash mid-consolidate}, serving never
+    throws, every query answers within budget with honest flags, recall
+    stays within 5 points of fault-free on the reachable corpus, and
+    restore() lands on the newest checksum-intact generation. Subprocess
+    so this process keeps its 1-device view (conftest requirement)."""
+    code = _CHAOS_SUBPROC.replace(
+        "{snap_dir!r}", repr(str(tmp_path / "snaps")))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900,
+                       env={**os.environ, "PYTHONPATH": "src",
+                            "JAX_PLATFORMS": "cpu"},
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, (r.stdout[-1500:], r.stderr[-2500:])
+    assert "SHARDED_OK" in r.stdout and "RESTORE_OK gen=1" in r.stdout, \
+        r.stdout[-1500:]
