@@ -1,0 +1,199 @@
+"""All-in-storage serving: double-buffered prefetch vs serial read-then-compute.
+
+The acceptance numbers for the storage tier (DESIGN.md §14, repro/storage/):
+a DiskEngine serves the SAME segment file twice — once with ``overlap=
+False`` (each round fetches its frontier records, waits, then scores:
+wall ≈ rounds × (io + compute)) and once with the double-buffered
+prefetcher (round N+1's reads issued before round N scores: wall ≈
+rounds × max(io, compute)) — at identical budgets, so the speedup row
+isolates exactly the overlap.
+
+Storage latency is MODELED HONESTLY for a page-cached CI host, where raw
+preads cost microseconds and any "overlap" would be noise: the reader's
+``slow_read_ms`` sleeps inside the worker threads (genuinely overlappable
+wall-clock on the real read path — the same knob ``--chaos slow_read=``
+drives), and the bench CALIBRATES it to the measured per-round compute
+time, the regime where double-buffering pays its theoretical ≈2×. A
+real-read row (slow_read_ms=0) is reported alongside, without the bar.
+
+Rows:
+
+* ``disk/serial/h32``, ``disk/prefetch/h32`` — recall@10, service QPS,
+  cache hit-rate, bytes read per query batch, post-overlap I/O stall.
+* ``disk/overlap_summary`` — ``speedup`` (prefetch QPS / serial QPS)
+  against ``bar=1.5`` (CI asserts it) + the recall delta (must stay
+  within a point — asserted HERE, it is a correctness invariant).
+* ``disk/real_read/h32`` — the same comparison on raw page-cache reads,
+  informational.
+* ``disk/model_vs_measured`` — HybridEngine's closed-form SSD model
+  cross-checked against the DiskEngine's MEASURED per-round I/O stall via
+  the ``io_time(measured_io_s=...)`` adapter.
+
+Run as a section of the driver (emits BENCH_disk.json):
+
+    PYTHONPATH=src python -m benchmarks.run --only disk
+"""
+
+from __future__ import annotations
+
+CACHE_RECORDS = 2048    # ~14% of the base: top BFS layers stay resident
+H = 32
+K = 10
+
+# calibrated slow latency sits ABOVE per-round compute by this factor —
+# the middle of the speedup plateau (io just dominating compute), so a
+# noisy calibration run can't tip the comparison off the max(io, compute)
+# regime the 1.5× bar assumes
+SLOW_MULT = 1.2
+# clamps: below ~0.5 ms sleep scheduling noise dominates; above 20 ms the
+# quick-scale bench would crawl
+SLOW_MS_MIN, SLOW_MS_MAX = 0.5, 20.0
+
+
+def _timed(engine, queries, *, overlap, repeats=3):
+    """(recall-ready result, qps, last_io of the BEST timed run).
+
+    min-of-repeats, not mean: CI hosts take load spikes, and a single
+    slow repeat in either arm would randomize the speedup ratio."""
+    import time
+
+    import numpy as np
+
+    res = engine.search(queries, k=K, h=H, overlap=overlap)   # warmup
+    np.asarray(res.dists)
+    best, res = None, None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = engine.search(queries, k=K, h=H, overlap=overlap)
+        np.asarray(res.dists)
+        wall = time.perf_counter() - t0
+        if best is None or wall < best[0]:
+            best = (wall, dict(engine.last_io))
+    nq = int(queries.shape[0])
+    qps = nq / max(best[0], 1e-12)
+    return res, qps, best[1]
+
+
+def _fmt_io(io) -> str:
+    return (f"cache_hit_rate={io['cache_hit_rate']:.3f};"
+            f"bytes_read={io['bytes_read']};n_reads={io['n_reads']};"
+            f"io_wait_ms={io['io_wait_s'] * 1e3:.1f};"
+            f"rounds_total={io['rounds_total']}")
+
+
+def run():
+    import tempfile
+
+    import numpy as np
+    import jax.numpy as jnp
+
+    from benchmarks import common as C
+    from repro.index.segment import BaseSegment
+    from repro.search.engine import HybridEngine
+    from repro.search.metrics import recall_at_k
+    from repro.storage import DiskEngine, write_segment
+
+    ds, gt, g = C.dataset(), C.ground_truth(), C.vamana_graph()
+    codes, lut_fn, _ = C.quantizer("pq")
+    queries = jnp.asarray(ds.queries)
+    rows = []
+
+    with tempfile.TemporaryDirectory() as d:
+        seg = BaseSegment(graph=g, codes=jnp.asarray(codes), vectors=None,
+                          layout="u8", generation=0, dim_hint=C.DIM)
+        write_segment(d, seg)
+
+        # ---- calibrate: measure per-round COMPUTE with free reads, then
+        # set the modeled storage latency just above it — the io ≳ compute
+        # regime where overlap approaches 2× and the 1.5 bar has honest
+        # headroom. Both arms are measured and the LARGER per-round
+        # compute wins: the pipelined arm pays the stale frontier
+        # selection inline, and a latency calibrated under ITS compute
+        # would silently land the comparison back in compute-bound
+        # territory where overlap can't show
+        with DiskEngine.open(d, lut_fn=lut_fn,
+                             cache_records=CACHE_RECORDS) as eng:
+            res, qps, io = _timed(eng, queries, overlap=False)
+            real_serial = (recall_at_k(res.ids, gt, K), qps, io)
+            res, qps, io2 = _timed(eng, queries, overlap=True)
+            real_prefetch = (recall_at_k(res.ids, gt, K), qps, io2)
+            compute_ms = max(
+                (x["wall_s"] - x["io_wait_s"]) * 1e3 / max(
+                    x["rounds_total"], 1) for x in (io, io2))
+        slow_ms = float(np.clip(SLOW_MULT * compute_ms,
+                                SLOW_MS_MIN, SLOW_MS_MAX))
+
+        with DiskEngine.open(d, lut_fn=lut_fn, cache_records=CACHE_RECORDS,
+                             slow_read_ms=slow_ms) as eng:
+            res_s, qps_s, io_s = _timed(eng, queries, overlap=False)
+            rec_s = recall_at_k(res_s.ids, gt, K)
+            rows.append((f"disk/serial/h{H}", 1e6 / max(qps_s, 1e-9),
+                         f"recall={rec_s:.3f};qps={qps_s:.1f};"
+                         f"slow_read_ms={slow_ms:.2f};{_fmt_io(io_s)}"))
+
+            res_p, qps_p, io_p = _timed(eng, queries, overlap=True)
+            rec_p = recall_at_k(res_p.ids, gt, K)
+            rows.append((f"disk/prefetch/h{H}", 1e6 / max(qps_p, 1e-9),
+                         f"recall={rec_p:.3f};qps={qps_p:.1f};"
+                         f"slow_read_ms={slow_ms:.2f};{_fmt_io(io_p)}"))
+
+            # recall parity is a correctness invariant of the stale-frontier
+            # pipeline, not a perf number — enforce it here
+            if rec_p < rec_s - 0.01:
+                raise SystemExit(
+                    f"prefetch recall {rec_p:.4f} fell more than a point "
+                    f"below serial {rec_s:.4f} — stale-frontier selection "
+                    f"is diverging")
+            speedup = qps_p / max(qps_s, 1e-9)
+            rows.append(("disk/overlap_summary", 0.0,
+                         f"speedup={speedup:.2f};bar=1.5;"
+                         f"recall_serial={rec_s:.4f};"
+                         f"recall_prefetch={rec_p:.4f};"
+                         f"recall_delta={rec_p - rec_s:+.4f};"
+                         f"slow_read_ms={slow_ms:.2f};"
+                         f"compute_ms_per_round={compute_ms:.2f}"))
+
+            # ---- model vs measured (HybridEngine.io_time adapter) -------
+            hyb = HybridEngine(g, codes, lut_fn,
+                               vectors=jnp.asarray(ds.base),
+                               io_latency_s=slow_ms / 1e3)
+            model_per_q = float(hyb.io_time(res_s).mean())
+            measured_per_q = float(hyb.io_time(
+                res_s, measured_io_s=io_s["io_wait_s"]).mean())
+            # apples-to-apples: the model charges one read latency per
+            # ROUND-PER-QUERY; the measured batch stall amortizes each
+            # round's batched read across all queries — compare per round
+            model_per_round = slow_ms / 1e3
+            measured_per_round = io_s["io_wait_s"] / max(
+                io_s["rounds_total"], 1)
+            rows.append(("disk/model_vs_measured", 0.0,
+                         f"model_io_s_per_q={model_per_q:.4f};"
+                         f"measured_io_s_per_q={measured_per_q:.6f};"
+                         f"model_s_per_round={model_per_round:.4f};"
+                         f"measured_s_per_round={measured_per_round:.4f};"
+                         f"per_round_ratio="
+                         f"{measured_per_round / model_per_round:.2f};"
+                         f"batch_amortization="
+                         f"{model_per_q / max(measured_per_q, 1e-12):.0f}x"))
+
+        # ---- raw page-cache reads: informational, no bar ----------------
+        rows.append((f"disk/real_read/h{H}",
+                     1e6 / max(real_prefetch[1], 1e-9),
+                     f"recall_serial={real_serial[0]:.3f};"
+                     f"recall_prefetch={real_prefetch[0]:.3f};"
+                     f"qps_serial={real_serial[1]:.1f};"
+                     f"qps_prefetch={real_prefetch[1]:.1f};"
+                     f"speedup_real="
+                     f"{real_prefetch[1] / max(real_serial[1], 1e-9):.2f};"
+                     f"bytes_read={real_serial[2]['bytes_read']}"))
+    return rows
+
+
+def main():
+    print("name,us_per_call,derived")
+    for row in run():
+        print(f"{row[0]},{row[1]:.2f},{row[2]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -273,6 +273,49 @@ def run():
                      f"restored_gen={eng4.generation};"
                      f"live={eng4.n_live};crash=post_snapshot"))
 
+    # ---- all-in-storage fallback drill (DESIGN.md §14) ------------------
+    # the storage tier's answer to snapshot_fallback: gen 1's segment
+    # header is corrupted on disk, DiskEngine.open falls back to the
+    # newest INTACT generation and keeps serving — through flaky reads
+    # (io_fault_p=0.2, retried per worker chunk) on top
+    import dataclasses as _dc
+
+    from repro.storage import (DiskEngine, corrupt_header, segment_path,
+                               write_segment)
+
+    with tempfile.TemporaryDirectory() as d:
+        write_segment(d, seg, model=sm)                       # gen 0, intact
+        write_segment(d, _dc.replace(seg, generation=1), model=sm)
+        corrupt_header(segment_path(d, 1), seed=5)
+        falls = []
+        plan = ChaosPlan(seed=9, io_fault_p=0.2)
+        pol = RetryPolicy(max_attempts=6, base_delay_s=1e-4,
+                          max_delay_s=1e-3)
+        t0 = time.perf_counter()
+        with DiskEngine.open(d, cache_records=256, retry=pol,
+                             fault_hook=plan.io_fault(),
+                             on_fallback=lambda gen, e: falls.append(gen)
+                             ) as deng:
+            res = deng.search(jnp.asarray(xs[:32]), k=5, h=16)
+            wall = time.perf_counter() - t0
+            if deng.generation != 0:
+                raise SystemExit("disk fallback served the corrupted "
+                                 "generation")
+            if falls != [1]:
+                raise SystemExit(f"disk fallback skipped {falls}, "
+                                 f"expected [1]")
+            ids = np.asarray(res.ids)
+            if ids.max() >= seg.n or not np.isfinite(
+                    np.asarray(res.dists)).all():
+                raise SystemExit("disk fallback returned invalid answers")
+            self_top1 = float((ids[:, 0] == np.arange(32)).mean())
+            io = deng.last_io
+        rows.append(("resilience/disk_fallback", wall * 1e6,
+                     f"corrupted_gen=1;landed_gen=0;fallbacks={len(falls)};"
+                     f"self_top1={self_top1:.2f};io_fault_p=0.2;"
+                     f"retries={io['n_retries']};"
+                     f"cache_hit_rate={io['cache_hit_rate']:.2f}"))
+
     # ---- the seeded 4-shard chaos acceptance drill ----------------------
     sub_rows, summary = _chaos_subprocess_rows()
     rows.extend(sub_rows)

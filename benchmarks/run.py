@@ -25,7 +25,7 @@ import traceback
 
 
 def sections():
-    from benchmarks import kernel_adc, paper_tables as pt
+    from benchmarks import disk_serving, kernel_adc, paper_tables as pt
     from benchmarks import resilience, sharded_serving, streaming
 
     return {
@@ -49,6 +49,10 @@ def sections():
         # budgets, the degradation ladder, snapshot corruption/crash
         # drills, and the seeded 4-shard chaos acceptance row
         "resilience": resilience.run,
+        # all-in-storage serving tier (DESIGN.md §14): double-buffered
+        # frontier prefetch vs serial read-then-compute at equal recall,
+        # cache hit-rates, and the model-vs-measured io_time cross-check
+        "disk": disk_serving.run,
     }
 
 

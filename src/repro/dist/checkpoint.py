@@ -34,7 +34,7 @@ import json
 import os
 import shutil
 import zlib
-from typing import Any, Callable, Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import numpy as np
 import jax
@@ -47,6 +47,19 @@ _STEP_PREFIX = "step_"
 
 class ChecksumError(ValueError):
     """An array's bytes don't match the CRC32 its manifest recorded."""
+
+
+class Dropped(NamedTuple):
+    """Placeholder for an array skipped via ``restore(drop=...)``.
+
+    Carries the manifest's shape/dtype so callers can size things (e.g.
+    ``index.segment.load_segment(with_vectors=False)`` still knows D)
+    without the bytes ever being read — npz members load lazily per key,
+    so a dropped leaf costs zero I/O and zero DRAM.
+    """
+
+    shape: tuple
+    dtype: str
 
 
 # Chaos seam (DESIGN.md §13): drills install a hook that may raise
@@ -102,9 +115,12 @@ def _encode(obj, arrays: list) -> Any:
     raise TypeError(f"checkpoint: cannot serialize leaf of type {type(obj)}")
 
 
-def _decode(node, arrays) -> Any:
+def _decode(node, arrays, path: str = "", drop=()) -> Any:
     kind = node["kind"]
     if kind == "array":
+        if path in drop:
+            return Dropped(shape=tuple(node["shape"]),
+                           dtype=str(node["dtype"]))
         buf = arrays[f"a{node['i']}"]
         raw = buf.tobytes()
         want = node.get("crc32")   # absent in pre-§13 checkpoints
@@ -119,11 +135,14 @@ def _decode(node, arrays) -> Any:
         a = np.frombuffer(raw, _resolve_dtype(node["dtype"]))
         return jnp.asarray(a.reshape(node["shape"]))
     if kind == "namedtuple":
-        return {f: _decode(v, arrays) for f, v in node["fields"].items()}
+        return {f: _decode(v, arrays, f"{path}/{f}", drop)
+                for f, v in node["fields"].items()}
     if kind == "dict":
-        return {k: _decode(v, arrays) for k, v in node["items"].items()}
+        return {k: _decode(v, arrays, f"{path}/{k}", drop)
+                for k, v in node["items"].items()}
     if kind in ("list", "tuple"):
-        seq = [_decode(v, arrays) for v in node["items"]]
+        seq = [_decode(v, arrays, f"{path}/{i}", drop)
+               for i, v in enumerate(node["items"])]
         return seq if kind == "list" else tuple(seq)
     return node["v"]
 
@@ -205,7 +224,8 @@ def latest_step(directory: str) -> Optional[int]:
 
 def restore(directory: str, step: Optional[int] = None,
             like: Optional[dict] = None,
-            retry: Optional[_retry.RetryPolicy] = None) -> dict:
+            retry: Optional[_retry.RetryPolicy] = None,
+            drop=()) -> dict:
     """Load a checkpoint: ``{"step": s, "<name>": tree, ...}``.
 
     ``step=None`` loads the latest; no checkpoints at all raises a clear
@@ -224,6 +244,12 @@ def restore(directory: str, step: Optional[int] = None,
     read failures — ``TransientIOError`` (chaos-injected) and ``OSError``
     races on live directories — with exponential backoff, seeded by the
     step number so drills replay.
+
+    ``drop`` names array leaves to SKIP materializing, as slash paths
+    rooted at the tree name (``drop={"index/vectors"}``). A dropped leaf
+    comes back as a :class:`Dropped` (shape, dtype) sentinel and its
+    bytes are never read from the npz — the restore path for serving
+    tiers that don't want N×D float vectors in DRAM.
     """
     steps = all_steps(directory)
     if step is None:
@@ -246,7 +272,7 @@ def restore(directory: str, step: Optional[int] = None,
             with open(os.path.join(sdir, f"{name}.json")) as f:
                 structure = json.load(f)
             with np.load(os.path.join(sdir, f"{name}.npz")) as arrays:
-                decoded = _decode(structure, arrays)
+                decoded = _decode(structure, arrays, name, frozenset(drop))
             if like is not None and name in like:
                 decoded = _restore_like(like[name], decoded)
             out[name] = decoded

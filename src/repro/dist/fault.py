@@ -201,6 +201,10 @@ class ChaosPlan:
     ``straggler_ms=50`` straggler latency · ``latency_ms=2`` healthy-shard
     latency · ``io=0.05`` transient-read failure probability ·
     ``corrupt`` flip a byte in the latest snapshot ·
+    ``corrupt_record`` flip a byte in a storage-segment record (silent —
+    the header stays intact; only a data audit or recall drill sees it) ·
+    ``slow_read=5`` per-read-batch storage latency in ms (a REAL sleep in
+    the segment reader's workers — overlappable wall-clock) ·
     ``crash=consolidate|refresh`` injected crash phase · ``seed=7``.
 
     Everything downstream (jitter, fault draws, corrupted byte choice) is a
@@ -215,6 +219,8 @@ class ChaosPlan:
     io_fault_p: float = 0.0
     corrupt_latest_snapshot: bool = False
     crash_phase: Optional[str] = None   # "consolidate" | "refresh"
+    corrupt_record: bool = False        # storage tier: silent record flip
+    slow_read_ms: float = 0.0           # storage tier: per-batch latency
 
     @classmethod
     def parse(cls, spec: str) -> "ChaosPlan":
@@ -236,6 +242,10 @@ class ChaosPlan:
                 kw["io_fault_p"] = float(val)
             elif key == "corrupt":
                 kw["corrupt_latest_snapshot"] = True
+            elif key == "corrupt_record":
+                kw["corrupt_record"] = True
+            elif key == "slow_read":
+                kw["slow_read_ms"] = float(val)
             elif key == "crash":
                 if val not in ("consolidate", "refresh"):
                     raise ValueError(f"--chaos: unknown crash phase {val!r}")

@@ -110,15 +110,20 @@ class BaseSegment:
                   match ``layout``.
       vectors:    (n, D) f32 full vectors ("on SSD" in the DiskANN layout —
                   resident here; consolidation and exact rerank need them).
+                  May be None for a code-only serving restore
+                  (``load_segment(with_vectors=False)`` / the storage
+                  tier); ``dim_hint`` then supplies D.
       layout:     "u8" | "fs4" (decides the LUT type the engine builds).
       generation: consolidation counter; doubles as the checkpoint step.
+      dim_hint:   original dimensionality when ``vectors`` is None.
     """
 
     graph: Graph
     codes: jax.Array
-    vectors: jax.Array
+    vectors: Optional[jax.Array]
     layout: str = "u8"
     generation: int = 0
+    dim_hint: Optional[int] = None
 
     def __post_init__(self):
         if self.layout not in LAYOUTS:
@@ -127,6 +132,8 @@ class BaseSegment:
         if int(self.codes.shape[0]) != self.n:
             raise ValueError(f"codes rows {self.codes.shape[0]} != "
                              f"graph rows {self.n}")
+        if self.vectors is None and self.dim_hint is None:
+            raise ValueError("a vector-free BaseSegment needs dim_hint")
 
     @property
     def n(self) -> int:
@@ -134,6 +141,8 @@ class BaseSegment:
 
     @property
     def dim(self) -> int:
+        if self.vectors is None:
+            return int(self.dim_hint)
         return int(self.vectors.shape[1])
 
     @property
@@ -156,8 +165,9 @@ class BaseSegment:
                    generation=generation)
 
     def memory_bytes(self) -> int:
+        vec = 0 if self.vectors is None else self.vectors.size * 4
         return (self.codes.size * self.codes.dtype.itemsize
-                + self.graph.neighbors.size * 4 + self.vectors.size * 4)
+                + self.graph.neighbors.size * 4 + vec)
 
 
 def save_segment(directory: str, seg: BaseSegment,
@@ -174,12 +184,16 @@ def save_segment(directory: str, seg: BaseSegment,
     caller-side model is guaranteed to match. ``model=None`` writes the
     legacy codes-only format (restore then needs an explicit model).
     """
+    if seg.vectors is None:
+        raise ValueError("cannot snapshot a vector-free BaseSegment — "
+                         "consolidation and rerank need the vectors")
     index = {"neighbors": np.asarray(seg.graph.neighbors),
              "medoid": np.asarray(seg.graph.medoid),
              "codes": np.asarray(seg.codes),
              "vectors": np.asarray(seg.vectors),
              "layout": seg.layout,
-             "generation": int(seg.generation)}
+             "generation": int(seg.generation),
+             "dim": int(seg.dim)}
     if model is not None:
         index["quantizer"] = {
             "r": np.asarray(model.r, np.float32),
@@ -189,15 +203,22 @@ def save_segment(directory: str, seg: BaseSegment,
 
 
 def _load_one(directory: str, generation: Optional[int],
-              with_model: bool, retry):
-    state = ckpt.restore(directory, step=generation, retry=retry)
+              with_model: bool, retry, with_vectors: bool = True):
+    drop = () if with_vectors else ("index/vectors",)
+    state = ckpt.restore(directory, step=generation, retry=retry, drop=drop)
     t = state["index"]
     graph = Graph(neighbors=jnp.asarray(t["neighbors"], jnp.int32),
                   medoid=jnp.asarray(t["medoid"], jnp.int32))
+    if with_vectors:
+        vectors, dim_hint = jnp.asarray(t["vectors"], jnp.float32), None
+    else:
+        # vectors came back as a ckpt.Dropped sentinel — zero bytes read;
+        # its manifest shape covers snapshots predating the "dim" key
+        vectors = None
+        dim_hint = int(t.get("dim") or t["vectors"].shape[1])
     seg = BaseSegment(graph=graph, codes=jnp.asarray(t["codes"]),
-                      vectors=jnp.asarray(t["vectors"], jnp.float32),
-                      layout=str(t["layout"]),
-                      generation=int(t["generation"]))
+                      vectors=vectors, layout=str(t["layout"]),
+                      generation=int(t["generation"]), dim_hint=dim_hint)
     if not with_model:
         return seg
     q = t.get("quantizer")
@@ -209,8 +230,8 @@ def _load_one(directory: str, generation: Optional[int],
 
 
 def load_segment(directory: str, generation: Optional[int] = None, *,
-                 with_model: bool = False, retry=None,
-                 on_fallback=None):
+                 with_model: bool = False, with_vectors: bool = True,
+                 retry=None, on_fallback=None):
     """Restore the newest INTACT (or a specific) consolidated generation.
 
     Every snapshot read is CRC32-verified (dist/checkpoint.py, DESIGN.md
@@ -226,16 +247,22 @@ def load_segment(directory: str, generation: Optional[int] = None, *,
     per generation before giving up on it. ``with_model=True`` returns
     ``(segment, model_or_None)`` — the model is ``None`` for pre-refresh
     (codebook-less) snapshots, which still load; the caller decides whether
-    an explicit model can stand in."""
+    an explicit model can stand in. ``with_vectors=False`` skips
+    materializing the (n, D) float vectors entirely (zero bytes read —
+    ``dist.checkpoint.restore(drop=...)``): the segment comes back with
+    ``vectors=None`` and a ``dim_hint``, which is all a code-serving tier
+    (storage/engine.py) or a segment-format export needs."""
     if generation is not None:
-        return _load_one(directory, generation, with_model, retry)
+        return _load_one(directory, generation, with_model, retry,
+                         with_vectors)
     steps = ckpt.all_steps(directory)
     if not steps:
         raise FileNotFoundError(f"no checkpoints under {directory!r}")
     failures = []
     for gen in reversed(steps):
         try:
-            return _load_one(directory, gen, with_model, retry)
+            return _load_one(directory, gen, with_model, retry,
+                             with_vectors)
         except (ckpt.ChecksumError, OSError, KeyError, ValueError,
                 zipfile.BadZipFile) as e:
             failures.append((gen, e))

@@ -2,9 +2,9 @@
 
     PYTHONPATH=src python -m repro.launch.serve --ckpt-dir runs/rpq \
         --dataset sift-small \
-        [--scenario hybrid|memory|sharded|sharded-graph|streaming] \
+        [--scenario hybrid|memory|sharded|sharded-graph|streaming|disk] \
         [--codes u8|fs4] [--h 32] [--entries 8] [--prune-eps 0.1] \
-        [--port-stdin]
+        [--cache-mb 4] [--io-threads 4] [--port-stdin]
 
 ``--entries S`` / ``--prune-eps ε`` switch on adaptive routing (DESIGN.md
 §11) in every scenario: S > 1 seeds each beam from the PQ-hash coarse
@@ -55,6 +55,18 @@ Scenarios (search/engine.py, DESIGN.md §5–§6):
                       generation re-encodes against the refreshed
                       codebooks and its snapshot carries them, so a
                       restart restores self-contained.
+* ``disk``          — ALL-IN-STORAGE serving (DESIGN.md §14,
+                      repro/storage/): the Vamana adjacency + packed codes
+                      are written to a per-vertex record segment file and
+                      served by DiskEngine — every beam round fetches its
+                      candidate records from disk through an async reader
+                      with double-buffered frontier prefetch; DRAM holds
+                      only the LUTs, the entry points, and an LRU
+                      hot-vertex cache (``--cache-mb``). ``--chaos
+                      slow_read=5`` models device latency on the real read
+                      path; ``--chaos io=0.05`` injects transient read
+                      faults (retried); ``--chaos corrupt_record`` flips a
+                      record byte silently.
 """
 
 from __future__ import annotations
@@ -273,7 +285,7 @@ def main():
     ap.add_argument("--dataset", default="sift-small")
     ap.add_argument("--scenario",
                     choices=("hybrid", "memory", "sharded", "sharded-graph",
-                             "streaming"),
+                             "streaming", "disk"),
                     default="hybrid")
     ap.add_argument("--codes", choices=("u8", "fs4"), default="u8",
                     help="serving layout: u8 = 1 byte/sub-code + f32 LUTs; "
@@ -334,6 +346,14 @@ def main():
                     "inject transient I/O faults, corrupt the newest "
                     "snapshot, crash mid-consolidation — serving must "
                     "degrade, never throw")
+    ap.add_argument("--cache-mb", type=float, default=4.0,
+                    help="disk scenario: DRAM budget for the hot-vertex "
+                    "cache (LRU over per-vertex records, BFS-seeded from "
+                    "the medoid)")
+    ap.add_argument("--io-threads", type=int, default=4,
+                    help="disk scenario: reader thread-pool width — a "
+                    "round's record batch is split across this many "
+                    "concurrent pread workers")
     ap.add_argument("--port-stdin", action="store_true",
                     help="read whitespace-separated query vectors on stdin")
     args = ap.parse_args()
@@ -398,6 +418,42 @@ def main():
         engine = ShardedGraphEngine(pg, codes, lut_fn, vectors=ds.base)
         print(f"[serve] graph-routed over {engine.n_shards} device "
               f"shard(s), {pg.n_local} rows/shard, R={pg.degree}")
+    elif args.scenario == "disk":  # all-in-storage tier (DESIGN.md §14)
+        from repro.index.segment import BaseSegment
+        from repro.storage import DiskEngine, write_segment
+        from repro.storage import format as segfmt
+
+        graph = build_or_load_graph(jax.random.PRNGKey(0), ds.base,
+                                    f"{args.ckpt_dir}/graph_base.npz",
+                                    args.graph_r, args.graph_l)
+        storage_dir = f"{args.ckpt_dir}/storage"
+        seg = BaseSegment(graph=graph, codes=jnp.asarray(codes),
+                          vectors=None, layout=args.codes,
+                          generation=0, dim_hint=ds.dim)
+        seg_path = write_segment(storage_dir, seg, model=model)
+        fault_hook, slow_ms = None, 0.0
+        if plan is not None:
+            slow_ms = plan.slow_read_ms
+            if plan.io_fault_p > 0:
+                fault_hook = plan.io_fault()
+                retry = retry or RetryPolicy()
+                print(f"[serve] chaos: transient read fault p="
+                      f"{plan.io_fault_p} injected on segment reads")
+            if plan.corrupt_record:
+                vid = segfmt.corrupt_record(seg_path, seed=plan.seed)
+                print(f"[serve] chaos: silently corrupted record {vid} "
+                      f"in {seg_path}")
+        engine = DiskEngine.open(
+            storage_dir, lut_fn=lut_fn, cache_mb=args.cache_mb,
+            io_threads=args.io_threads, retry=retry,
+            fault_hook=fault_hook, slow_read_ms=slow_ms,
+            on_fallback=lambda g, e: print(
+                f"[serve] disk: generation {g} failed header verification "
+                f"({e}) — falling back"))
+        print(f"[serve] disk: gen {engine.generation} segment "
+              f"{os.path.getsize(engine.path)/1e6:.1f}MB on storage, "
+              f"cache {len(engine.cache)}/{engine.cache.capacity} records "
+              f"({args.cache_mb}MB budget), {args.io_threads} io threads")
     else:
         graph = build_or_load_graph(jax.random.PRNGKey(0), ds.base,
                                     f"{args.ckpt_dir}/graph_base.npz",
@@ -465,6 +521,12 @@ def main():
           f"{recall_at_k(res.ids, gt, args.k):.4f} qps={qps:.1f} "
           f"hops={float(res.hops.mean()):.1f} {rounds}{trunc}{degr}"
           f"resident={engine.memory_bytes()/1e6:.1f}MB")
+    if args.scenario == "disk":
+        io = engine.last_io
+        print(f"[serve] disk io: cache_hit_rate={io['cache_hit_rate']:.3f} "
+              f"bytes_read={io['bytes_read']} n_reads={io['n_reads']} "
+              f"io_wait={io['io_wait_s']*1e3:.1f}ms "
+              f"retries={io['n_retries']}")
 
 
 if __name__ == "__main__":

@@ -272,7 +272,7 @@ class HybridEngine:
 
     def io_time(self, res: SearchResult, *, expand: int = 1,
                 entries: int = 1, io_fault_p: float = 0.0,
-                retry=None) -> jax.Array:
+                retry=None, measured_io_s=None) -> jax.Array:
         """Modeled SSD time per query: one 4 KiB block read per expansion,
         but with frontier batching (``expand=E``) the ≤E reads of a round
         are issued CONCURRENTLY — DiskANN's beam-width IO batching — so the
@@ -291,7 +291,16 @@ class HybridEngine:
         under ``retry`` (a ``dist.retry.RetryPolicy``) — the per-read cost
         becomes the closed-form expected time over attempts + nominal
         backoff sleeps (``dist.retry.expected_retry_time_s``), so the
-        resilience bench's retry-overhead rows are deterministic."""
+        resilience bench's retry-overhead rows are deterministic.
+
+        ``measured_io_s`` swaps the model for a MEASUREMENT: pass a real
+        storage tier's batch-total I/O stall (``DiskEngine.last_io
+        ["io_wait_s"]``) and the per-query charge becomes that total
+        amortized over the batch — the model stays the no-storage
+        fallback, and benchmarks/disk_serving.py cross-checks the two."""
+        if measured_io_s is not None:
+            q = int(res.hops.shape[0])
+            return jnp.full((q,), jnp.float32(measured_io_s / max(1, q)))
         if res.rounds is not None:
             rounds = res.rounds.astype(jnp.float32)
         else:

@@ -1,0 +1,446 @@
+"""DiskEngine: graph-routed ANN serving with graph + codes ALL in storage.
+
+The sixth serving engine (DESIGN.md §14), speaking the same ``search()``
+protocol as the five resident ones. DRAM holds only the per-query LUTs,
+the entry points, and the bounded hot-vertex cache; every beam round
+fetches its candidate records (adjacency + codes in one slab,
+``storage/format.py``) from the segment file through the async reader —
+the AiSAQ layout, where the index's DRAM footprint is O(cache), not O(N).
+
+Because per-round host I/O cannot live inside a jitted XLA while-loop, the
+beam here is a host-side loop with vectorized numpy scoring (bit-faithful
+to the kernels' ADC semantics: f32 LUT gather-sum for u8, exact int32
+accumulation + affine dequant for fs4). The loop has two modes:
+
+* **serial** (``overlap=False``) — each round fetches, then scores:
+  wall ≈ rounds × (io + compute). The honest baseline.
+* **pipelined** (``overlap=True``, default) — double-buffered: each
+  iteration first issues the NEXT round's reads — the frontier selected
+  from the beam as it stands BEFORE this round's scores merge (one round
+  stale) — then waits on this round's in-flight records and scores them.
+  Round N+1's I/O thus overlaps round N's ADC compute:
+  wall ≈ rounds × max(io, compute). Staleness can reorder expansions
+  (recall stays within a point of serial — asserted in
+  benchmarks/disk_serving.py), and when the stale guess yields nothing
+  the loop falls back to a fresh post-merge selection, so it terminates
+  exactly when serial does: no unexpanded beam entry left.
+
+Tombstones, per-call budgets (``max_rounds`` / ``max_n_dist`` with honest
+``truncated`` flags), multi-entry seeding (``entries=S`` starts the beam
+on the BFS-from-medoid cache seeds — the graph's top layer, already
+DRAM-resident), and partial-prefix hop pruning (``prune_eps`` /
+``m_prefix``) all ride along, so the degradation ladder
+(search/degrade.py) drives this engine unchanged.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.index.segment import Tombstones
+from repro.pq.pack import QuantizedLUT
+from repro.search.beam import SearchResult
+from repro.storage import format as segfmt
+from repro.storage.cache import HotVertexCache
+from repro.storage.prefetch import FrontierPrefetcher
+from repro.storage.reader import AsyncSegmentReader
+
+_INF = np.float32(np.inf)
+
+
+def _host_luts(luts):
+    """Device LUTs → host tuple ``(tables, scale, bias, m, packed)``."""
+    if isinstance(luts, QuantizedLUT):
+        return (np.asarray(luts.lut), np.asarray(luts.scale, np.float32),
+                np.asarray(luts.bias, np.float32), int(luts.lut.shape[1]),
+                True)
+    t = np.asarray(luts, np.float32)
+    return t, None, None, int(t.shape[1]), False
+
+
+def _score(hl, qq: np.ndarray, codes: np.ndarray,
+           m_prefix: int = 0) -> np.ndarray:
+    """ADC distances for flattened (query, candidate) pairs.
+
+    Args:
+      hl:    the :func:`_host_luts` tuple.
+      qq:    (T,) query index per pair.
+      codes: (T, code_width) raw record code bytes.
+      m_prefix: score only the first P subspaces (hop-pruning lower
+        bound); 0 = all M.
+
+    u8 matches the f32 LUT gather-sum oracle; fs4 matches the fast-scan
+    contract exactly — int32 accumulation of uint8 LUT entries, one
+    affine dequant ``scale·acc + M·bias`` per output (kernels/ref.py).
+    An fs4 PREFIX still dequants with the FULL ``M·bias`` term (bias is
+    per-query, not per-subspace — the ``quantize_luts`` convention).
+    """
+    tables, scale, bias, m, packed = hl
+    if packed:
+        lo, hi = codes & 0x0F, codes >> 4
+        sub = np.empty((codes.shape[0], 2 * codes.shape[1]), np.uint8)
+        sub[:, 0::2], sub[:, 1::2] = lo, hi
+        sub = sub[:, :m]
+    else:
+        sub = codes
+    mp = m_prefix if m_prefix else m
+    gathered = tables[qq[:, None], np.arange(mp)[None, :],
+                      sub[:, :mp].astype(np.int64)]
+    if packed:
+        acc = gathered.astype(np.int64).sum(axis=1)
+        return (scale[qq] * acc.astype(np.float32)
+                + np.float32(m) * bias[qq]).astype(np.float32)
+    return gathered.astype(np.float32).sum(axis=1)
+
+
+def _merge_beam(beam_ids, beam_d, beam_exp, cand_q, cand_ids, cand_d):
+    """Fold scored candidates into the (sorted) beam, keeping width h."""
+    q, h = beam_ids.shape
+    counts = np.bincount(cand_q, minlength=q)
+    cmax = int(counts.max()) if counts.size else 0
+    if cmax == 0:
+        return beam_ids, beam_d, beam_exp
+    pad_ids = np.full((q, cmax), -1, np.int64)
+    pad_d = np.full((q, cmax), _INF, np.float32)
+    order = np.argsort(cand_q, kind="stable")
+    cq = cand_q[order]
+    col = np.arange(cq.size) - np.repeat(np.cumsum(counts) - counts, counts)
+    pad_ids[cq, col] = cand_ids[order]
+    pad_d[cq, col] = cand_d[order]
+    all_ids = np.concatenate([beam_ids, pad_ids], axis=1)
+    all_d = np.concatenate([beam_d, pad_d], axis=1)
+    all_exp = np.concatenate([beam_exp, np.zeros((q, cmax), bool)], axis=1)
+    keep = np.argsort(all_d, axis=1, kind="stable")[:, :h]
+    rows = np.arange(q)[:, None]
+    return (np.take_along_axis(all_ids, keep, 1),
+            np.take_along_axis(all_d, keep, 1),
+            np.take_along_axis(all_exp, keep, 1))
+
+
+class DiskEngine:
+    """All-in-storage serving over one generation's segment file.
+
+    Build via :meth:`open` (newest intact generation + quantizer sidecar)
+    or directly from a path/header when the caller manages those.
+
+    Attributes:
+      header:     the verified :class:`~repro.storage.format.SegmentHeader`.
+      lut_fn:     (Q, D) queries → LUTs in the segment's layout.
+      prefetcher: cache-fronted async record fetch.
+      tombstones: optional deleted-id bitset (:meth:`delete` creates one).
+      overlap:    default pipelining mode for :meth:`search`.
+      last_io:    per-search I/O accounting (wall/io_wait/bytes/cache/...).
+    """
+
+    def __init__(self, path: str, header: segfmt.SegmentHeader,
+                 lut_fn: Callable, *,
+                 cache_records: int = 2048, io_threads: int = 4,
+                 retry=None, fault_hook=None, slow_read_ms: float = 0.0,
+                 seed_cache: bool = True, overlap: bool = True,
+                 tombstones: Optional[Tombstones] = None):
+        self.path = path
+        self.header = header
+        self.lut_fn = lut_fn
+        self.overlap = bool(overlap)
+        self.tombstones = tombstones
+        self.reader = AsyncSegmentReader(
+            path, header, io_threads=io_threads, retry=retry,
+            fault_hook=fault_hook, slow_read_ms=slow_read_ms)
+        self.cache = HotVertexCache(cache_records)
+        self.prefetcher = FrontierPrefetcher(self.reader, self.cache)
+        self._seed_order = np.asarray([header.medoid], np.int64)
+        if seed_cache and cache_records > 0:
+            self._seed_order = self.cache.seed_bfs(
+                self.reader, header.medoid)
+        self.last_io: dict = {}
+
+    # -- lifecycle ---------------------------------------------------------
+
+    @classmethod
+    def open(cls, directory: str, generation: Optional[int] = None, *,
+             lut_fn: Optional[Callable] = None,
+             cache_mb: Optional[float] = None, cache_records: int = 2048,
+             io_threads: int = 4, retry=None, fault_hook=None,
+             slow_read_ms: float = 0.0, seed_cache: bool = True,
+             overlap: bool = True, on_fallback=None) -> "DiskEngine":
+        """Open the newest INTACT (or a given) generation under
+        ``directory`` — a corrupt header falls back generation-by-
+        generation exactly like ``index.segment.load_segment``
+        (``on_fallback(generation, error)`` observes each skip).
+
+        ``lut_fn=None`` rebuilds it from the ``gen_*.model.npz`` sidecar
+        that ``write_segment(..., model=)`` wrote (quantized LUTs for fs4
+        segments) — a fully self-contained, vector-free restore.
+        ``cache_mb`` sizes the hot-vertex cache by DRAM budget and
+        overrides ``cache_records``.
+        """
+        path, header = segfmt.open_segment(directory, generation,
+                                           on_fallback=on_fallback)
+        if lut_fn is None:
+            mpath = segfmt.model_path(directory, header.generation)
+            if not os.path.exists(mpath):
+                raise ValueError(
+                    f"no quantizer sidecar at {mpath} — pass lut_fn= or "
+                    f"write the segment with write_segment(..., model=)")
+            from repro.pq import base as pqbase
+            with np.load(mpath) as z:
+                model = pqbase.QuantizerModel(
+                    r=jnp.asarray(z["r"], jnp.float32),
+                    codebooks=jnp.asarray(z["codebooks"], jnp.float32))
+            quantize = header.layout == "fs4"
+
+            def lut_fn(q, _model=model, _quant=quantize):
+                return pqbase.build_lut(_model, q, quantize=_quant)
+        if cache_mb is not None:
+            cache_records = int(cache_mb * 1e6) // max(1,
+                                                       header.record_bytes)
+        return cls(path, header, lut_fn, cache_records=cache_records,
+                   io_threads=io_threads, retry=retry,
+                   fault_hook=fault_hook, slow_read_ms=slow_read_ms,
+                   seed_cache=seed_cache, overlap=overlap)
+
+    def close(self) -> None:
+        self.reader.close()
+
+    def __enter__(self) -> "DiskEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def generation(self) -> int:
+        return self.header.generation
+
+    @property
+    def n(self) -> int:
+        return self.header.n
+
+    def delete(self, ids) -> int:
+        """Tombstone ids (lazy bitset over the segment's rows)."""
+        if self.tombstones is None:
+            self.tombstones = Tombstones(self.header.n)
+        return self.tombstones.add(ids)
+
+    def memory_bytes(self) -> int:
+        # DRAM-resident serving state: the hot-vertex cache (+ tombstone
+        # words); adjacency, codes, and vectors all live in storage
+        resident = len(self.cache) * self.header.record_bytes
+        if self.tombstones is not None:
+            resident += self.tombstones._words.nbytes
+        return resident
+
+    # -- search ------------------------------------------------------------
+
+    def _entries(self, entries: int) -> np.ndarray:
+        """Entry vertices: the medoid, then the next S−1 BFS cache seeds
+        (the graph's top layer — already resident, zero extra I/O).
+        Tombstoned seeds are skipped over, not merely dropped: a deleted
+        medoid must not sever routing while any other seed survives, so
+        the first S ALIVE vertices of the BFS order serve as entries."""
+        order = self._seed_order
+        if order.size == 0:
+            order = np.asarray([self.header.medoid], np.int64)
+        if self.tombstones is not None:
+            alive = ~self.tombstones.contains(order)
+            if alive.any():
+                order = order[alive]
+        return np.unique(order[:max(1, int(entries))])
+
+    def search(self, queries, *, k: int = 10, h: int = 32,
+               max_steps: int = 512, expand: int = 1, entries: int = 1,
+               prune_eps: float = 0.0, m_prefix: int = 0,
+               max_rounds=None, max_n_dist=None,
+               overlap: Optional[bool] = None) -> SearchResult:
+        """Batched storage-backed beam search (engine protocol).
+
+        ``max_rounds``/``max_n_dist`` are per-call budgets: an exhausted
+        query freezes its frontier and reports ``truncated=True`` with
+        its best-so-far answer — the jitted beam's honesty contract.
+        ``overlap`` overrides the engine's default pipelining mode (the
+        serial baseline the overlap benchmark compares against).
+        """
+        t_start = time.perf_counter()
+        stats0 = self.prefetcher.stats()
+        queries = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
+        hl = _host_luts(self.lut_fn(queries))
+        nq, n = int(queries.shape[0]), self.header.n
+        mt = hl[3]
+        mp = 0
+        if prune_eps > 0.0 and mt >= 2:
+            mp = m_prefix if m_prefix > 0 else max(1, mt // 4)
+            mp = max(1, min(mp, mt - 1))
+        use_overlap = self.overlap if overlap is None else bool(overlap)
+        budget_rounds = max_steps if max_rounds is None else min(
+            int(max_rounds), int(max_steps))
+
+        beam_ids = np.full((nq, h), -1, np.int64)
+        beam_d = np.full((nq, h), _INF, np.float32)
+        beam_exp = np.zeros((nq, h), bool)
+        visited = np.zeros((nq, n), bool)
+        known: dict = {}            # vid -> (adj row, code row), per search
+        hops = np.zeros((nq,), np.int64)
+        n_dist = np.zeros((nq,), np.float64)
+        rounds = np.zeros((nq,), np.int64)
+        truncated = np.zeros((nq,), bool)
+        exhausted = np.zeros((nq,), bool)   # budget-frozen queries
+
+        def absorb(ids, adj, codes):
+            for j, vid in enumerate(ids):
+                known[int(vid)] = (adj[j], codes[j])
+
+        def score_and_merge(cand_q, cand_ids):
+            """Score scheduled (query, vid) pairs (prefix-gated when
+            pruning) and fold the survivors into the beam."""
+            nonlocal beam_ids, beam_d, beam_exp
+            if cand_q.size == 0:
+                return
+            if self.tombstones is not None:
+                dead = self.tombstones.contains(cand_ids)
+                if dead.any():      # dead rows are never scored or kept
+                    cand_q, cand_ids = cand_q[~dead], cand_ids[~dead]
+                    if cand_q.size == 0:
+                        return
+            codes = np.stack([known[int(v)][1] for v in cand_ids])
+            if mp:
+                part = _score(hl, cand_q, codes, m_prefix=mp)
+                est = part * (mt / mp)
+                thresh = beam_d[cand_q, h - 1]
+                keep = ~np.isfinite(thresh) | (
+                    est <= (1.0 + prune_eps) * thresh)
+                np.add.at(n_dist, cand_q, mp / mt)
+                cand_q, cand_ids = cand_q[keep], cand_ids[keep]
+                codes = codes[keep]
+                if cand_q.size == 0:
+                    return
+                np.add.at(n_dist, cand_q, 1.0 - mp / mt)
+            else:
+                np.add.at(n_dist, cand_q, 1.0)
+            d = _score(hl, cand_q, codes)
+            beam_ids, beam_d, beam_exp = _merge_beam(
+                beam_ids, beam_d, beam_exp, cand_q, cand_ids, d)
+
+        def select_frontier():
+            """Pick each query's best ≤``expand`` unexpanded beam entries
+            (budget-frozen queries excluded), mark them expanded, and
+            return ``((cand_q, cand_v), fetch_ids, active)`` — the
+            scheduled pairs, the ids whose records we still need, and
+            which queries expanded anything this round."""
+            mask = ~beam_exp & np.isfinite(beam_d) & ~exhausted[:, None]
+            if max_n_dist is not None:
+                over = n_dist >= max_n_dist
+                cut = over & ~exhausted & mask.any(axis=1)
+                truncated[cut] = True
+                exhausted[:] |= over
+                mask &= ~exhausted[:, None]
+            empty = (np.zeros((0,), np.int64), np.zeros((0,), np.int64))
+            if not mask.any():
+                return empty, empty[0], np.zeros((nq,), bool)
+            # beam rows are dist-sorted, so a stable sort of ~mask keeps
+            # the first `expand` True positions in best-first order
+            sel = np.argsort(~mask, axis=1, kind="stable")[:, :expand]
+            rows = np.arange(nq)[:, None]
+            valid = mask[rows, sel]
+            beam_exp[rows, sel] |= valid
+            active = valid.any(axis=1)
+            hops[:] += valid.sum(axis=1)
+            cand_q_list, cand_v_list = [], []
+            for qi in np.flatnonzero(active):
+                fr = beam_ids[qi, sel[qi][valid[qi]]]
+                nbr = np.concatenate([known[int(v)][0] for v in fr])
+                nbr = np.unique(nbr[(nbr >= 0) & (nbr < n)])
+                nbr = nbr[~visited[qi, nbr]]
+                visited[qi, nbr] = True
+                cand_q_list.append(np.full(nbr.size, qi, np.int64))
+                cand_v_list.append(nbr.astype(np.int64))
+            cand_q = (np.concatenate(cand_q_list) if cand_q_list
+                      else empty[0])
+            cand_v = (np.concatenate(cand_v_list) if cand_v_list
+                      else empty[1])
+            fetch = np.unique(cand_v)
+            if fetch.size:
+                fetch = np.asarray(
+                    [v for v in fetch if int(v) not in known], np.int64)
+            return (cand_q, cand_v), fetch, active
+
+        # seed the beam: entry records come through the prefetcher (cache
+        # hits for BFS-seeded vertices), scored like any candidate
+        entry = self._entries(entries)
+        absorb(*self.prefetcher.fetch(entry))
+        visited[:, entry] = True
+        score_and_merge(np.repeat(np.arange(nq), entry.size),
+                        np.tile(entry, nq))
+
+        pending = None      # (PendingFetch | None, cand_q, cand_v, active)
+        round_i = 0
+        while round_i < budget_rounds:
+            if pending is None:
+                (cand_q, cand_v), fetch, active = select_frontier()
+                if not active.any():
+                    break
+                pending = (self.prefetcher.prefetch(fetch)
+                           if fetch.size else None, cand_q, cand_v, active)
+            pf, cand_q, cand_v, active = pending
+            pending = None
+            if use_overlap and pf is not None and (
+                    pf.future is None or pf.future.done()):
+                # the reads already landed (fast storage / big compute):
+                # merge first and select FRESH — staleness is only worth
+                # paying when there is actual I/O latency left to hide
+                absorb(*self.prefetcher.collect(pf))
+                score_and_merge(cand_q, cand_v)
+                rounds[:] += active
+                round_i += 1
+                continue
+            if use_overlap:
+                # double-buffer: issue round N+1's reads (stale, pre-merge
+                # frontier) BEFORE waiting on / scoring round N
+                npairs, nfetch, nactive = select_frontier()
+                if nactive.any():
+                    next_pf = (self.prefetcher.prefetch(nfetch)
+                               if nfetch.size else None)
+                    pending = (next_pf, npairs[0], npairs[1], nactive)
+            if pf is not None:
+                absorb(*self.prefetcher.collect(pf))
+            score_and_merge(cand_q, cand_v)
+            rounds[:] += active
+            round_i += 1
+        else:
+            # round budget exhausted with frontier work still pending
+            left = ~beam_exp & np.isfinite(beam_d) & ~exhausted[:, None]
+            truncated[:] |= left.any(axis=1)
+        if pending is not None:     # drain an in-flight fetch cleanly
+            if pending[0] is not None:
+                absorb(*self.prefetcher.collect(pending[0]))
+            truncated[:] |= pending[3]
+
+        out_ids = beam_ids[:, :k].astype(np.int32)
+        out_d = beam_d[:, :k]
+        out_ids = np.where(np.isfinite(out_d), out_ids, -1)
+        wall = time.perf_counter() - t_start
+        s1 = self.prefetcher.stats()
+        hits = s1["cache_hits"] - stats0["cache_hits"]
+        miss = s1["cache_misses"] - stats0["cache_misses"]
+        self.last_io = {
+            "wall_s": wall,
+            "io_wait_s": s1["io_wait_s"] - stats0["io_wait_s"],
+            "bytes_read": s1["bytes_read"] - stats0["bytes_read"],
+            "n_reads": s1["n_reads"] - stats0["n_reads"],
+            "n_batches": s1["n_batches"] - stats0["n_batches"],
+            "n_retries": s1["n_retries"] - stats0["n_retries"],
+            "cache_hits": hits, "cache_misses": miss,
+            "cache_hit_rate": hits / (hits + miss) if hits + miss else 0.0,
+            "rounds_total": int(round_i), "overlap": use_overlap,
+        }
+        return SearchResult(
+            jnp.asarray(out_ids), jnp.asarray(out_d),
+            hops=jnp.asarray(hops, jnp.int32),
+            n_dist=jnp.asarray(np.rint(n_dist), jnp.int32),
+            rounds=jnp.asarray(rounds, jnp.int32),
+            truncated=jnp.asarray(truncated),
+            degraded=False)

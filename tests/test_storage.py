@@ -1,0 +1,386 @@
+"""All-in-storage serving tier (repro/storage/, DESIGN.md §14).
+
+Bottom-up over the tier's promises: the record format round-trips both
+code layouts bit-identically and every corruption mode (torn header, bad
+magic, truncated records, silent record flips) is either detected or
+deliberately invisible; ``open_segment``/``DiskEngine.open`` fall back
+generation-by-generation past corrupt headers; the reader's counters,
+chunk split, and retry path behave; prefetch ≡ synchronous fetch; the
+pinned+LRU cache survives the sequential-scan pathology; and DiskEngine
+speaks the engine protocol — recall within a point of StreamingEngine
+from the same snapshot, tombstones never returned, budgets truncate
+honestly, pipelined ≡ serial recall — with the vector-free restore path
+and the ``io_time(measured_io_s=)`` adapter closing the loop.
+"""
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.dist.fault import ChaosPlan
+from repro.dist.retry import RetryPolicy, TransientIOError
+from repro.index import BaseSegment, StreamingEngine
+from repro.index.segment import encode_codes, load_segment, save_segment
+from repro.pq import train_pq, train_pq_fs4
+from repro.search.metrics import recall_at_k
+from repro.storage import (AsyncSegmentReader, DiskEngine,
+                           FrontierPrefetcher, HotVertexCache,
+                           SegmentFormatError, all_generations,
+                           corrupt_header, corrupt_record, open_segment,
+                           read_header, record_bytes_for, segment_path,
+                           write_segment)
+
+
+@pytest.fixture(scope="module")
+def models(clustered_data):
+    x, _, _ = clustered_data
+    u8 = train_pq(jax.random.PRNGKey(3), x, 8, 32, iters=8)
+    fs4 = train_pq_fs4(jax.random.PRNGKey(3), x, 8, iters=8)
+    return {"u8": u8, "fs4": fs4}
+
+
+@pytest.fixture(scope="module")
+def segs(clustered_data, small_graph, models, tmp_path_factory):
+    """layout -> (directory with gen-0 on disk, BaseSegment, model)."""
+    x, _, _ = clustered_data
+    out = {}
+    for layout in ("u8", "fs4"):
+        model = models[layout]
+        seg = BaseSegment(graph=small_graph,
+                          codes=jnp.asarray(encode_codes(model, x, layout)),
+                          vectors=x, layout=layout)
+        d = str(tmp_path_factory.mktemp(f"seg_{layout}"))
+        write_segment(d, seg, model=model)
+        out[layout] = (d, seg, model)
+    return out
+
+
+def reader_for(d, **kw):
+    path, header = open_segment(d)
+    return AsyncSegmentReader(path, header, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Format: round trip + corruption detection + generation fallback
+# ---------------------------------------------------------------------------
+
+def test_record_bytes_alignment():
+    for r, w in [(16, 8), (16, 4), (24, 8), (7, 3), (1, 1)]:
+        rb = record_bytes_for(r, w)
+        assert rb % 8 == 0 and rb >= 4 * r + w and rb < 4 * r + w + 8
+
+
+@pytest.mark.parametrize("layout", ["u8", "fs4"])
+def test_segment_roundtrip_bit_identical(segs, layout):
+    """Every record read back equals exactly what the BaseSegment held —
+    adjacency AND code bytes, in both layouts (fs4 stays packed)."""
+    d, seg, _ = segs[layout]
+    path, header = open_segment(d)
+    assert (header.n, header.layout) == (seg.n, layout)
+    assert header.medoid == int(seg.graph.medoid)
+    assert header.dim == seg.dim
+    with AsyncSegmentReader(path, header) as rd:
+        adj, codes = rd.read_records(np.arange(header.n))
+    np.testing.assert_array_equal(
+        adj, np.asarray(seg.graph.neighbors, np.int32))
+    np.testing.assert_array_equal(codes, np.asarray(seg.codes, np.uint8))
+    header.verify_data(path)        # whole-region CRC audit passes
+
+
+def test_header_corruption_detected(segs, tmp_path):
+    d, seg, _ = segs["u8"]
+    import shutil
+    p = str(tmp_path / "gen_00000000.seg")
+    shutil.copy(segment_path(d, 0), p)
+    corrupt_header(p, seed=1)
+    with pytest.raises(SegmentFormatError, match="crc32|corrupt"):
+        read_header(p)
+    # truncated records: header promises more bytes than the file holds
+    shutil.copy(segment_path(d, 0), p)
+    os.truncate(p, read_header(p).file_bytes - 1)
+    with pytest.raises(SegmentFormatError, match="truncated"):
+        read_header(p)
+    # bad magic
+    with open(p, "r+b") as f:
+        f.write(b"NOTASEG!")
+    with pytest.raises(SegmentFormatError, match="magic"):
+        read_header(p)
+
+
+def test_corrupt_record_is_silent_until_audited(segs, tmp_path):
+    """A flipped record byte passes header verification (the hot path
+    trusts the device) but fails the offline ``verify_data`` audit."""
+    d, _, _ = segs["u8"]
+    import shutil
+    p = str(tmp_path / "gen_00000000.seg")
+    shutil.copy(segment_path(d, 0), p)
+    vid = corrupt_record(p, seed=2)
+    hdr = read_header(p)            # header still verifies
+    assert 0 <= vid < hdr.n
+    with pytest.raises(SegmentFormatError, match="data is corrupt"):
+        hdr.verify_data(p)
+
+
+def test_generation_fallback(segs, tmp_path):
+    """Newest generation corrupt -> open lands on the newest INTACT one;
+    an explicitly requested generation never falls back."""
+    d0, seg, model = segs["u8"]
+    d = str(tmp_path)
+    write_segment(d, seg, model=model)
+    write_segment(d, dataclasses.replace(seg, generation=1), model=model)
+    write_segment(d, dataclasses.replace(seg, generation=2), model=model)
+    corrupt_header(segment_path(d, 2), seed=4)
+    assert all_generations(d) == [0, 1, 2]
+    falls = []
+    path, header = open_segment(d, on_fallback=lambda g, e: falls.append(g))
+    assert header.generation == 1 and falls == [2]
+    assert path == segment_path(d, 1)
+    with pytest.raises(SegmentFormatError):
+        open_segment(d, generation=2)
+    # the engine-level open takes the same walk (sidecar present per gen)
+    falls = []
+    with DiskEngine.open(d, cache_records=64, seed_cache=False,
+                         on_fallback=lambda g, e: falls.append(g)) as eng:
+        assert eng.generation == 1 and falls == [2]
+    # every generation corrupt -> loud failure, not a silent empty index
+    corrupt_header(segment_path(d, 1), seed=4)
+    corrupt_header(segment_path(d, 0), seed=4)
+    with pytest.raises(RuntimeError, match="every generation"):
+        open_segment(d)
+
+
+# ---------------------------------------------------------------------------
+# Reader: counters, chunk split, retry
+# ---------------------------------------------------------------------------
+
+def test_reader_counters_and_chunk_split(segs):
+    d, _, _ = segs["u8"]
+    with reader_for(d, io_threads=4) as rd:
+        ids = np.arange(100)
+        adj, codes = rd.read_records(ids)
+        assert adj.shape == (100, rd.header.r)
+        st = rd.stats()
+        assert st["n_reads"] == 100
+        assert st["bytes_read"] == 100 * rd.header.record_bytes
+        assert st["n_batches"] == 1
+        # a batch claims half the workers so two batches can be in flight
+        assert rd._n_chunks(100) == 2
+        assert rd._n_chunks(1) == 1
+        # empty submit resolves immediately with empty arrays
+        a, c = rd.submit(np.zeros((0,), np.int64)).result()
+        assert a.shape == (0, rd.header.r) and c.shape[0] == 0
+        # out-of-range ids raise synchronously, in the caller's thread
+        with pytest.raises(ValueError, match="out of range"):
+            rd.submit([rd.header.n])
+        with pytest.raises(ValueError, match="out of range"):
+            rd.read_records([-1])
+
+
+def test_reader_retries_transient_faults(segs):
+    d, _, _ = segs["u8"]
+    calls = {"n": 0}
+
+    def hook(path):
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            raise TransientIOError("injected")
+
+    with reader_for(d, io_threads=2,
+                    retry=RetryPolicy(max_attempts=5, base_delay_s=1e-4,
+                                      max_delay_s=1e-3),
+                    fault_hook=hook) as rd:
+        adj, _ = rd.read_records(np.arange(8))
+        assert adj.shape[0] == 8
+        assert rd.stats()["n_retries"] == 2
+    # without a policy the same fault fails the read loudly
+    calls["n"] = 0
+    with reader_for(d, fault_hook=hook) as rd:
+        with pytest.raises(TransientIOError):
+            rd.read_records(np.arange(8))
+
+
+# ---------------------------------------------------------------------------
+# Cache: LRU + pinned BFS seeds + prefetch equivalence
+# ---------------------------------------------------------------------------
+
+def test_cache_lru_eviction():
+    cache = HotVertexCache(4)
+    a = np.zeros((1, 2), np.int32)
+    c = np.zeros((1, 3), np.uint8)
+    for vid in range(6):
+        cache.put_many([vid], a, c)
+    assert len(cache) == 4 and cache.evictions == 2
+    assert 0 not in cache and 1 not in cache and 5 in cache
+    # a hit refreshes recency: 2 survives the next insert, 3 does not
+    cache.get_many([2])
+    cache.put_many([6], a, c)
+    assert 2 in cache and 3 not in cache
+    found, missing = cache.get_many([2, 3])
+    assert set(found) == {2} and list(missing) == [3]
+    assert cache.stats()["hits"] == 2 and cache.stats()["misses"] == 1
+
+
+def test_cache_pinned_seeds_survive_scans(segs):
+    """The sequential-scan pathology: streaming every record through the
+    cache once must NOT evict the BFS-seeded medoid ball."""
+    d, _, _ = segs["u8"]
+    with reader_for(d) as rd:
+        cache = HotVertexCache(64)
+        order = cache.seed_bfs(rd, rd.header.medoid)
+        assert order.size == 32          # default budget: half the capacity
+        assert order[0] == rd.header.medoid
+        assert cache.stats()["pinned"] == 32
+        # full sequential scan through put_many
+        ids = np.arange(rd.header.n)
+        adj, codes = rd.read_records(ids)
+        cache.put_many(ids, adj, codes)
+        assert len(cache) == 64          # 32 pinned + 32 LRU, never more
+        found, missing = cache.get_many(order)
+        assert missing.size == 0         # every seed still resident
+        # seeded records are byte-identical to a direct read
+        sadj, scodes = rd.read_records(order)
+        for j, vid in enumerate(order):
+            np.testing.assert_array_equal(found[int(vid)][0], sadj[j])
+            np.testing.assert_array_equal(found[int(vid)][1], scodes[j])
+
+
+def test_prefetch_equals_fetch(segs):
+    """prefetch+collect ≡ read_records, in request order, cache-fronted
+    or not — the overlap path may never change WHAT is read."""
+    d, _, _ = segs["fs4"]
+    with reader_for(d) as rd:
+        pf = FrontierPrefetcher(rd, HotVertexCache(16))
+        ids = np.asarray([7, 3, 11, 200, 3, 7])
+        want = np.unique(ids)
+        got_ids, adj, codes = pf.collect(pf.prefetch(ids))
+        np.testing.assert_array_equal(got_ids, want)
+        radj, rcodes = rd.read_records(want)
+        np.testing.assert_array_equal(adj, radj)
+        np.testing.assert_array_equal(codes, rcodes)
+        # second fetch of the same ids: all hits, zero new reads
+        st0 = pf.stats()
+        got_ids2, adj2, _ = pf.fetch(ids)
+        st1 = pf.stats()
+        np.testing.assert_array_equal(adj2, adj)
+        assert st1["n_reads"] == st0["n_reads"]
+        assert st1["cache_hits"] - st0["cache_hits"] == want.size
+
+
+# ---------------------------------------------------------------------------
+# DiskEngine: protocol parity with the resident engines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("h", [8, 32])
+def test_disk_recall_matches_streaming(clustered_data, segs, h):
+    """Same snapshot, two tiers: the storage-backed beam lands within a
+    recall point of StreamingEngine at matched budgets."""
+    x, q, gt = clustered_data
+    d, seg, model = segs["u8"]
+    sref = StreamingEngine(seg, model, delta_capacity=64)
+    rec_mem = recall_at_k(sref.search(q, k=10, h=h).ids, gt, 10)
+    with DiskEngine.open(d, cache_records=512) as eng:
+        res = eng.search(q, k=10, h=h)
+        rec_disk = recall_at_k(res.ids, gt, 10)
+    assert rec_disk >= rec_mem - 0.01, (rec_disk, rec_mem)
+    io = eng.last_io
+    assert io["cache_hit_rate"] > 0.0       # BFS seeds serve the entry ball
+    assert io["bytes_read"] == io["n_reads"] * eng.header.record_bytes
+
+
+def test_disk_overlap_matches_serial(clustered_data, segs):
+    """Pipelined (one-round-stale frontier) vs serial: same recall within
+    a point, and both modes report their I/O accounting."""
+    x, q, gt = clustered_data
+    d, _, _ = segs["fs4"]
+    with DiskEngine.open(d, cache_records=256) as eng:
+        rec_s = recall_at_k(eng.search(q, k=10, h=32, overlap=False).ids,
+                            gt, 10)
+        assert eng.last_io["overlap"] is False
+        rec_p = recall_at_k(eng.search(q, k=10, h=32, overlap=True).ids,
+                            gt, 10)
+        assert eng.last_io["overlap"] is True
+        assert eng.last_io["rounds_total"] > 0
+    assert abs(rec_p - rec_s) <= 0.01, (rec_p, rec_s)
+
+
+def test_disk_tombstones_never_returned(clustered_data, segs):
+    x, q, gt = clustered_data
+    d, _, _ = segs["u8"]
+    dead = np.unique(np.asarray(gt)[:, 0])
+    with DiskEngine.open(d, cache_records=256) as eng:
+        assert eng.delete(dead) == dead.size
+        ids = np.asarray(eng.search(q, k=10, h=32).ids)
+    assert not np.isin(ids, dead).any()
+    assert (ids >= 0).any(axis=1).all()     # routing stayed alive
+
+
+def test_disk_budgets_truncate_honestly(clustered_data, segs):
+    x, q, _ = clustered_data
+    d, _, _ = segs["u8"]
+    with DiskEngine.open(d, cache_records=256) as eng:
+        free = eng.search(q[:16], k=10, h=32)
+        assert not np.asarray(free.truncated).any()
+        capped = eng.search(q[:16], k=10, h=32, max_rounds=2)
+        assert np.asarray(capped.rounds).max() <= 2
+        assert np.asarray(capped.truncated).all()
+        assert (np.asarray(capped.ids)[:, 0] >= 0).all()  # best-so-far
+        dcap = eng.search(q[:16], k=10, h=32, max_n_dist=64)
+        assert np.asarray(dcap.truncated).any()
+        # the pipelined loop selects round N+1 before round N's distances
+        # merge, so budget enforcement is one round stale: overshoot is
+        # bounded by the two in-flight rounds' candidates (≤ 2·R each)
+        assert np.asarray(dcap.n_dist).max() <= 64 + 2 * eng.header.r
+
+
+def test_vector_free_restore_roundtrip(segs, tmp_path):
+    """Snapshot -> ``load_segment(with_vectors=False)`` (zero vector
+    bytes, ``Dropped`` sentinel consumed into ``dim_hint``) -> segment
+    file -> DiskEngine: the full export path of the storage tier."""
+    d0, seg, model = segs["u8"]
+    ck = str(tmp_path / "ckpt")
+    save_segment(ck, seg, model=model)
+    lean = load_segment(ck, with_vectors=False)
+    assert lean.vectors is None and lean.dim_hint == seg.dim
+    assert lean.dim == seg.dim
+    np.testing.assert_array_equal(np.asarray(lean.codes),
+                                  np.asarray(seg.codes))
+    out = str(tmp_path / "segdir")
+    write_segment(out, lean, model=model)
+    with DiskEngine.open(out, cache_records=64) as eng:
+        assert eng.n == seg.n and eng.header.dim == seg.dim
+
+
+def test_io_time_measured_adapter(clustered_data, segs):
+    """``HybridEngine.io_time(measured_io_s=)``: a real tier's measured
+    batch stall replaces the closed-form model, amortized per query."""
+    from repro.search.engine import HybridEngine
+
+    x, q, _ = clustered_data
+    d, seg, model = segs["u8"]
+    with DiskEngine.open(d, cache_records=256, slow_read_ms=0.5) as eng:
+        res = eng.search(q[:8], k=10, h=16, overlap=False)
+        io_wait = eng.last_io["io_wait_s"]
+    assert io_wait > 0.0
+    from repro.pq import base as pqbase
+    hyb = HybridEngine(seg.graph, np.asarray(seg.codes),
+                       lambda qq: pqbase.build_lut(model, qq),
+                       vectors=x, io_latency_s=5e-4)
+    model_t = np.asarray(hyb.io_time(res))
+    meas_t = np.asarray(hyb.io_time(res, measured_io_s=io_wait))
+    assert model_t.shape == meas_t.shape == (8,)
+    assert (model_t > 0).all()
+    np.testing.assert_allclose(meas_t, io_wait / 8, rtol=1e-6)
+
+
+def test_chaos_plan_storage_tokens():
+    plan = ChaosPlan.parse("io=0.5,corrupt_record,slow_read=3,seed=2")
+    assert plan.io_fault_p == 0.5
+    assert plan.corrupt_record is True
+    assert plan.slow_read_ms == 3.0
+    assert plan.seed == 2
+    off = ChaosPlan.parse("slow_read=0")
+    assert off.slow_read_ms == 0.0 and off.corrupt_record is False

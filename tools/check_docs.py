@@ -9,6 +9,11 @@ ignores external schemes (http/https/mailto) and pure in-page anchors, and
 verifies that each remaining target exists relative to the file that links
 it (``#fragment`` suffixes are stripped; fragment validity is not checked).
 
+Also checks the inverse for the walkthroughs: every ``examples/*.py``
+must be referenced from the top-level README (by path), so a new example
+can't land undocumented — the CI docs job runs each one with
+``--dry-run``, and an unreferenced example is one nobody will find.
+
 Exit code 1 lists every broken link — the CI docs job runs this so README
 and DESIGN can't silently rot as files move.
 """
@@ -52,9 +57,20 @@ def check(root: str) -> list[str]:
     return errors
 
 
+def check_examples_referenced(root: str) -> list[str]:
+    readme = os.path.join(root, "README.md")
+    ex_dir = os.path.join(root, "examples")
+    if not (os.path.exists(readme) and os.path.isdir(ex_dir)):
+        return []
+    text = open(readme, encoding="utf-8").read()
+    return [f"README.md: examples/{f} exists but is never referenced"
+            for f in sorted(os.listdir(ex_dir))
+            if f.endswith(".py") and f"examples/{f}" not in text]
+
+
 def main() -> int:
     root = sys.argv[1] if len(sys.argv) > 1 else "."
-    errors = check(root)
+    errors = check(root) + check_examples_referenced(root)
     for e in errors:
         print(e, file=sys.stderr)
     n = len(list(md_files(root)))
